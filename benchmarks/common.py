@@ -1,0 +1,77 @@
+"""Shared benchmark machinery: solver configs and a generic bilevel runner."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BilevelTrainer, HypergradConfig
+from repro.optim import adam, chain, clip_by_global_norm, momentum, sgd
+
+
+def solver_cfg(name: str, k: int = 10, rho: float = 1e-2,
+               alpha: float = 1e-2) -> HypergradConfig:
+    return {
+        'nystrom': HypergradConfig(solver='nystrom', k=k, rho=rho),
+        'nystrom_eq6': HypergradConfig(solver='nystrom', k=k, rho=rho),
+        'cg': HypergradConfig(solver='cg', k=k, rho=0.0),
+        'neumann': HypergradConfig(solver='neumann', k=k, alpha=alpha),
+    }[name]
+
+
+def run_bilevel(task, method: str, *, n_outer: int, steps_per_outer: int,
+                inner_lr: float, outer_lr: float, k: int = 10,
+                rho: float = 1e-2, alpha: float = 1e-2,
+                reset_inner: bool = False, outer_opt: str = 'adam',
+                inner_momentum: float = 0.0, batch: int = 100,
+                seed: int = 0):
+    """Alternating bilevel run on a task dict from repro.tasks — returns
+    (final state, outer-loss history, wall seconds)."""
+    inner_opt = (momentum(inner_lr, inner_momentum) if inner_momentum
+                 else sgd(inner_lr))
+    # hypergradient clipping: standard outer-loop hygiene; uniform across
+    # methods so comparisons stay fair (Nyström's more-accurate IHVP takes
+    # larger raw steps than truncated CG/Neumann and diverges without it at
+    # the paper's outer lr=1.0+momentum)
+    base = adam(outer_lr) if outer_opt == 'adam' else momentum(outer_lr, 0.9)
+    outer = chain(clip_by_global_norm(10.0), base)
+    trainer = BilevelTrainer(
+        inner_loss=task['inner'], outer_loss=task['outer'],
+        inner_opt=inner_opt, outer_opt=outer,
+        hypergrad=solver_cfg(method, k=k, rho=rho, alpha=alpha),
+        init_params=task['init_params'], reset_inner=reset_inner)
+
+    rng = jax.random.PRNGKey(seed)
+    hp = task['init_hparams']
+    hp = hp(rng) if callable(hp) and hp.__code__.co_argcount else hp()
+    state = trainer.init(rng, task['init_params'](rng), hp)
+
+    Xt, yt = task['train']
+    Xv, yv = task['val']
+    nt = Xt.shape[0]
+
+    def train_batches():
+        i = 0
+        while True:
+            idx = jax.random.randint(jax.random.PRNGKey(i), (batch,), 0, nt)
+            yield (Xt[idx], yt[idx])
+            i += 1
+
+    def val_batches():
+        i = 1000
+        while True:
+            idx = jax.random.randint(jax.random.PRNGKey(i), (batch,), 0,
+                                     Xv.shape[0])
+            yield (Xv[idx], yv[idx])
+            i += 1
+
+    t0 = time.time()
+    state, hist = trainer.run(state, train_batches(), val_batches(),
+                              steps_per_outer=steps_per_outer,
+                              n_outer=n_outer)
+    return state, hist, time.time() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f'{name},{us_per_call:.1f},{derived}')

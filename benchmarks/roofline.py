@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Prints per (arch × shape): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, memory per chip, and the
+roofline fraction (compute term / binding term). Methodology:
+launch/analysis.py docstring.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), '..', 'experiments',
+                          'dryrun')
+
+
+def load_cells(pattern='*.json'):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            cells.append((os.path.basename(path)[:-5], json.load(f)))
+    return cells
+
+
+def run():
+    rows = []
+    for tag, rec in load_cells():
+        if 'skipped' in rec:
+            emit('roofline', 0.0, f'{tag} SKIPPED ({rec["skipped"]})')
+            continue
+        if 'error' in rec:
+            emit('roofline', 0.0, f'{tag} ERROR {rec["error"][:60]}')
+            continue
+        if 'analysis' not in rec:
+            continue
+        t = rec['analysis']['terms']
+        mem = rec['single_pod']['memory'].get('total_gb', -1)
+        mp = rec.get('multi_pod', {}).get('memory', {}).get('total_gb', -1)
+        emit('roofline', t['bound_s'] * 1e6,
+             f"{tag} compute={t['compute_s']*1e3:.1f}ms "
+             f"memory={t['memory_s']*1e3:.1f}ms "
+             f"coll={t['collective_s']*1e3:.1f}ms dom={t['dominant']} "
+             f"frac={t['roofline_fraction']:.3f} "
+             f"useful={t['useful_flop_ratio']:.3f} "
+             f"mem1pod={mem:.1f}GB mem2pod={mp:.1f}GB")
+        rows.append((tag, t))
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract). Modules:
+  fig1_inverse_quality  — Fig. 1
+  fig2_logreg_hpo       — Figs. 2/3 (+ ρ robustness sweep)
+  tab2_distillation     — Tab. 2
+  tab3_imaml            — Tab. 3
+  tab4_reweighting      — Tab. 4
+  tab5_speed_memory     — Tab. 5
+  tab6_robustness       — Tab. 6 / Fig. 4
+  roofline              — EXPERIMENTS.md §Roofline source (dry-run artifacts)
+
+FAST=1 env shrinks horizons for CI smoke.
+"""
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    fast = bool(int(os.environ.get('FAST', '0')))
+    from benchmarks import (fig1_inverse_quality, fig2_logreg_hpo, roofline,
+                            tab2_distillation, tab3_imaml, tab4_reweighting,
+                            tab5_speed_memory, tab6_robustness)
+    jobs = [
+        ('fig1', fig1_inverse_quality.run, {}),
+        ('fig2', fig2_logreg_hpo.run, {'n_outer': 4 if fast else 12}),
+        ('fig3', fig2_logreg_hpo.run_rho_sweep, {'n_outer': 2 if fast else 8}),
+        ('tab2', tab2_distillation.run, {'n_outer': 3 if fast else 25}),
+        ('tab3', tab3_imaml.run, {'n_episodes': 10 if fast else 60,
+                                  'n_eval': 5 if fast else 20}),
+        ('tab4', tab4_reweighting.run,
+         {'imbalances': (100,) if fast else (200, 100, 50),
+          'n_outer': 5 if fast else 30}),
+        ('tab5', tab5_speed_memory.run,
+         {'sizes': (5,) if fast else (5, 10, 20)}),
+        ('tab6', tab6_robustness.run, {'n_outer': 3 if fast else 15}),
+        ('roofline', roofline.run, {}),
+    ]
+    t00 = time.time()
+    for name, fn, kw in jobs:
+        t0 = time.time()
+        try:
+            fn(**kw)
+            print(f'# {name} done in {time.time()-t0:.1f}s', flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f'{name},0.0,ERROR {type(e).__name__}: {e}', flush=True)
+    print(f'# total {time.time()-t00:.1f}s')
+
+
+if __name__ == '__main__':
+    main()

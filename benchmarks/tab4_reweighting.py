@@ -1,0 +1,56 @@
+"""Tab. 4: data reweighting on long-tailed data (imbalance 200/100/50).
+
+Paper protocol: warm-start (no reset), inner SGD 0.1 momentum 0.9 wd 5e-4,
+outer Adam 1e-5 (we use 1e-3 at our 1000× smaller scale), l=k=10, α=ρ=0.01.
+Validated claim: reweighting ≥ no-reweighting baseline, Nyström matches or
+beats the iterative backends.
+"""
+import jax
+import jax.numpy as jnp
+import time
+
+from benchmarks.common import emit, run_bilevel
+from repro.optim import momentum
+from repro.tasks import build_reweighting
+
+
+def _baseline(task, steps=600):
+    params = task['init_params'](jax.random.PRNGKey(0))
+    opt = momentum(0.1, 0.9)
+    st = opt.init(params)
+    hp = task['init_hparams'](jax.random.PRNGKey(1))
+
+    @jax.jit
+    def step(params, st, X, y, i):
+        def plain(p, b):
+            from repro.tasks.paper import mlp_apply, _xent
+            return _xent(mlp_apply(p, b[0]), b[1])
+        g = jax.grad(plain)(params, (X, y))
+        return opt.apply(g, st, params, i)
+
+    for i in range(steps):
+        X, y = task['data'].train_batch(i, 128)
+        params, st = step(params, st, X, y, jnp.int32(i))
+    return task['accuracy'](params)
+
+
+def run(imbalances=(200, 100, 50), n_outer: int = 30):
+    out = {}
+    for imb in imbalances:
+        task = build_reweighting(imbalance=imb)
+        base = _baseline(task)
+        emit('tab4_reweighting', 0.0, f'imb={imb} baseline acc={base:.3f}')
+        data = task['data']
+        task = dict(task, train=(data.X, data.y), val=(data.Xv, data.yv))
+        for method in ('nystrom', 'cg', 'neumann'):
+            t0 = time.time()
+            state, hist, secs = run_bilevel(
+                task, method, n_outer=n_outer, steps_per_outer=20,
+                inner_lr=0.1, inner_momentum=0.9, outer_lr=1e-3,
+                k=10, rho=1e-2, alpha=1e-2, batch=128)
+            acc = task['accuracy'](state.params)
+            out[(imb, method)] = acc
+            emit('tab4_reweighting', secs * 1e6 / n_outer,
+                 f'imb={imb} method={method} acc={acc:.3f}')
+        out[(imb, 'baseline')] = base
+    return out

@@ -1,0 +1,68 @@
+"""Tab. 5: hypergradient speed & memory by backend and l/k.
+
+No GPU in-container: we report (a) CPU wall-clock per hypergradient on a
+~0.3M-param MLP (relative speeds are meaningful: the same HVP primitives
+dominate), and (b) the analytic cost model that transfers to TPU —
+sequential-HVP count (latency-critical: CG/Neumann chain l HVPs; Nyström's
+k column-HVPs are batchable) and sketch-memory bytes (Nyström's O(kp) vs
+O(p) — the paper's Tab. 5 memory column).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, solver_cfg
+from repro.core import PyTreeIndexer, hypergradient
+from repro.tasks import build_reweighting
+
+
+def run(sizes=(5, 10, 20), reps: int = 3):
+    task = build_reweighting(imbalance=50)
+    params = task['init_params'](jax.random.PRNGKey(0))
+    hp = task['init_hparams'](jax.random.PRNGKey(1))
+    p_count = sum(x.size for x in jax.tree.leaves(params))
+    batch = task['data'].train_batch(0, 128)
+    vbatch = task['data'].val_batch(0, 128)
+    idxr = PyTreeIndexer(params)
+    out = {}
+    for method in ('cg', 'neumann', 'nystrom'):
+        for lk in sizes:
+            cfg = solver_cfg(method, k=lk, rho=1e-2, alpha=1e-2)
+            solver = cfg.build()
+
+            @jax.jit
+            def hg(params, hp, key):
+                return hypergradient(task['inner'], task['outer'], params,
+                                     hp, batch, vbatch, solver, key, idxr)
+
+            hg(params, hp, jax.random.PRNGKey(2))  # warmup/compile
+            t0 = time.time()
+            for r in range(reps):
+                jax.block_until_ready(hg(params, hp, jax.random.PRNGKey(r)))
+            per = (time.time() - t0) / reps
+            seq_hvps = lk if method in ('cg', 'neumann') else 0  # Nyström: k parallel
+            sketch_mb = (lk * p_count * 4 / 1e6) if method == 'nystrom' else 0.0
+            out[(method, lk)] = per
+            emit('tab5_speed_memory', per * 1e6,
+                 f'method={method} l_or_k={lk} wall_s={per:.4f} '
+                 f'sequential_hvps={seq_hvps} sketch_MB={sketch_mb:.1f}')
+    # space-efficient variant timing (κ=1): same sketch, chunked apply
+    from repro.core import NystromIHVP
+    for lk in sizes:
+        solver = NystromIHVP(k=lk, rho=1e-2, kappa=1)
+
+        @jax.jit
+        def hg2(params, hp, key):
+            return hypergradient(task['inner'], task['outer'], params, hp,
+                                 batch, vbatch, solver, key, idxr)
+
+        hg2(params, hp, jax.random.PRNGKey(2))
+        t0 = time.time()
+        for r in range(reps):
+            jax.block_until_ready(hg2(params, hp, jax.random.PRNGKey(r)))
+        per = (time.time() - t0) / reps
+        emit('tab5_speed_memory', per * 1e6,
+             f'method=nystrom_kappa1 l_or_k={lk} wall_s={per:.4f} '
+             f'sequential_hvps=0 sketch_MB={4*p_count/1e6:.1f}(peak κp)')
+    return out

@@ -1,0 +1,56 @@
+"""Data reweighting (paper §5.4): a weight-net learns to down-weight
+head-class examples on long-tailed data; outer loss is balanced validation.
+
+    PYTHONPATH=src python examples/data_reweighting.py --imbalance 100
+"""
+import argparse
+import sys
+
+import jax
+
+sys.path.insert(0, 'src')
+
+from repro.core import BilevelTrainer, HypergradConfig   # noqa: E402
+from repro.optim import adam, momentum                   # noqa: E402
+from repro.tasks import build_reweighting                # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--solver', default='nystrom')
+    ap.add_argument('--imbalance', type=int, default=100)
+    ap.add_argument('--outer-steps', type=int, default=40)
+    args = ap.parse_args()
+
+    task = build_reweighting(imbalance=args.imbalance)
+    data = task['data']
+    trainer = BilevelTrainer(
+        inner_loss=task['inner'], outer_loss=task['outer'],
+        inner_opt=momentum(0.1, 0.9), outer_opt=adam(1e-3),
+        hypergrad=HypergradConfig(solver=args.solver, k=10, rho=1e-2))
+
+    rng = jax.random.PRNGKey(0)
+    state = trainer.init(rng, task['init_params'](rng),
+                         task['init_hparams'](jax.random.PRNGKey(1)))
+
+    def train_batches():
+        i = 0
+        while True:
+            yield data.train_batch(i, 128)
+            i += 1
+
+    def val_batches():
+        i = 0
+        while True:
+            yield data.val_batch(i, 128)
+            i += 1
+
+    state, hist = trainer.run(state, train_batches(), val_batches(),
+                              steps_per_outer=20, n_outer=args.outer_steps,
+                              log_every=10)
+    print(f'balanced test accuracy (imbalance={args.imbalance}, '
+          f'solver={args.solver}): {task["accuracy"](state.params):.3f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,181 @@
+"""Fault-tolerant checkpointing: atomic, async, reshard-on-restore.
+
+Checkpoints are written in *logical* (fully-replicated) layout: a flat
+{path: array} map + a JSON manifest (step, shapes, dtypes, per-leaf crc32).
+Restore device_puts each leaf against the *target* mesh's sharding rules —
+i.e. a checkpoint taken on a 2-pod 512-chip mesh restores onto a 1-pod mesh
+(or a CPU dev box) untouched. That resharding path is the elastic-scaling /
+failover mechanism in DESIGN.md §4.
+
+Write protocol (crash-safe at every point):
+  1. serialize into  <dir>/step_<n>.tmp/
+  2. fsync files, then atomic os.rename → <dir>/step_<n>/
+  3. rewrite <dir>/LATEST (tmp+rename) to point at it
+A partially-written step never becomes LATEST; stale .tmp dirs are GC'd.
+
+``CheckpointManager(async_save=True)`` snapshots to host memory synchronously
+(jax.device_get) and does the disk I/O on a background thread, bounding the
+training-loop stall to the D2H copy (the standard async-checkpoint trick).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = '/'.join(str(getattr(p, 'key', getattr(p, 'idx', p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(directory: str, step: int, tree: Any, extra: dict | None = None):
+    """Atomic synchronous save. Returns the final step directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f'step_{step:010d}')
+    tmp = final + '.tmp'
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    manifest = {'step': step, 'extra': extra or {}, 'leaves': {}}
+    with open(os.path.join(tmp, 'arrays.npz'), 'wb') as f:
+        np.savez(f, **{k: v for k, v in flat.items()})
+    for k, v in flat.items():
+        manifest['leaves'][k] = {
+            'shape': list(v.shape), 'dtype': str(v.dtype),
+            'crc32': zlib.crc32(np.ascontiguousarray(v).tobytes())}
+    with open(os.path.join(tmp, 'manifest.json'), 'w') as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+
+    latest_tmp = os.path.join(directory, 'LATEST.tmp')
+    with open(latest_tmp, 'w') as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(latest_tmp, os.path.join(directory, 'LATEST'))
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    latest = os.path.join(directory, 'LATEST')
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    return int(name.split('_')[-1])
+
+
+def restore(directory: str, template: Any, step: int | None = None,
+            shardings: Any = None, verify: bool = True):
+    """Restore into ``template``'s structure. ``shardings``: optional pytree
+    (same structure) of NamedShardings for the *target* mesh — this is where
+    cross-mesh resharding happens. Returns (tree, manifest)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f'no checkpoint under {directory}')
+    d = os.path.join(directory, f'step_{step:010d}')
+    with open(os.path.join(d, 'manifest.json')) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(d, 'arrays.npz'))
+
+    if verify:
+        for k, meta in manifest['leaves'].items():
+            crc = zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes())
+            if crc != meta['crc32']:
+                raise IOError(f'checkpoint corruption at leaf {k!r} '
+                              f'(crc {crc} != {meta["crc32"]})')
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(paths))
+    out = []
+    for (path, leaf), shard in zip(paths, shard_leaves):
+        key = '/'.join(str(getattr(p, 'key', getattr(p, 'idx', p)))
+                       for p in path)
+        if key not in arrays:
+            raise KeyError(f'checkpoint missing leaf {key!r}')
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f'shape mismatch at {key!r}: '
+                             f'{arr.shape} vs {leaf.shape}')
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None
+                   else jax.numpy.asarray(arr))
+    return treedef.unflatten(out), manifest
+
+
+class CheckpointManager:
+    """Rotating, optionally-async manager with preemption-friendly semantics."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+        os.makedirs(directory, exist_ok=True)
+        self._gc_tmp()
+
+    def _gc_tmp(self):
+        for name in os.listdir(self.directory):
+            if name.endswith('.tmp'):
+                p = os.path.join(self.directory, name)
+                shutil.rmtree(p, ignore_errors=True)
+
+    def wait(self):
+        """Block until any in-flight async save lands (call before exit)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()                           # one in-flight save at a time
+        if not self.async_save:
+            save(self.directory, step, tree, extra)
+            self._rotate()
+            return
+        # synchronous D2H snapshot, async disk write
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, extra)
+                self._rotate()
+            except Exception as e:            # surfaced on next wait()/save()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _rotate(self):
+        steps = sorted(int(n.split('_')[-1])
+                       for n in os.listdir(self.directory)
+                       if n.startswith('step_') and not n.endswith('.tmp'))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f'step_{s:010d}'),
+                          ignore_errors=True)
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        return restore(self.directory, template, shardings=shardings)
+
+    def latest_step(self):
+        return latest_step(self.directory)

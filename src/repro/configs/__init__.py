@@ -1,0 +1,64 @@
+"""Architecture registry: ``get_config(arch_id)`` + shape suites.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each is
+paired with the LM shape suite from the assignment. ``long_500k`` is only
+*runnable* for sub-quadratic families (jamba, rwkv6) — the skip list is
+derived from the config and recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    'llama3_405b', 'mistral_large_123b', 'yi_9b', 'qwen2_7b', 'qwen2_vl_7b',
+    'llama4_maverick_400b_a17b', 'phi35_moe_42b_a66b', 'seamless_m4t_large_v2',
+    'jamba_v01_52b', 'rwkv6_1b6',
+]
+
+# canonical external ids (hyphenated) → module names
+ALIASES = {a.replace('_', '-'): a for a in ARCHS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = [
+    ShapeSpec('train_4k', 'train', 4_096, 256),
+    ShapeSpec('prefill_32k', 'prefill', 32_768, 32),
+    ShapeSpec('decode_32k', 'decode', 32_768, 128),
+    ShapeSpec('long_500k', 'decode', 524_288, 1),
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    name = ALIASES.get(arch, arch)
+    if name not in ARCHS:
+        raise KeyError(f'unknown arch {arch!r}; known: {sorted(ALIASES)}')
+    mod = importlib.import_module(f'repro.configs.{name}')
+    return mod.CONFIG
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    if shape.name == 'long_500k' and not cfg.subquadratic:
+        return False, 'pure full-attention arch: 500k decode is excluded per spec'
+    return True, ''
+
+
+def all_cells():
+    """All 40 (arch × shape) cells with applicability flags."""
+    out = []
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, why = shape_applicable(cfg, s)
+            out.append((a, s, ok, why))
+    return out

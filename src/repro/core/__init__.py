@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: Nyström implicit differentiation.
+
+Public API:
+  NystromIHVP / CGIHVP / NeumannIHVP / ExactIHVP  — IHVP solvers
+  hypergradient / unrolled_hypergradient          — Eq. 3 assembly
+  BilevelTrainer / BilevelState                   — warm-start bilevel loop
+  make_hvp / extract_columns / PyTreeIndexer      — HVP substrate
+"""
+from repro.core.bilevel import BilevelState, BilevelTrainer
+from repro.core.hvp import extract_columns, make_hvp, make_hvp_fn
+from repro.core.hypergrad import (HypergradConfig, hypergradient,
+                                  unrolled_hypergradient)
+from repro.core.solvers import (SOLVERS, CGIHVP, ExactIHVP, NeumannIHVP,
+                                NystromIHVP, NystromSketch,
+                                nystrom_inverse_dense)
+from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
+                                  tree_cast, tree_norm, tree_random_like,
+                                  tree_scale, tree_size, tree_sub, tree_vdot,
+                                  tree_zeros_like)
+
+__all__ = [
+    'BilevelState', 'BilevelTrainer', 'HypergradConfig', 'SOLVERS',
+    'CGIHVP', 'ExactIHVP', 'NeumannIHVP', 'NystromIHVP', 'NystromSketch',
+    'PyTreeIndexer', 'extract_columns', 'hypergradient', 'make_hvp',
+    'make_hvp_fn', 'nystrom_inverse_dense', 'tree_add', 'tree_axpy',
+    'tree_cast', 'tree_norm', 'tree_random_like', 'tree_scale', 'tree_size',
+    'tree_sub', 'tree_vdot', 'tree_zeros_like', 'unrolled_hypergradient',
+]

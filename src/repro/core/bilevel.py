@@ -1,0 +1,149 @@
+"""Warm-start alternating bilevel driver (Eq. 1–2 of the paper).
+
+Inner: θ_t = Θ(θ_{t-1}, ∇_θ f(θ_{t-1}, φ, T), φ) for T steps.
+Outer: φ ← φ − η · (approximate dg/dφ via implicit differentiation).
+
+The driver is jit-friendly: ``inner_step`` and ``outer_step`` are pure
+functions over an explicit ``BilevelState`` pytree, so the trainer in
+``launch/train.py`` can pjit them over the production mesh and the
+checkpoint manager can snapshot the whole state atomically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hvp import make_hvp
+from repro.core.hypergrad import HypergradConfig, hypergradient
+from repro.core.solvers import NystromIHVP
+from repro.core.tree_util import PyTree, PyTreeIndexer
+from repro.optim.optimizers import Optimizer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BilevelState:
+    params: PyTree
+    hparams: PyTree
+    inner_opt_state: PyTree
+    outer_opt_state: PyTree
+    inner_step: jax.Array   # int32 scalar
+    outer_step: jax.Array   # int32 scalar
+    rng: jax.Array
+
+
+@dataclasses.dataclass
+class BilevelTrainer:
+    """Alternating warm-start bilevel optimization with pluggable IHVP solver.
+
+    ``reset_inner`` mirrors the paper's §5.1/§5.2 protocol (re-initialize θ at
+    every outer update); production LM training keeps warm starts
+    (reset_inner=False, §5.4 protocol).
+    """
+    inner_loss: Callable[..., jax.Array]   # f(params, hparams, batch)
+    outer_loss: Callable[..., jax.Array]   # g(params, hparams, batch)
+    inner_opt: Optimizer
+    outer_opt: Optimizer
+    hypergrad: HypergradConfig
+    init_params: Callable[[jax.Array], PyTree] | None = None
+    reset_inner: bool = False
+
+    def init(self, rng: jax.Array, params: PyTree, hparams: PyTree) -> BilevelState:
+        return BilevelState(
+            params=params,
+            hparams=hparams,
+            inner_opt_state=self.inner_opt.init(params),
+            outer_opt_state=self.outer_opt.init(hparams),
+            inner_step=jnp.int32(0),
+            outer_step=jnp.int32(0),
+            rng=rng,
+        )
+
+    # ------------------------------------------------------------------ inner
+    def inner_step_fn(self, state: BilevelState, batch: Any) -> tuple[BilevelState, jax.Array]:
+        loss, grads = jax.value_and_grad(self.inner_loss)(
+            state.params, state.hparams, batch)
+        params, opt_state = self.inner_opt.apply(
+            grads, state.inner_opt_state, state.params, state.inner_step)
+        return dataclasses.replace(
+            state, params=params, inner_opt_state=opt_state,
+            inner_step=state.inner_step + 1), loss
+
+    # ------------------------------------------------------------------ outer
+    def outer_step_fn(self, state: BilevelState, inner_batch: Any,
+                      outer_batch: Any) -> tuple[BilevelState, jax.Array]:
+        rng, sub = jax.random.split(state.rng)
+        solver = self.hypergrad.build()
+        indexer = PyTreeIndexer(state.params)
+        hgrad = hypergradient(self.inner_loss, self.outer_loss,
+                              state.params, state.hparams,
+                              inner_batch, outer_batch, solver, sub, indexer)
+        hparams, outer_opt_state = self.outer_opt.apply(
+            hgrad, state.outer_opt_state, state.hparams, state.outer_step)
+        outer_loss = self.outer_loss(state.params, state.hparams, outer_batch)
+
+        state = dataclasses.replace(
+            state, hparams=hparams, outer_opt_state=outer_opt_state,
+            outer_step=state.outer_step + 1, rng=rng)
+
+        if self.reset_inner:
+            assert self.init_params is not None, 'reset_inner needs init_params'
+            rng, sub = jax.random.split(state.rng)
+            params = self.init_params(sub)
+            state = dataclasses.replace(
+                state, params=params,
+                inner_opt_state=self.inner_opt.init(params),
+                inner_step=jnp.int32(0), rng=rng)
+        return state, outer_loss
+
+    # ------------------------------------------- amortized-sketch outer step
+    def build_sketch(self, state: BilevelState, inner_batch: Any):
+        """Build a Nyström sketch once; reuse for ``sketch_refresh_every``
+        outer steps (beyond-paper amortization — see EXPERIMENTS.md §Perf)."""
+        solver = self.hypergrad.build()
+        assert isinstance(solver, NystromIHVP)
+        indexer = PyTreeIndexer(state.params)
+        hvp = make_hvp(self.inner_loss, state.params, state.hparams, inner_batch)
+        rng, sub = jax.random.split(state.rng)
+        return solver.prepare(hvp, indexer, sub), dataclasses.replace(state, rng=rng)
+
+    def outer_step_with_sketch(self, state: BilevelState, sketch,
+                               inner_batch: Any, outer_batch: Any):
+        solver = self.hypergrad.build()
+        indexer = PyTreeIndexer(state.params)
+        rng, sub = jax.random.split(state.rng)
+        hgrad = hypergradient(self.inner_loss, self.outer_loss,
+                              state.params, state.hparams,
+                              inner_batch, outer_batch, solver, sub, indexer,
+                              sketch=sketch)
+        hparams, outer_opt_state = self.outer_opt.apply(
+            hgrad, state.outer_opt_state, state.hparams, state.outer_step)
+        outer_loss = self.outer_loss(state.params, state.hparams, outer_batch)
+        return dataclasses.replace(
+            state, hparams=hparams, outer_opt_state=outer_opt_state,
+            outer_step=state.outer_step + 1, rng=rng), outer_loss
+
+    # ------------------------------------------------------------------ loop
+    def run(self, state: BilevelState, inner_batches, outer_batches,
+            steps_per_outer: int, n_outer: int, log_every: int = 0,
+            jit: bool = True):
+        """Host-side loop (examples / tests). Production loop lives in
+        launch/train.py with pjit + checkpointing."""
+        inner = jax.jit(self.inner_step_fn) if jit else self.inner_step_fn
+        outer = jax.jit(self.outer_step_fn) if jit else self.outer_step_fn
+        history = {'inner_loss': [], 'outer_loss': []}
+        it_in, it_out = iter(inner_batches), iter(outer_batches)
+        for o in range(n_outer):
+            for _ in range(steps_per_outer):
+                state, li = inner(state, next(it_in))
+                history['inner_loss'].append(float(li))
+            ib, ob = next(it_in), next(it_out)
+            state, lo = outer(state, ib, ob)
+            history['outer_loss'].append(float(lo))
+            if log_every and (o + 1) % log_every == 0:
+                print(f'[bilevel] outer {o + 1}/{n_outer} '
+                      f'g={float(lo):.4f} f={history["inner_loss"][-1]:.4f}')
+        return state, history

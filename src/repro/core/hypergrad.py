@@ -1,0 +1,121 @@
+"""Hypergradient assembly (Eq. 3) — solver-agnostic implicit differentiation.
+
+    dg/dφ = −(∂g/∂θ) (∇²_θ f + ρI)⁻¹ (∂²f/∂φ∂θ) + ∂g/∂φ
+
+The mixed second derivative is never materialized: with u = IHVP(∂g/∂θ), the
+first term is the φ-gradient of ⟨∇_θ f, stop_grad(u)⟩ (one VJP through the
+inner gradient). Total cost per hypergradient:
+
+  * Nyström: k + 1 batched-parallel HVPs (sketch, reusable) + 1 VJP
+  * CG/Neumann: l *sequential* HVPs + 1 VJP
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hvp import make_hvp
+from repro.core.tree_util import PyTree, PyTreeIndexer, tree_sub
+
+InnerLoss = Callable[..., jax.Array]   # f(params, hparams, batch) -> scalar
+OuterLoss = Callable[..., jax.Array]   # g(params, hparams, batch) -> scalar
+
+
+def hypergradient(inner_loss: InnerLoss,
+                  outer_loss: OuterLoss,
+                  params: PyTree,
+                  hparams: PyTree,
+                  inner_batch: Any,
+                  outer_batch: Any,
+                  solver,
+                  rng: jax.Array,
+                  indexer: PyTreeIndexer | None = None,
+                  sketch=None) -> PyTree:
+    """Approximate dg/dφ at (params, hparams) via implicit differentiation.
+
+    ``sketch``: an optional pre-built ``NystromSketch`` — production trainers
+    amortize one sketch over several outer steps (see BilevelTrainer).
+    """
+    indexer = indexer or PyTreeIndexer(params)
+
+    # v = ∂g/∂θ
+    v = jax.grad(outer_loss, argnums=0)(params, hparams, outer_batch)
+
+    # u = (H + ρI)⁻¹ v
+    hvp = make_hvp(inner_loss, params, hparams, inner_batch)
+    if sketch is not None and hasattr(solver, 'apply'):
+        u = solver.apply(sketch, v)
+    else:
+        u = solver.solve(hvp, indexer, v, rng)
+    u = jax.lax.stop_gradient(u)
+
+    # mixed term: ∇_φ ⟨∇_θ f(θ, φ), u⟩  (= (∂²f/∂φ∂θ)ᵀ u)
+    def inner_grad_dot_u(phi):
+        g_theta = jax.grad(inner_loss, argnums=0)(params, phi, inner_batch)
+        leaves = jax.tree.leaves(jax.tree.map(
+            lambda a, b: jnp.vdot(a.astype(jnp.float32),
+                                  b.astype(jnp.float32)), g_theta, u))
+        return sum(leaves)
+
+    mixed = jax.grad(inner_grad_dot_u)(hparams)
+
+    # direct term: ∂g/∂φ (zero for e.g. regularization hyperparameters)
+    direct = jax.grad(outer_loss, argnums=1)(params, hparams, outer_batch)
+
+    return tree_sub(direct, mixed)
+
+
+def unrolled_hypergradient(inner_loss: InnerLoss,
+                           outer_loss: OuterLoss,
+                           params: PyTree,
+                           hparams: PyTree,
+                           inner_batch: Any,
+                           outer_batch: Any,
+                           steps: int,
+                           lr: float) -> PyTree:
+    """Oracle baseline: differentiate through ``steps`` unrolled SGD steps.
+
+    O(steps × activations) memory — tiny problems only; used in tests to
+    validate the implicit estimates, and as the paper's §2.5 fallback for
+    hyperparameters that do not influence the training loss directly.
+    """
+    def inner_sgd(phi):
+        def step(p, _):
+            g = jax.grad(inner_loss, argnums=0)(p, phi, inner_batch)
+            p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+            return p, None
+        final, _ = jax.lax.scan(step, params, None, length=steps)
+        return outer_loss(final, phi, outer_batch)
+
+    return jax.grad(inner_sgd)(hparams)
+
+
+@dataclasses.dataclass
+class HypergradConfig:
+    """Config-system entry for the hypergradient feature (see configs/)."""
+    solver: str = 'nystrom'       # nystrom | cg | neumann | exact
+    k: int = 10                   # Nyström rank / iterations l for baselines
+    rho: float = 1e-2             # damping (Nyström/exact) or CG Tikhonov
+    alpha: float = 1e-2           # Neumann step size
+    kappa: int | None = None      # Alg. 1 chunk width (None = Eq. 6)
+    column_chunk: int | None = None
+    sketch_refresh_every: int = 1  # outer steps between sketch rebuilds
+    importance_sampling: bool = False
+
+    def build(self):
+        from repro.core.solvers import (CGIHVP, ExactIHVP, NeumannIHVP,
+                                        NystromIHVP)
+        if self.solver == 'nystrom':
+            return NystromIHVP(k=self.k, rho=self.rho, kappa=self.kappa,
+                               column_chunk=self.column_chunk,
+                               importance_sampling=self.importance_sampling)
+        if self.solver == 'cg':
+            return CGIHVP(iters=self.k, rho=self.rho)
+        if self.solver == 'neumann':
+            return NeumannIHVP(iters=self.k, alpha=self.alpha)
+        if self.solver == 'exact':
+            return ExactIHVP(rho=self.rho)
+        raise ValueError(f'unknown solver {self.solver!r}')

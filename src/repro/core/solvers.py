@@ -1,0 +1,346 @@
+"""IHVP solvers: the paper's Nyström method plus the baselines it compares to.
+
+Every solver approximates  u ≈ (H + ρI)⁻¹ v  where H = ∇²_θ f is accessed only
+through Hessian-vector products (HVPs).
+
+* ``NystromIHVP`` — the paper's contribution (Eq. 4/6, Alg. 1). Non-iterative:
+  k parallel HVPs build the sketch once, then every apply is two tall-skinny
+  contractions and one k×k solve. The κ dial selects the time/space tradeoff
+  (κ=k: Eq. 6 "time-efficient"; κ=1: Eq. 9 "space-efficient"; in between:
+  Alg. 1 hybrid) with bit-identical results.
+* ``CGIHVP`` — conjugate gradient (Pedregosa 2016; Rajeswaran et al. 2019).
+* ``NeumannIHVP`` — Neumann series (Lorraine et al. 2020).
+* ``ExactIHVP`` — dense solve, for tiny problems / oracles in tests.
+
+Sharding: solvers are pure jax; under pjit, C (leading-k parameter pytree)
+inherits the parameter sharding, CᵀC / Cᵀv lower to per-shard contractions +
+one psum of k² / k floats, and the k×k solve is replicated. No solver holds
+any p×p object.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hvp import extract_columns
+from repro.core.tree_util import (PyTree, PyTreeIndexer, tree_axpy, tree_scale,
+                                  tree_sub, tree_vdot, tree_zeros_like)
+
+HVP = Callable[[PyTree], PyTree]
+
+# Eigenvalues below this (relative) threshold are deactivated by sending them
+# to SAFE_BIG, which makes their rank-1/rank-κ Woodbury contribution vanish —
+# the static-shape analogue of a truncated pseudo-inverse (paper §5: zero
+# Hessian columns under ReLU break the plain inverse).
+_EIG_REL_TOL = 1e-7
+_SAFE_BIG = 1e30
+
+
+# ---------------------------------------------------------------------------
+# tall-skinny pytree contractions (the only dense math the solver needs)
+# ---------------------------------------------------------------------------
+def _ctv(C: PyTree, v: PyTree) -> jax.Array:
+    """t = Cᵀ v ∈ R^k.  C leaves: (k, *shape); v leaves: (*shape)."""
+    parts = jax.tree.leaves(jax.tree.map(
+        lambda c, x: jnp.einsum('k...,...->k', c.astype(jnp.float32),
+                                x.astype(jnp.float32)), C, v))
+    return sum(parts)
+
+
+def _cv(C: PyTree, w: jax.Array) -> PyTree:
+    """u = C w: contract the leading k axis with w ∈ R^k."""
+    return jax.tree.map(
+        lambda c: jnp.einsum('k...,k->...', c.astype(jnp.float32), w), C)
+
+
+def _gram(C: PyTree) -> jax.Array:
+    """CᵀC ∈ R^{k×k}."""
+    parts = jax.tree.leaves(jax.tree.map(
+        lambda c: jnp.einsum('k...,j...->kj', c.astype(jnp.float32),
+                             c.astype(jnp.float32)), C))
+    return sum(parts)
+
+
+def _cross(A: PyTree, B: PyTree) -> jax.Array:
+    """Aᵀ B for two leading-axis pytrees → (ka, kb)."""
+    parts = jax.tree.leaves(jax.tree.map(
+        lambda a, b: jnp.einsum('k...,j...->kj', a.astype(jnp.float32),
+                                b.astype(jnp.float32)), A, B))
+    return sum(parts)
+
+
+def _sym_solve(M: jax.Array, t: jax.Array) -> jax.Array:
+    """Solve M w = t for symmetric (possibly indefinite) k×k M.
+
+    Jacobi (diagonal) preconditioning: M = H_KK + CᵀC/ρ mixes scales of H and
+    H²/ρ, which costs ~3 digits in f32; symmetric diagonal scaling restores
+    them (measured in tests/test_solvers.py). Jitter handles the zero-column
+    degeneracy the paper works around with leaky-ReLU.
+    """
+    M = 0.5 * (M + M.T)
+    d = jnp.sqrt(jnp.clip(jnp.abs(jnp.diagonal(M)), 1e-30, None))
+    Ms = M / d[:, None] / d[None, :]
+    jitter = 1e-7
+    k = M.shape[0]
+    w = jnp.linalg.solve(Ms + jitter * jnp.eye(k, dtype=M.dtype), t / d)
+    return w / d
+
+
+# ---------------------------------------------------------------------------
+# Nyström (the paper)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NystromSketch:
+    """Prepared sketch: reusable across many IHVP applies (and outer steps).
+
+    ``W``/``sig2`` is the numerically-stable spectral form of H_k
+    (H_k = W diag(σ²) Wᵀ, W orthonormal p×k): present when the solver was
+    built with ``stabilized=True``.
+    """
+    C: PyTree           # H[:, K], leaves (k, *param_shape)
+    H_KK: jax.Array     # (k, k), symmetrized
+    indices: dict       # structured {'leaf', 'dims'} (PyTreeIndexer)
+    rho: jax.Array      # scalar
+    W: PyTree | None = None
+    sig2: jax.Array | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class NystromIHVP:
+    """The paper's method. κ=None ⇒ Eq. 6 (time-efficient).
+
+    ``stabilized=True`` (default) applies the inverse through the spectral
+    form of H_k (Frangella–Tropp–Udell-style): Eq. 6's k×k system
+    H_KK + CᵀC/ρ carries cond(H)² and costs ~3 digits in f32; the spectral
+    form is backward-stable and makes each apply *cheaper* (no solve at apply
+    time). ``stabilized=False`` is the literal Eq. 6 for paper-faithful
+    benchmarking; both agree to solver tolerance on well-conditioned H
+    (tests/test_solvers.py).
+    """
+    k: int
+    rho: float = 1e-2
+    kappa: int | None = None
+    column_chunk: int | None = None
+    importance_sampling: bool = False  # Remark 1 (Drineas–Mahoney weights)
+    stabilized: bool = True
+
+    # -- sketch construction (k HVPs; the only part that touches the model) --
+    def prepare(self, hvp: HVP, indexer: PyTreeIndexer, rng: jax.Array,
+                diag_weights: jax.Array | None = None) -> NystromSketch:
+        weights = diag_weights if self.importance_sampling else None
+        idx = indexer.sample_indices(rng, self.k, weights)
+        C = extract_columns(hvp, indexer, idx, self.column_chunk)
+        H_KK = indexer.gather(C, idx)
+        H_KK = 0.5 * (H_KK + H_KK.T)
+        W, sig2 = (None, None)
+        if self.stabilized:
+            W, sig2 = _spectral_form(C, H_KK)
+        return NystromSketch(C=C, H_KK=H_KK, indices=idx,
+                             rho=jnp.float32(self.rho), W=W, sig2=sig2)
+
+    # -- apply (no HVPs; two tall-skinny contractions + tiny replicated math)
+    def apply(self, sketch: NystromSketch, v: PyTree) -> PyTree:
+        if self.kappa is not None and self.kappa < self.k:
+            return _apply_woodbury_chunked(sketch, v, self.kappa)
+        if self.stabilized and sketch.W is not None:
+            return _apply_spectral(sketch, v)
+        return _apply_woodbury_direct(sketch, v)
+
+    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
+              rng: jax.Array) -> PyTree:
+        return self.apply(self.prepare(hvp, indexer, rng), v)
+
+
+def _spectral_form(C: PyTree, H_KK: jax.Array):
+    """H_k = C H_KK† Cᵀ = W diag(σ²) Wᵀ with orthonormal W, via two k×k eighs.
+
+    B = C · U diag(λ†^(1/2)) gives H_k = BBᵀ; the SVD of the distributed B is
+    recovered from its k×k Gram (BᵀB = Q diag(σ²) Qᵀ), so every p-sized op is
+    a pytree einsum and every decomposition is replicated k×k math.
+    """
+    lam, U = jnp.linalg.eigh(H_KK)
+    lam_max = jnp.max(jnp.abs(lam)) + 1e-30
+    tol = _EIG_REL_TOL * lam_max * H_KK.shape[0]
+    inv_sqrt = jnp.where(lam > tol, 1.0 / jnp.sqrt(jnp.clip(lam, tol, None)), 0.0)
+    S = U * inv_sqrt[None, :]
+    B = jax.tree.map(lambda c: jnp.einsum('k...,kj->j...',
+                                          c.astype(jnp.float32), S), C)
+    mu, Q = jnp.linalg.eigh(_gram(B))          # mu = σ² ≥ 0
+    sig2 = jnp.clip(mu, 0.0, None)
+    sig = jnp.sqrt(sig2)
+    inv_sig = jnp.where(sig > _EIG_REL_TOL * (sig[-1] + 1e-30), 1.0 / sig, 0.0)
+    QS = Q * inv_sig[None, :]
+    W = jax.tree.map(lambda b: jnp.einsum('k...,kj->j...', b, QS), B)
+    return W, sig2
+
+
+def _apply_spectral(s: NystromSketch, v: PyTree) -> PyTree:
+    """u = v/ρ + W diag(1/(σ²+ρ) − 1/ρ) Wᵀ v  (exact inverse of H_k + ρI)."""
+    rho = s.rho
+    t = _ctv(s.W, v)                           # (k,) [psum of k floats]
+    coef = 1.0 / (s.sig2 + rho) - 1.0 / rho    # ≤ 0; exactly 0 on dropped dirs
+    return tree_axpy(1.0, _cv(s.W, coef * t), tree_scale(v, 1.0 / rho))
+
+
+def _apply_woodbury_direct(s: NystromSketch, v: PyTree) -> PyTree:
+    """Eq. 6:  u = v/ρ − C (H_KK + CᵀC/ρ)⁻¹ (Cᵀv) / ρ²."""
+    rho = s.rho
+    t = _ctv(s.C, v)                       # (k,)   [psum of k floats]
+    M = s.H_KK + _gram(s.C) / rho          # (k,k)  [psum of k² floats]
+    w = _sym_solve(M, t)                   # replicated tiny solve
+    correction = _cv(s.C, w / (rho * rho))
+    return tree_sub(tree_scale(v, 1.0 / rho), correction)
+
+
+def _eig_factors(s: NystromSketch):
+    """L = C·U and deactivated-eigenvalue diagonal for Alg. 1 paths."""
+    lam, U = jnp.linalg.eigh(s.H_KK)
+    scale = jnp.max(jnp.abs(lam)) + 1e-30
+    lam_safe = jnp.where(jnp.abs(lam) < _EIG_REL_TOL * scale, _SAFE_BIG, lam)
+    L = jax.tree.map(lambda c: jnp.einsum('k...,kj->j...',
+                                          c.astype(jnp.float32), U), s.C)
+    return L, lam_safe
+
+
+def _apply_woodbury_chunked(s: NystromSketch, v: PyTree, kappa: int) -> PyTree:
+    """Alg. 1: recursive rank-κ Woodbury updates, applied in operator form.
+
+    State after chunk m: Ĥ_m x = x/ρ − Σ_{j≤m} G_j R_j (G_jᵀ x), held as the
+    factor list {(G_j, R_j)}. Per chunk: apply Ĥ_m to the κ new columns, solve
+    a κ×κ system, append a factor. Bit-equivalent to Eq. 6 for every κ.
+    """
+    k = s.indices['leaf'].shape[0]
+    rho = s.rho
+    L, lam = _eig_factors(s)
+    factors: list[tuple[PyTree, jax.Array]] = []
+
+    def apply_running(x: PyTree) -> PyTree:
+        out = tree_scale(x, 1.0 / rho)
+        for G, R in factors:
+            out = tree_sub(out, _cv(G, R @ _ctv(G, x)))
+        return out
+
+    for start in range(0, k, kappa):
+        width = min(kappa, k - start)
+        Lm = jax.tree.map(lambda l: jax.lax.slice_in_dim(l, start, start + width, axis=0), L)
+        Jm = jnp.diag(lam[start:start + width])
+        # Ĥ_m applied to each of the κ columns (vmap over the leading axis).
+        HmL = jax.vmap(apply_running)(Lm)
+        S = Jm + _cross(Lm, HmL)
+        S = 0.5 * (S + S.T)
+        jitter = 1e-8 * (jnp.trace(jnp.abs(S)) / width + 1.0)
+        R = jnp.linalg.inv(S + jitter * jnp.eye(width, dtype=S.dtype))
+        factors.append((HmL, 0.5 * (R + R.T)))
+
+    return apply_running(v)
+
+
+def nystrom_inverse_dense(H: jax.Array, k: int, rho: float,
+                          rng: jax.Array) -> jax.Array:
+    """Dense-matrix Nyström inverse (Fig. 1 oracle / tests): returns
+    (H_k + ρI)⁻¹ as an explicit p×p matrix. Test-scale only."""
+    p = H.shape[0]
+    idx = jax.random.choice(rng, p, (min(k, p),), replace=False)
+    C = H[:, idx]                      # (p, k)
+    H_KK = 0.5 * (C[idx, :] + C[idx, :].T)
+    M = H_KK + C.T @ C / rho
+    M = 0.5 * (M + M.T) + 1e-8 * jnp.eye(M.shape[0])
+    return jnp.eye(p) / rho - C @ jnp.linalg.solve(M, C.T) / rho**2
+
+
+# ---------------------------------------------------------------------------
+# Iterative baselines
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CGIHVP:
+    """Truncated conjugate gradient on (H + ρI) x = v.
+
+    ρ=0 reproduces the paper's baseline exactly; ρ>0 is Tikhonov damping.
+    """
+    iters: int = 5
+    rho: float = 0.0
+
+    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
+              rng: jax.Array | None = None) -> PyTree:
+        del indexer, rng
+
+        def matvec(x: PyTree) -> PyTree:
+            return tree_axpy(self.rho, x, hvp(x))
+
+        x = tree_zeros_like(v)
+        r = v
+        p = v
+        rs = tree_vdot(r, r)
+
+        def body(_, carry):
+            x, r, p, rs = carry
+            Ap = matvec(p)
+            denom = tree_vdot(p, Ap)
+            alpha = rs / jnp.where(jnp.abs(denom) < 1e-30, 1e-30, denom)
+            x = tree_axpy(alpha, p, x)
+            r = tree_axpy(-alpha, Ap, r)
+            rs_new = tree_vdot(r, r)
+            beta = rs_new / jnp.where(rs < 1e-30, 1e-30, rs)
+            p = tree_axpy(beta, p, r)
+            return x, r, p, rs_new
+
+        x, _, _, _ = jax.lax.fori_loop(0, self.iters, body, (x, r, p, rs))
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class NeumannIHVP:
+    """Truncated Neumann series (Lorraine et al. 2020):
+    (H)⁻¹ ≈ α Σ_{j=0}^{l} (I − αH)^j, requires ‖αH‖ < 1 to converge."""
+    iters: int = 5
+    alpha: float = 1e-2
+
+    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
+              rng: jax.Array | None = None) -> PyTree:
+        del indexer, rng
+
+        def body(_, carry):
+            p, acc = carry
+            p = tree_axpy(-self.alpha, hvp(p), p)   # p ← (I − αH) p
+            acc = tree_axpy(1.0, p, acc)
+            return p, acc
+
+        p, acc = jax.lax.fori_loop(0, self.iters, body, (v, v))
+        return tree_scale(acc, self.alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactIHVP:
+    """Materialize H column-by-column and dense-solve (tests / tiny models)."""
+    rho: float = 1e-2
+
+    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
+              rng: jax.Array | None = None) -> PyTree:
+        del rng
+        p = indexer.total
+        idx = indexer.all_indices()                     # flat-order structured
+        C = extract_columns(hvp, indexer, idx)          # full H, (p, ...) tree
+        H = indexer.gather(C, idx)                      # (p, p)
+        H = 0.5 * (H + H.T)
+        v_flat = jnp.concatenate([x.astype(jnp.float32).ravel()
+                                  for x in jax.tree.leaves(v)])
+        u_flat = jnp.linalg.solve(H + self.rho * jnp.eye(p), v_flat)
+        # unflatten back into the parameter structure
+        outs, off = [], 0
+        for shape, dtype, size in zip(indexer.shapes, indexer.dtypes,
+                                      indexer.sizes):
+            outs.append(u_flat[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return indexer.treedef.unflatten(outs)
+
+
+SOLVERS = {
+    'nystrom': NystromIHVP,
+    'cg': CGIHVP,
+    'neumann': NeumannIHVP,
+    'exact': ExactIHVP,
+}

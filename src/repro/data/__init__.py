@@ -1,0 +1,7 @@
+from repro.data.synthetic import (DistillationTask, FewShotSampler,
+                                  LongTailDataset, TokenStream,
+                                  make_logreg_problem)
+from repro.data.loader import ShardedLoader, Prefetcher
+
+__all__ = ['DistillationTask', 'FewShotSampler', 'LongTailDataset',
+           'TokenStream', 'make_logreg_problem', 'ShardedLoader', 'Prefetcher']

@@ -1,0 +1,215 @@
+"""Deterministic synthetic datasets (container is offline — DESIGN.md §6.3).
+
+Each generator is seeded and *step-indexed*: batch t is a pure function of
+(seed, t), so any host can reproduce any shard's batch — the property the
+fault-tolerance story relies on (a restarted/replaced node resumes mid-epoch
+without coordination, and stragglers can be re-issued elsewhere).
+
+Tasks mirror the paper's experiment suite:
+  make_logreg_problem   — §5.1 synthetic logistic regression (weight-decay HPO)
+  DistillationTask      — §5.2 10-class 28×28 "digits" GMM (MNIST analog)
+  FewShotSampler        — §5.3 procedural character classes (Omniglot analog)
+  LongTailDataset       — §5.4 imbalance-factor-parameterized classification
+  TokenStream           — LM-scale domain-mixture corpus for the end-to-end
+                          bilevel data-reweighting driver (noisy domains give
+                          the outer loop signal to discover).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------ §5.1
+def make_logreg_problem(D: int = 100, n: int = 500, seed: int = 0,
+                        noise: float = 0.5):
+    """y = (w*ᵀ x + ε > 0); returns (train, val) arrays (paper §5.1 setup)."""
+    rng = np.random.RandomState(seed)
+    w_star = rng.randn(D).astype(np.float32)
+
+    def split(m):
+        X = rng.randn(m, D).astype(np.float32)
+        y = (X @ w_star + noise * rng.randn(m) > 0).astype(np.float32)
+        return jnp.asarray(X), jnp.asarray(y)
+
+    return split(n), split(n)
+
+
+# ------------------------------------------------------------------ §5.2
+@dataclasses.dataclass
+class DistillationTask:
+    """10-class 28×28 GMM 'digits': class prototypes are smooth random fields;
+    the distilled set must compress them into C synthetic images."""
+    n_classes: int = 10
+    image_size: int = 28
+    n_train: int = 2048
+    n_test: int = 1024
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        s = self.image_size
+        # smooth prototypes: low-frequency random fields per class
+        freqs = rng.randn(self.n_classes, 4, 4)
+        grid = np.linspace(0, 1, s)
+        basis = np.stack([np.cos(np.pi * k * grid) for k in range(4)])  # (4, s)
+        protos = np.einsum('ckl,ks,lt->cst', freqs, basis, basis)
+        self.prototypes = (protos / np.abs(protos).max((1, 2), keepdims=True)
+                           ).astype(np.float32)
+
+    def _sample(self, n, seed):
+        rng = np.random.RandomState(seed)
+        labels = rng.randint(0, self.n_classes, n)
+        imgs = self.prototypes[labels] + 0.35 * rng.randn(
+            n, self.image_size, self.image_size).astype(np.float32)
+        return jnp.asarray(imgs[..., None]), jnp.asarray(labels)
+
+    def train(self):
+        return self._sample(self.n_train, self.seed + 1)
+
+    def test(self):
+        return self._sample(self.n_test, self.seed + 2)
+
+
+# ------------------------------------------------------------------ §5.3
+@dataclasses.dataclass
+class FewShotSampler:
+    """N-way K-shot episodes over procedurally generated 'characters':
+    each class is a random stroke-field prototype; episodes draw disjoint
+    class sets for meta-train/meta-test (Omniglot protocol analog)."""
+    n_way: int = 5
+    k_shot: int = 1
+    k_query: int = 5
+    image_size: int = 20
+    n_classes: int = 200
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        s = self.image_size
+        coeff = rng.randn(self.n_classes, 5, 5)
+        grid = np.linspace(0, 1, s)
+        basis = np.stack([np.sin(np.pi * (k + 1) * grid) for k in range(5)])
+        protos = np.einsum('ckl,ks,lt->cst', coeff, basis, basis)
+        self.prototypes = (protos / np.abs(protos).max((1, 2), keepdims=True)
+                           ).astype(np.float32)
+        self.split = int(0.8 * self.n_classes)
+
+    def episode(self, idx: int, test: bool = False):
+        """Deterministic episode #idx → (support_x, support_y, query_x, query_y)."""
+        rng = np.random.RandomState(self.seed + 7919 * idx + (1 if test else 0))
+        pool = (np.arange(self.split, self.n_classes) if test
+                else np.arange(self.split))
+        classes = rng.choice(pool, self.n_way, replace=False)
+        s = self.image_size
+
+        def draw(per_class):
+            xs, ys = [], []
+            for yi, c in enumerate(classes):
+                imgs = self.prototypes[c] + 0.3 * rng.randn(
+                    per_class, s, s).astype(np.float32)
+                xs.append(imgs)
+                ys.append(np.full(per_class, yi))
+            return (jnp.asarray(np.concatenate(xs)[..., None]),
+                    jnp.asarray(np.concatenate(ys)))
+
+        return draw(self.k_shot) + draw(self.k_query)
+
+
+# ------------------------------------------------------------------ §5.4
+@dataclasses.dataclass
+class LongTailDataset:
+    """Long-tailed classification: class c has ~ n_max · if^{-c/(C-1)} samples
+    (the Cui et al. exponential profile the paper's CIFAR-10-LT uses)."""
+    n_classes: int = 10
+    imbalance_factor: int = 100
+    n_max: int = 500
+    d: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        # mean separation ~1σ + 10% label noise on the tail: keeps Bayes
+        # accuracy well below 1 so reweighting gains are measurable
+        self.means = 1.0 * rng.randn(self.n_classes, self.d).astype(np.float32)
+        counts = [int(self.n_max * self.imbalance_factor
+                      ** (-c / (self.n_classes - 1)))
+                  for c in range(self.n_classes)]
+        xs, ys = [], []
+        for c, n in enumerate(counts):
+            xs.append(self.means[c] + rng.randn(n, self.d).astype(np.float32))
+            lab = np.full(n, c)
+            flip = rng.rand(n) < 0.1
+            lab[flip] = rng.randint(0, self.n_classes, flip.sum())
+            ys.append(lab)
+        perm = rng.permutation(sum(counts))
+        self.X = jnp.asarray(np.concatenate(xs)[perm])
+        self.y = jnp.asarray(np.concatenate(ys)[perm])
+        # balanced validation/test splits
+        nv = 40
+        xs, ys = [], []
+        for c in range(self.n_classes):
+            xs.append(self.means[c] + rng.randn(nv, self.d).astype(np.float32))
+            ys.append(np.full(nv, c))
+        self.Xv = jnp.asarray(np.concatenate(xs))
+        self.yv = jnp.asarray(np.concatenate(ys))
+
+    def train_batch(self, step: int, batch: int):
+        rng = np.random.RandomState(self.seed + 104729 * step)
+        idx = rng.randint(0, self.X.shape[0], batch)
+        return self.X[idx], self.y[idx]
+
+    def val_batch(self, step: int, batch: int):
+        rng = np.random.RandomState(self.seed + 99991 * step + 1)
+        idx = rng.randint(0, self.Xv.shape[0], batch)
+        return self.Xv[idx], self.yv[idx]
+
+
+# ------------------------------------------------------------------ LM corpus
+@dataclasses.dataclass
+class TokenStream:
+    """Domain-mixture synthetic corpus for LM training.
+
+    Each domain is a depth-1 Markov chain over the vocab with its own
+    transition sharpness; `noisy_domains` emit uniform tokens (no structure) —
+    the bilevel data-reweighting driver should learn to down-weight them.
+    """
+    vocab_size: int
+    seq_len: int
+    n_domains: int = 8
+    noisy_domains: tuple[int, ...] = (6, 7)
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        V = min(self.vocab_size, 512)   # structured sub-vocab
+        self._V = V
+        self.next_tok = rng.randint(0, V, size=(self.n_domains, V))
+
+    def batch(self, step: int, batch_size: int, clean_only: bool = False):
+        """→ {'inputs', 'labels', 'domain', 'mask'} for global step `step`."""
+        rng = np.random.RandomState((self.seed + 31337 * step
+                                     + (7 if clean_only else 0)) % (2**32 - 1))
+        V, S = self._V, self.seq_len
+        if clean_only:
+            domains = rng.choice([d for d in range(self.n_domains)
+                                  if d not in self.noisy_domains], batch_size)
+        else:
+            domains = rng.randint(0, self.n_domains, batch_size)
+        toks = np.empty((batch_size, S + 1), np.int32)
+        toks[:, 0] = rng.randint(0, V, batch_size)
+        for t in range(S):
+            nxt = self.next_tok[domains, toks[:, t]]
+            noise = rng.randint(0, V, batch_size)
+            flip = rng.rand(batch_size) < 0.1
+            nxt = np.where(flip, noise, nxt)
+            nxt = np.where(np.isin(domains, self.noisy_domains),
+                           rng.randint(0, V, batch_size), nxt)
+            toks[:, t + 1] = nxt
+        return {'inputs': jnp.asarray(toks[:, :-1]),
+                'labels': jnp.asarray(toks[:, 1:]),
+                'domain': jnp.asarray(domains),
+                'mask': jnp.ones((batch_size, S), jnp.float32)}

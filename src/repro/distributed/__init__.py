@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (batch_axes, batch_spec, cache_specs,
+                                        named_shardings, param_specs)
+from repro.distributed.compression import (ErrorFeedbackInt8, compressed_psum)
+
+__all__ = ['batch_axes', 'batch_spec', 'cache_specs', 'named_shardings',
+           'param_specs', 'ErrorFeedbackInt8', 'compressed_psum']

@@ -1,0 +1,197 @@
+"""Logical→physical sharding rules (GSPMD PartitionSpecs) for every family.
+
+Policy (DESIGN.md §4):
+  * batch            → ('pod', 'data')     [pod present on the 2-pod mesh]
+  * vocab (padded)   → 'model'
+  * d_ff / d_inner   → 'model'             (Megatron col/row parallel FFN)
+  * attention        → flattened q-head dim over 'model' iff H % model == 0
+                       (llama3 128, mistral 96, yi 32, phi 32, jamba 32,
+                       seamless 16); K/V weights stay replicated when
+                       KV % model != 0 (GQA kv=8 vs model=16) — their
+                       activations broadcast-expand to q-heads locally.
+                       Fallback (qwen2 28H, llama4 40H): row-parallel on
+                       d_model for wq, K/V/O replicated — a deliberate,
+                       measured baseline inefficiency (see §Perf hillclimb).
+  * KV-cache seq     → 'model'             (flash-decoding layout: softmax
+                       stats reduce locally + tiny cross-shard all-reduce,
+                       and 500k caches fit HBM)
+  * FSDP (cfg.fsdp)  → params/opt-state additionally sharded over 'data' on
+                       the largest divisible non-'model' dim (ZeRO-3:
+                       gather-on-use inside the layer scan, reduce-scatter
+                       on grads — inserted by GSPMD)
+
+A dim that does not divide its axis is replicated — rules degrade, never
+error, on any (arch × mesh) combination.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------- mesh helpers
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 0) -> P:
+    return P(batch_axes(mesh), *([None] * extra_dims))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % _axis_size(mesh, axis) == 0
+
+
+# --------------------------------------------------------------- param rules
+def _attn_specs(cfg: ModelConfig, mesh: Mesh, fsdp: str | None,
+                cross: bool = False):
+    """Specs for one attention param dict (trailing dims only)."""
+    m = _axis_size(mesh, 'model')
+    head_ok = cfg.n_heads % m == 0
+    kv_ok = cfg.n_kv_heads % m == 0
+    f = fsdp
+    if head_ok:
+        out = {'wq': P(f, 'model'), 'wo': P('model', f),
+               'wk': P(f, 'model') if kv_ok else P(f, None),
+               'wv': P(f, 'model') if kv_ok else P(f, None)}
+        bias = {'bq': P('model'), 'bk': P('model') if kv_ok else P(None),
+                'bv': P('model') if kv_ok else P(None)}
+    else:
+        # fallback: row-parallel QKV on d_model; O replicated (+fsdp)
+        out = {'wq': P('model', f), 'wk': P('model', f), 'wv': P('model', f),
+               'wo': P(f, None)}
+        bias = {'bq': P(None), 'bk': P(None), 'bv': P(None)}
+    if cfg.qkv_bias and not cross:
+        out.update(bias)
+    return out
+
+
+def _slot_specs(cfg: ModelConfig, mesh: Mesh, mixer: str, ffn: str,
+                with_cross: bool, fsdp: str | None):
+    f = fsdp
+    specs: dict[str, Any] = {'ln1': {'scale': P(None)},
+                             'ln2': {'scale': P(None)}}
+    if mixer == 'attn':
+        specs['mixer'] = _attn_specs(cfg, mesh, f)
+    elif mixer == 'mamba':
+        di_ok = _div(cfg.d_inner, mesh, 'model')
+        dm = 'model' if di_ok else None
+        specs['mixer'] = {
+            'in_proj': P(f, dm), 'conv_w': P(None, dm), 'conv_b': P(dm),
+            'x_proj': P(dm, None), 'dt_proj_w': P(None, dm), 'dt_proj_b': P(dm),
+            'A_log': P(dm, None), 'D': P(dm), 'out_proj': P(dm, f)}
+    else:  # rwkv
+        d_ok = _div(cfg.d_model, mesh, 'model')
+        dm = 'model' if d_ok else None
+        specs['mixer'] = {
+            'mu': P(None, None), 'w_lora_a': P(f, None), 'w_lora_b': P(None, dm),
+            'w0': P(dm), 'bonus': P(None, None),
+            'wr': P(f, dm), 'wk': P(f, dm), 'wv': P(f, dm), 'wg': P(f, dm),
+            'wo': P(dm, f), 'ln_scale': P(None, None),
+            'mu_cm': P(None, None), 'ck': P(f, 'model'),
+            'cv': P('model', f), 'cr': P(f, dm)}
+    if mixer != 'rwkv':
+        if ffn == 'moe':
+            specs['ffn'] = {'router': P(f, None),
+                            'w1': P(None, f, 'model'), 'w3': P(None, f, 'model'),
+                            'w2': P(None, 'model', f)}
+            if cfg.shared_expert:
+                specs['ffn']['shared'] = {'w1': P(f, 'model'),
+                                          'w3': P(f, 'model'),
+                                          'w2': P('model', f)}
+        else:
+            specs['ffn'] = {'w1': P(f, 'model'), 'w3': P(f, 'model'),
+                            'w2': P('model', f)}
+    if with_cross:
+        specs['ln_cross'] = {'scale': P(None)}
+        specs['cross'] = _attn_specs(cfg, mesh, f, cross=True)
+    return specs
+
+
+def _prepend(spec_tree, n: int = 1):
+    """Add leading unsharded dims (the stacked n_blocks axis)."""
+    return jax.tree.map(lambda s: P(*([None] * n), *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """PartitionSpec pytree matching init_params(cfg, ·)'s structure."""
+    fsdp = 'data' if (cfg.fsdp and 'data' in mesh.axis_names) else None
+    emb = {'table': P('model', None)}   # padded vocab always divides
+    specs: dict[str, Any] = {}
+    if cfg.embed_inputs or cfg.is_encdec:
+        specs['embed'] = emb
+    if not (cfg.tie_embeddings and cfg.embed_inputs) or not cfg.embed_inputs:
+        specs['unembed'] = emb
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        specs.pop('unembed', None)
+
+    kinds = cfg.layer_kinds()
+    block = {f'slot{i}': _slot_specs(cfg, mesh, m_, f_, cfg.is_encdec, fsdp)
+             for i, (m_, f_) in enumerate(kinds)}
+    specs['blocks'] = (_prepend(block) if cfg.scan_layers
+                       else [block] * cfg.n_blocks)
+    specs['final_norm'] = {'scale': P(None)}
+    if cfg.is_encdec:
+        enc_block = {'slot0': _slot_specs(cfg, mesh, 'attn', 'dense',
+                                          False, fsdp)}
+        specs['enc_blocks'] = (_prepend(enc_block) if cfg.scan_layers
+                               else [enc_block] * cfg.n_enc_layers)
+        specs['enc_final_norm'] = {'scale': P(None)}
+    return specs
+
+
+# --------------------------------------------------------------- cache rules
+def cache_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """Decode-cache specs: KV sequence axis → 'model', batch → (pod, data)."""
+    b = batch_axes(mesh)
+    slots: dict[str, Any] = {}
+    seq_ax = 'model' if 'model' in mesh.axis_names else None
+    for i, (mixer, _) in enumerate(cfg.layer_kinds()):
+        if mixer == 'attn':
+            slots[f'slot{i}'] = {'k': P(None, b, seq_ax, None, None),
+                                 'v': P(None, b, seq_ax, None, None)}
+        elif mixer == 'mamba':
+            di_ax = 'model' if _div(cfg.d_inner, mesh, 'model') else None
+            slots[f'slot{i}'] = {'conv': P(None, b, None, di_ax),
+                                 'ssm': P(None, b, di_ax, None)}
+        else:
+            d_ax = 'model' if _div(cfg.d_model, mesh, 'model') else None
+            h_ax = 'model' if _div(cfg.d_model // 64, mesh, 'model') else None
+            slots[f'slot{i}'] = {'tm_prev': P(None, b, d_ax),
+                                 'cm_prev': P(None, b, d_ax),
+                                 'wkv': P(None, b, h_ax, None, None)}
+    cache = {'pos': P(), 'slots': slots}
+    if cfg.is_encdec:
+        cache['cross'] = {'k': P(None, b, seq_ax, None, None),
+                          'v': P(None, b, seq_ax, None, None)}
+    return cache
+
+
+# --------------------------------------------------------------- utilities
+def named_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def mirror_specs(template_tree, spec_tree, state_tree):
+    """Give each optimizer-state leaf the spec of the same-shaped param leaf
+    (momentum/Adam moments are param-shaped); anything else replicates."""
+    by_shape: dict[tuple, P] = {}
+    for leaf, spec in zip(jax.tree.leaves(template_tree),
+                          jax.tree.leaves(spec_tree,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        by_shape.setdefault((tuple(leaf.shape)), spec)
+
+    def assign(leaf):
+        return by_shape.get(tuple(getattr(leaf, 'shape', ())), P())
+
+    return jax.tree.map(assign, state_tree)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+<name>.py      pl.pallas_call + explicit BlockSpec VMEM tiling
+ops.py         jit'd public wrappers (interpret=True off-TPU)
+ref.py         pure-jnp oracles (the allclose ground truth in tests)
+
+Kernels: nystrom_gram (tall-skinny CᵀC), woodbury (Cᵀv / Woodbury apply),
+flash_attention (causal GQA forward), rmsnorm. The dry-run keeps the XLA
+twins so HLO cost analysis sees real FLOPs (DESIGN.md §3).
+"""

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: causal flash-attention forward (serving/prefill path).
+
+Grid (B·H, S/q_block): each program owns one query block and streams KV
+blocks through VMEM with the online-softmax recurrence — running max `m`,
+normalizer `l`, and the f32 accumulator live in VMEM scratch for the whole
+KV sweep. Causality skips whole KV blocks past the diagonal via masking
+(`pl.when` guards the compute so skipped blocks cost no MXU work when the
+grid dimension is serialized, which is the TPU default for the minor grid
+axis).
+
+Contract matches ref.flash_attention: q/k/v are (B, S, H, hd) with KV heads
+already GQA-expanded; hd must be ≤ 256 (one VREG tile column).
+
+Training uses the XLA online-softmax twin (models/attention.py) because the
+dry-run roofline must see real HLO FLOPs; this kernel is the TPU serving
+fast path (cfg.use_pallas).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(q_block: int, k_block: int, n_kv: int, scale: float,
+                 causal: bool):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        qi = pl.program_id(1)
+        ki = pl.program_id(2)
+
+        @pl.when(ki == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # whole-block causal skip (past-diagonal KV blocks do no MXU work)
+        run = ((ki * k_block) <= (qi * q_block + q_block - 1)) if causal \
+            else (ki >= 0)
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0].astype(jnp.float32)            # (qb, hd)
+            k = k_ref[0].astype(jnp.float32)            # (kb, hd)
+            v = v_ref[0].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # (qb, kb)
+            if causal:
+                qpos = qi * q_block + jax.lax.broadcasted_iota(
+                    jnp.int32, s.shape, 0)
+                kpos = ki * k_block + jax.lax.broadcasted_iota(
+                    jnp.int32, s.shape, 1)
+                s = jnp.where(qpos >= kpos, s, NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+            m_ref[...] = m_new
+            acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        @pl.when(ki == n_kv - 1)
+        def _finish():
+            denom = jnp.maximum(l_ref[...], 1e-30)
+            o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=('causal', 'scale', 'q_block',
+                                             'k_block', 'interpret'))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    q_block: int = 512, k_block: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q/k/v: (B, S, H, hd), H GQA-expanded. Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    q_block = min(q_block, S)
+    k_block = min(k_block, T)
+    assert S % q_block == 0 and T % k_block == 0, 'seq must divide block'
+
+    # (B, S, H, hd) → (B·H, S, hd)
+    def bh(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], hd)
+
+    qb, kb, vb = bh(q), bh(k), bh(v)
+    n_q = S // q_block
+    n_kv = T // k_block
+    out = pl.pallas_call(
+        _make_kernel(q_block, k_block, n_kv, scale, causal),
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),   # running max m
+            pltpu.VMEM((q_block, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((q_block, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

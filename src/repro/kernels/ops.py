@@ -1,0 +1,67 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CI;
+on TPU backends the kernels compile to Mosaic. ``use_pallas`` model configs
+route through here (serving fast path); the dry-run keeps the XLA twins so
+cost_analysis sees real FLOPs (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.nystrom_gram import nystrom_gram as _gram
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.woodbury import woodbury_apply as _wapply
+from repro.kernels.woodbury import woodbury_ctv as _wctv
+
+
+@functools.cache
+def _default_interpret() -> bool:
+    return jax.default_backend() != 'tpu'
+
+
+def nystrom_gram(C, *, block_p: int = 1024, interpret: bool | None = None):
+    return _gram(C, block_p=block_p,
+                 interpret=_default_interpret() if interpret is None else interpret)
+
+
+def woodbury_ctv(C, v, *, block_p: int = 1024, interpret: bool | None = None):
+    return _wctv(C, v, block_p=block_p,
+                 interpret=_default_interpret() if interpret is None else interpret)
+
+
+def woodbury_apply(C, w, v, rho: float, *, block_p: int = 1024,
+                   interpret: bool | None = None):
+    return _wapply(C, w, v, rho, block_p=block_p,
+                   interpret=_default_interpret() if interpret is None else interpret)
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, *, interpret: bool | None = None):
+    return _rmsnorm(x, scale, eps,
+                    interpret=_default_interpret() if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    q_block: int = 512, k_block: int = 512,
+                    interpret: bool | None = None):
+    return _flash(q, k, v, causal=causal, scale=scale, q_block=q_block,
+                  k_block=k_block,
+                  interpret=_default_interpret() if interpret is None else interpret)
+
+
+def nystrom_ihvp_apply(C, H_KK, v, rho: float, *, interpret: bool | None = None):
+    """Full Eq. 6 apply through the kernel pipeline:
+    t = Cᵀv (kernel) → w = solve(H_KK + CᵀC/ρ, t) (replicated k×k) →
+    u = v/ρ − C w/ρ² (kernel). One C-read per pass."""
+    import jax.numpy as jnp
+    t = woodbury_ctv(C, v, interpret=interpret)
+    gram = nystrom_gram(C, interpret=interpret)
+    M = H_KK + gram / rho
+    M = 0.5 * (M + M.T)
+    d = jnp.sqrt(jnp.clip(jnp.abs(jnp.diagonal(M)), 1e-30, None))
+    w = jnp.linalg.solve(M / d[:, None] / d[None, :]
+                         + 1e-7 * jnp.eye(M.shape[0]), t / d) / d
+    return woodbury_apply(C, w, v, rho, interpret=interpret)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nystrom_gram(C: jax.Array) -> jax.Array:
+    """CᵀC for tall-skinny C (p, k) → (k, k), f32 accumulation."""
+    Cf = C.astype(jnp.float32)
+    return Cf.T @ Cf
+
+
+def woodbury_ctv(C: jax.Array, v: jax.Array) -> jax.Array:
+    """t = Cᵀ v : (p, k), (p,) → (k,)."""
+    return C.astype(jnp.float32).T @ v.astype(jnp.float32)
+
+
+def woodbury_apply(C: jax.Array, w: jax.Array, v: jax.Array,
+                   rho: float) -> jax.Array:
+    """u = v/ρ − C w / ρ² : the p-dimensional Woodbury correction apply."""
+    vf = v.astype(jnp.float32)
+    corr = C.astype(jnp.float32) @ w.astype(jnp.float32)
+    return vf / rho - corr / (rho * rho)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+            * scale.astype(x.dtype))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None
+                    ) -> jax.Array:
+    """Dense-softmax attention. q/k/v: (B, S, H, hd) with H already
+    GQA-expanded (matches the kernel's contract)."""
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5 if scale is None else scale
+    logits = jnp.einsum('bshd,bthd->bhst', q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        T = k.shape[1]
+        mask = jnp.tril(jnp.ones((S, T), bool), T - S)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum('bhst,bthd->bshd', w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

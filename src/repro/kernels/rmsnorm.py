@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: fused RMSNorm (one HBM round-trip instead of three).
+
+Rows (all leading dims flattened) are tiled ``block_rows`` at a time with the
+full feature dim resident in VMEM; mean-of-squares, rsqrt and the scale
+multiply all fuse into the single pass. d must be lane-aligned (it is a
+multiple of 128 for every assigned arch; we pad otherwise — padded columns
+are excluded from the variance via the true-d divisor).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(eps: float, true_d: int):
+    def kernel(x_ref, s_ref, o_ref):
+        x = x_ref[...].astype(jnp.float32)          # (block_rows, d_pad)
+        var = jnp.sum(x * x, axis=-1, keepdims=True) / true_d
+        y = x * jax.lax.rsqrt(var + eps)
+        o_ref[...] = (y.astype(o_ref.dtype)
+                      * s_ref[...].astype(o_ref.dtype))
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=('eps', 'block_rows', 'interpret'))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5, *,
+            block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    n = 1
+    for s in orig_shape[:-1]:
+        n *= s
+    x2 = x.reshape(n, d)
+    d_pad = ((d + 127) // 128) * 128
+    n_pad = ((n + block_rows - 1) // block_rows) * block_rows
+    if (n_pad, d_pad) != (n, d):
+        x2 = jnp.pad(x2, ((0, n_pad - n), (0, d_pad - d)))
+    s2 = jnp.pad(scale, (0, d_pad - d)) if d_pad != d else scale
+    out = pl.pallas_call(
+        _make_kernel(eps, d),
+        grid=(n_pad // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((1, d_pad), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), x.dtype),
+        interpret=interpret,
+    )(x2, s2[None, :])
+    return out[:n, :d].reshape(orig_shape)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernels for the Woodbury IHVP apply (Eq. 6's two p-passes).
+
+Pass 1 — ``ctv``:    t = Cᵀ v           (p, k) × (p,)  → (k,)
+Pass 2 — ``apply``:  u = v/ρ − C w/ρ²   (p, k) × (k,)  → (p,)
+
+Both stream C over a p-blocked grid exactly like nystrom_gram (one HBM read
+of C per pass, VMEM-resident k-vector), so a full Nyström IHVP apply costs
+2 C-reads — the paper's "no iterations" property in memory-traffic form;
+compare l sequential HVPs (l full fwd+bwd passes) for CG/Neumann.
+
+The k-vectors are carried as (1, k_pad) 2-D tiles (TPU VREG lanes want the
+trailing dim = 128-multiple; rank-1 arrays don't map to the vector unit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ctv_kernel(c_ref, v_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c = c_ref[...].astype(jnp.float32)              # (block_p, k_pad)
+    v = v_ref[...].astype(jnp.float32)              # (1, block_p)
+    out_ref[...] += jax.lax.dot_general(
+        v, c, (((1,), (0,)), ((), ())),             # (1,bp) @ (bp,k) → (1,k)
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=('block_p', 'interpret'))
+def woodbury_ctv(C: jax.Array, v: jax.Array, *, block_p: int = 1024,
+                 interpret: bool = False) -> jax.Array:
+    p, k = C.shape
+    k_pad = max(128, ((k + 127) // 128) * 128)
+    p_pad = ((p + block_p - 1) // block_p) * block_p
+    if (p_pad, k_pad) != (p, k):
+        C = jnp.pad(C, ((0, p_pad - p), (0, k_pad - k)))
+    if p_pad != p:
+        v = jnp.pad(v, (0, p_pad - p))
+    out = pl.pallas_call(
+        _ctv_kernel,
+        grid=(p_pad // block_p,),
+        in_specs=[pl.BlockSpec((block_p, k_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block_p), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
+        interpret=interpret,
+    )(C, v[None, :])
+    return out[0, :k]
+
+
+def _make_apply_kernel(rho: float):
+    inv_rho = 1.0 / rho
+    inv_rho2 = 1.0 / (rho * rho)
+
+    def kernel(c_ref, v_ref, w_ref, out_ref):
+        c = c_ref[...].astype(jnp.float32)          # (block_p, k_pad)
+        v = v_ref[...].astype(jnp.float32)          # (1, block_p)
+        w = w_ref[...].astype(jnp.float32)          # (1, k_pad)
+        corr = jax.lax.dot_general(
+            c, w, (((1,), (1,)), ((), ())),         # (bp,k) @ (k,1)ᵀ → (bp,1)
+            preferred_element_type=jnp.float32)
+        out_ref[...] = v * inv_rho - corr.T * inv_rho2
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=('rho', 'block_p', 'interpret'))
+def woodbury_apply(C: jax.Array, w: jax.Array, v: jax.Array, rho: float, *,
+                   block_p: int = 1024, interpret: bool = False) -> jax.Array:
+    """u = v/ρ − C w / ρ² : (p,). ρ is a compile-time constant (hyperparam)."""
+    p, k = C.shape
+    k_pad = max(128, ((k + 127) // 128) * 128)
+    p_pad = ((p + block_p - 1) // block_p) * block_p
+    if (p_pad, k_pad) != (p, k):
+        C = jnp.pad(C, ((0, p_pad - p), (0, k_pad - k)))
+    if p_pad != p:
+        v = jnp.pad(v, (0, p_pad - p))
+    if k_pad != k:
+        w = jnp.pad(w, (0, k_pad - k))
+    out = pl.pallas_call(
+        _make_apply_kernel(rho),
+        grid=(p_pad // block_p,),
+        in_specs=[pl.BlockSpec((block_p, k_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block_p), lambda i: (0, i)),
+                  pl.BlockSpec((1, k_pad), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p_pad), jnp.float32),
+        interpret=interpret,
+    )(C, v[None, :], w[None, :])
+    return out[0, :p]

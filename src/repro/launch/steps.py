@@ -1,0 +1,283 @@
+"""The jit-compiled step functions + their input/output sharding specs.
+
+These are shared by the dry-run (lower + compile against ShapeDtypeStructs)
+and the real trainer/server. Every (architecture × input-shape × mesh)
+combination routes through ``build_step``:
+
+  train_4k    → train_step(params, opt_state, step, batch)
+  prefill_32k → prefill_step(params, batch)         (logits for last position)
+  decode_32k  → serve_step(params, tokens, cache)   (one token, cache update)
+  long_500k   → serve_step with a 524288-entry cache (sub-quadratic archs)
+
+plus the paper's feature as a first-class step:
+
+  hypergrad   → hypergrad_step(params, hparams, batches, rng)
+                (Nyström sketch + IHVP + outer update for data reweighting)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import NystromIHVP, PyTreeIndexer, hypergradient, make_hvp
+from repro.distributed.sharding import (batch_axes, cache_specs, mirror_specs,
+                                        named_shardings, param_specs)
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, train_loss
+from repro.optim import adafactor, adamw, chain, clip_by_global_norm
+
+N_DOMAINS = 64          # outer-parameter dimension for LM data reweighting
+
+
+# --------------------------------------------------------------------- specs
+def _maybe_batch_spec(mesh, global_batch: int, extra: int = 0) -> P:
+    """Batch over (pod, data) when divisible, else replicate (e.g. B=1)."""
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if axes and global_batch % total == 0:
+        return P(axes, *([None] * extra))
+    return P(None, *([None] * extra))
+
+
+def make_optimizer(cfg: ModelConfig):
+    """Adafactor for 100B+ (factored state is what fits HBM), AdamW below."""
+    if cfg.param_count() > 100e9:
+        return chain(clip_by_global_norm(1.0), adafactor(1e-2))
+    return chain(clip_by_global_norm(1.0), adamw(3e-4, weight_decay=0.1))
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any                  # the jit-able python callable
+    args_sds: tuple          # ShapeDtypeStruct pytree per argument
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_sds(cfg: ModelConfig, serve: bool = False):
+    model = build_model(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if serve:   # serving casts float params to bf16 at load
+        tree = jax.tree.map(
+            lambda s: _sds(s.shape, jnp.bfloat16
+                           if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+            tree)
+    return tree
+
+
+def make_batch_sds(cfg: ModelConfig, batch: int, seq: int):
+    b: dict[str, Any] = {'labels': _sds((batch, seq), jnp.int32),
+                         'mask': _sds((batch, seq), jnp.float32)}
+    if cfg.is_encdec:
+        b['inputs'] = _sds((batch, seq), jnp.int32)
+        b['enc_inputs'] = _sds((batch, seq, cfg.d_model), jnp.bfloat16)
+    elif not cfg.embed_inputs:
+        b['inputs'] = _sds((batch, seq, cfg.d_model), jnp.bfloat16)
+        if cfg.mrope:
+            b['positions'] = _sds((batch, 3, seq), jnp.int32)
+    else:
+        b['inputs'] = _sds((batch, seq), jnp.int32)
+    return b
+
+
+def batch_specs(cfg: ModelConfig, mesh, batch: int):
+    bs = _maybe_batch_spec(mesh, batch)
+    specs: dict[str, Any] = {'labels': P(*bs, None), 'mask': P(*bs, None)}
+    if cfg.is_encdec:
+        specs['inputs'] = P(*bs, None)
+        specs['enc_inputs'] = P(*bs, None, None)
+    elif not cfg.embed_inputs:
+        specs['inputs'] = P(*bs, None, None)
+        if cfg.mrope:
+            specs['positions'] = P(*bs, None, None)
+    else:
+        specs['inputs'] = P(*bs, None)
+    return specs
+
+
+# --------------------------------------------------------------------- train
+def build_train_step(cfg: ModelConfig, mesh, global_batch: int, seq: int,
+                     optimizer=None, microbatches: int | None = None) -> StepBundle:
+    optimizer = optimizer or make_optimizer(cfg)
+    # §Perf hillclimb: 300B+ dense trains exceed HBM on one pod without
+    # gradient accumulation — scan over microbatches keeps one microbatch's
+    # remat residuals live at a time (weight gathers repeat per microbatch:
+    # a measured collective/memory tradeoff, see EXPERIMENTS.md §Perf).
+    if microbatches is None:
+        # auto only on the scanned production path — the unrolled analysis
+        # lowering must keep collectives outside any loop body so the
+        # 1/2-block differencing counts them (launch/analysis.py)
+        microbatches = 4 if (cfg.param_count() > 3e11 and cfg.scan_layers) else 1
+
+    def train_step(params, opt_state, step, batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                acc = carry
+                loss, grads = jax.value_and_grad(
+                    functools.partial(train_loss, cfg))(params, mb)
+                return jax.tree.map(jnp.add, acc, grads), loss
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, losses = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(
+                functools.partial(train_loss, cfg))(params, batch)
+        params, opt_state = optimizer.apply(grads, opt_state, params, step)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {'loss': loss, 'grad_norm': gnorm}
+        return params, opt_state, step + 1, metrics
+
+    params_sds = _param_sds(cfg)
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    batch_sds = make_batch_sds(cfg, global_batch, seq)
+
+    pspecs = param_specs(cfg, mesh)
+    ospecs = mirror_specs(params_sds, pspecs, opt_sds)
+    bspecs = batch_specs(cfg, mesh, global_batch)
+    ns = functools.partial(named_shardings, mesh)
+    in_sh = (ns(pspecs), ns(ospecs), NamedSharding(mesh, P()), ns(bspecs))
+    out_sh = (ns(pspecs), ns(ospecs), NamedSharding(mesh, P()),
+              {'loss': NamedSharding(mesh, P()),
+               'grad_norm': NamedSharding(mesh, P())})
+    return StepBundle(
+        fn=train_step,
+        args_sds=(params_sds, opt_sds, _sds((), jnp.int32), batch_sds),
+        in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(0, 1))
+
+
+# ------------------------------------------------------------------- prefill
+def build_prefill_step(cfg: ModelConfig, mesh, global_batch: int,
+                       seq: int) -> StepBundle:
+    def prefill_step(params, batch):
+        logits, _ = forward(cfg, params, batch['inputs'],
+                            positions=batch.get('positions'),
+                            enc_inputs=batch.get('enc_inputs'))
+        return logits[:, -1, :]            # next-token distribution
+
+    params_sds = _param_sds(cfg, serve=True)
+    batch_sds = make_batch_sds(cfg, global_batch, seq)
+    batch_sds.pop('labels')
+    batch_sds.pop('mask')
+    pspecs = param_specs(cfg, mesh)
+    bspecs = batch_specs(cfg, mesh, global_batch)
+    bspecs.pop('labels')
+    bspecs.pop('mask')
+    ns = functools.partial(named_shardings, mesh)
+    out = NamedSharding(mesh, P(*_maybe_batch_spec(mesh, global_batch), 'model'))
+    return StepBundle(fn=prefill_step,
+                      args_sds=(params_sds, batch_sds),
+                      in_shardings=(ns(pspecs), ns(bspecs)),
+                      out_shardings=out)
+
+
+# -------------------------------------------------------------------- decode
+def build_serve_step(cfg: ModelConfig, mesh, global_batch: int,
+                     cache_len: int) -> StepBundle:
+    model = build_model(cfg)
+
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        return logits, cache
+
+    params_sds = _param_sds(cfg, serve=True)
+    cache_sds = jax.eval_shape(
+        functools.partial(model.init_cache, global_batch, cache_len))
+    if cfg.embed_inputs or cfg.is_encdec:
+        tok_sds = _sds((global_batch, 1), jnp.int32)
+        tok_spec = P(*_maybe_batch_spec(mesh, global_batch), None)
+    else:
+        tok_sds = _sds((global_batch, 1, cfg.d_model), jnp.bfloat16)
+        tok_spec = P(*_maybe_batch_spec(mesh, global_batch), None, None)
+
+    pspecs = param_specs(cfg, mesh)
+    cspecs = cache_specs(cfg, mesh)
+    # batch=1 long-context: replace batch axes with None wherever B indivisible
+    bspec = _maybe_batch_spec(mesh, global_batch)
+    if bspec == P(None):
+        cspecs = jax.tree.map(
+            lambda s: P(*[None if isinstance(ax, tuple) or ax in ('pod', 'data')
+                          else ax for ax in s]),
+            cspecs, is_leaf=lambda x: isinstance(x, P))
+    ns = functools.partial(named_shardings, mesh)
+    logits_sh = NamedSharding(mesh, P(*bspec, None, 'model'))
+    return StepBundle(
+        fn=serve_step,
+        args_sds=(params_sds, tok_sds, cache_sds),
+        in_shardings=(ns(pspecs), NamedSharding(mesh, tok_spec), ns(cspecs)),
+        out_shardings=(logits_sh, ns(cspecs)),
+        donate_argnums=(2,))
+
+
+# ----------------------------------------------------------------- hypergrad
+def build_hypergrad_step(cfg: ModelConfig, mesh, global_batch: int, seq: int,
+                         k: int = 8, rho: float = 1e-2) -> StepBundle:
+    """The paper's technique as a pod-scale step: Nyström-IHVP hypergradient
+    of balanced-validation loss w.r.t. per-domain loss weights (§5.4 at LM
+    scale). Lowered/compiled like any other cell for the roofline."""
+    solver = NystromIHVP(k=k, rho=rho, column_chunk=2)
+
+    def inner_loss(params, hparams, batch):
+        w = jax.nn.softmax(hparams['domain_logits']) * N_DOMAINS
+        return train_loss(cfg, params, batch,
+                          example_weights=w[batch['domain']])
+
+    def outer_loss(params, hparams, batch):
+        return train_loss(cfg, params, batch)
+
+    def hypergrad_step(params, hparams, inner_batch, outer_batch, rng):
+        indexer = PyTreeIndexer(params)
+        hg = hypergradient(inner_loss, outer_loss, params, hparams,
+                           inner_batch, outer_batch, solver, rng, indexer)
+        new_h = jax.tree.map(lambda h, g: h - 1e-2 * g, hparams, hg)
+        return new_h
+
+    params_sds = _param_sds(cfg)
+    hparams_sds = {'domain_logits': _sds((N_DOMAINS,), jnp.float32)}
+    batch_sds = make_batch_sds(cfg, global_batch, seq)
+    batch_sds['domain'] = _sds((global_batch,), jnp.int32)
+
+    pspecs = param_specs(cfg, mesh)
+    bspecs = batch_specs(cfg, mesh, global_batch)
+    bspecs['domain'] = _maybe_batch_spec(mesh, global_batch)
+    ns = functools.partial(named_shardings, mesh)
+    rep = NamedSharding(mesh, P())
+    return StepBundle(
+        fn=hypergrad_step,
+        args_sds=(params_sds, hparams_sds, batch_sds, batch_sds,
+                  _sds((2,), jnp.uint32)),
+        in_shardings=(ns(pspecs), {'domain_logits': rep}, ns(bspecs),
+                      ns(bspecs), rep),
+        out_shardings={'domain_logits': rep})
+
+
+def build_step(cfg: ModelConfig, mesh, kind: str, global_batch: int,
+               seq: int) -> StepBundle:
+    if kind == 'train':
+        return build_train_step(cfg, mesh, global_batch, seq)
+    if kind == 'prefill':
+        return build_prefill_step(cfg, mesh, global_batch, seq)
+    if kind == 'decode':
+        return build_serve_step(cfg, mesh, global_batch, seq)
+    if kind == 'hypergrad':
+        return build_hypergrad_step(cfg, mesh, global_batch, seq)
+    raise ValueError(kind)

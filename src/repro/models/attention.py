@@ -1,0 +1,271 @@
+"""GQA attention: full, chunked (online-softmax), and decode-with-cache paths.
+
+Three execution regimes, one math:
+
+* ``S ≤ cfg.attn_chunk``      → plain softmax einsum (small/smoke).
+* ``S  > cfg.attn_chunk``     → chunked online-softmax over query/kv blocks —
+  the XLA twin of the Pallas flash kernel (never materializes S×S logits;
+  required for the 32k prefill shapes).
+* decode                      → single-query attention against a KV cache
+  whose sequence axis is sharded over the ``model`` mesh axis
+  (flash-decoding-style: reductions over the sharded axis lower to
+  local-reduce + tiny all-reduce of (B,H) stats under GSPMD).
+
+GQA is computed by repeating KV heads to the query-head count; under a
+head-sharded layout the repeat is a per-shard slice of a broadcast (no
+communication, no global materialization).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_mrope, apply_rope, cdtype, dense_init,
+                                 pdtype)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- params
+def init_attention(cfg: ModelConfig, rng, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+    dt = pdtype(cfg)
+    p = {'wq': dense_init(ks[0], (d, H * hd), dt),
+         'wk': dense_init(ks[1], (d, KV * hd), dt),
+         'wv': dense_init(ks[2], (d, KV * hd), dt),
+         'wo': dense_init(ks[3], (H * hd, d), dt)}
+    if cfg.qkv_bias and not cross:
+        p['bq'] = jnp.zeros((H * hd,), dt)
+        p['bk'] = jnp.zeros((KV * hd,), dt)
+        p['bv'] = jnp.zeros((KV * hd,), dt)
+    return p
+
+
+def _project_qkv(params, xq, xkv, cfg: ModelConfig, positions, rope: bool,
+                 head_shard: bool = True):
+    """Returns q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd).
+
+    ``head_shard=False`` (decode): the KV cache is *sequence*-sharded over
+    'model' (flash-decoding layout), so head-TP on q would force GSPMD to
+    reshard the whole cache per layer (observed as "involuntary full
+    rematerialization" on llama3 decode); decode keeps heads replicated and
+    lets the softmax statistics reduce over the sharded S axis instead.
+    """
+    ct = cdtype(cfg)
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    wq = params['wq'].astype(ct)
+    q = xq @ wq
+    k = xkv @ params['wk'].astype(ct)
+    v = xkv @ params['wv'].astype(ct)
+    if 'bq' in params:
+        q = q + params['bq'].astype(ct)
+        k = k + params['bk'].astype(ct)
+        v = v + params['bv'].astype(ct)
+    from repro.distributed.ctx import constrain, current_mesh
+    n_heads = cfg.n_heads
+    mesh = current_mesh()
+    if (head_shard and mesh is not None and 'model' in mesh.axis_names
+            and n_heads % mesh.shape['model'] != 0):
+        # §Perf hillclimb (qwen2 28H / llama4 40H vs model=16): zero-pad the
+        # query-head axis to the next multiple of the TP width. Padded heads
+        # have zero queries AND zero wo rows (see below), so the math is
+        # exact and their wq/wo gradients are identically zero; cost is
+        # H_pad/H extra attention FLOPs (≤ +20%) versus 16×-replicated
+        # attention compute without it (measured useful ratio 0.068).
+        m = mesh.shape['model']
+        n_heads = (n_heads + m - 1) // m * m
+        q = jnp.pad(q, ((0, 0), (0, 0),
+                        (0, (n_heads - cfg.n_heads) * cfg.head_dim)))
+    q = q.reshape(B, Sq, n_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    # pin batch + head-TP layout ('model' drops automatically when H ∤ mesh)
+    head_ax = 'model' if head_shard else None
+    q = constrain(q, 'batch', None, head_ax, None)
+    k = constrain(k, 'batch', None, head_ax, None)
+    v = constrain(v, 'batch', None, head_ax, None)
+    if rope:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[:, 0]
+            q = apply_rope(q, pos2d, cfg.rope_theta)
+            k = apply_rope(k, pos2d, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, group: int) -> jax.Array:
+    """(B,S,KV,hd) → (B,S,KV*group,hd). Slice-of-broadcast under sharding."""
+    if group == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, group, hd)) \
+              .reshape(B, S, KV * group, hd)
+
+
+# ------------------------------------------------------------- core attention
+def _full_attention(q, k, v, causal: bool, scale: float):
+    """(B,S,H,hd) × (B,T,H,hd) — materializes (B,H,S,T); small-S path."""
+    logits = jnp.einsum('bshd,bthd->bhst', q, k).astype(jnp.float32) * scale
+    if causal:
+        S, T = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((S, T), bool), T - S)
+        logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum('bhst,bthd->bshd', w, v)
+
+
+def _chunked_attention(q, k, v, causal: bool, scale: float, chunk: int):
+    """Online-softmax flash-style attention in pure XLA (scan over q blocks,
+    inner scan over kv blocks with running (max, sum, acc) stats)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    qc = min(chunk, S)
+    kc = min(chunk, T)
+    assert S % qc == 0 and T % kc == 0, 'sequence must divide attn_chunk'
+    nq, nk = S // qc, T // kc
+
+    q = q.reshape(B, nq, qc, H, hd).transpose(1, 0, 3, 2, 4)   # (nq,B,H,qc,hd)
+    k = k.reshape(B, nk, kc, H, hd).transpose(1, 0, 3, 2, 4)
+    v = v.reshape(B, nk, kc, H, hd).transpose(1, 0, 3, 2, 4)
+
+    # Nested remat: the backward of each q-block recomputes its kv scan, so
+    # only (qc, hd)-sized q-block inputs are saved — without this, the scan
+    # transpose saves every (qc×kc) logit block = the full S² matrix
+    # (measured 2.15 GB × blocks on the 4k dry-run).
+    @jax.checkpoint
+    def q_block(qi_and_blk):
+        qi, qb = qi_and_blk                                     # (B,H,qc,hd)
+
+        def kv_block(carry, ki_and_blk):
+            m, l, acc = carry
+            ki, kb, vb = ki_and_blk
+            logits = jnp.einsum('bhqd,bhkd->bhqk', qb, kb).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                logits = jnp.where(qpos[:, None] >= kpos[None, :], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                'bhqk,bhkd->bhqd', p.astype(qb.dtype), vb).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, H, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, qc), jnp.float32),
+                jnp.zeros((B, H, qc, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(nk), k, v))
+        return (acc / jnp.clip(l, 1e-30)[..., None]).astype(qb.dtype)
+
+    out = jax.lax.map(q_block, (jnp.arange(nq), q))             # (nq,B,H,qc,hd)
+    return out.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+
+
+def multihead_attention(params, xq, cfg: ModelConfig, *, xkv=None,
+                        positions=None, causal=True, rope=True):
+    """Training/prefill attention. xq: (B,S,d). Returns (B,S,d)."""
+    xkv = xq if xkv is None else xkv
+    B, S, _ = xq.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(params, xq, xkv, cfg, positions, rope)
+    group = q.shape[2] // cfg.n_kv_heads    # padded-head aware (see _project_qkv)
+    k = _expand_kv(k, group)
+    v = _expand_kv(v, group)
+    scale = cfg.head_dim ** -0.5
+    if cfg.use_pallas and S > cfg.attn_chunk:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal, scale=scale)
+    elif S > cfg.attn_chunk or k.shape[1] > cfg.attn_chunk:
+        out = _chunked_attention(q, k, v, causal, scale, cfg.attn_chunk)
+    else:
+        out = _full_attention(q, k, v, causal, scale)
+    ct = cdtype(cfg)
+    wo = params['wo'].astype(ct)
+    pad_rows = q.shape[2] * cfg.head_dim - wo.shape[0]
+    if pad_rows:   # zero rows ⇒ padded heads contribute nothing (exact math)
+        wo = jnp.pad(wo, ((0, pad_rows), (0, 0)))
+    return out.reshape(B, S, -1) @ wo
+
+
+# ----------------------------------------------------------------- decoding
+def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    """Cache layout (layers, B, S, KV, hd): S is sharded over `model`,
+    B over (`pod`,`data`) — see distributed/sharding.py rules."""
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {'k': jnp.zeros(shape, dtype), 'v': jnp.zeros(shape, dtype),
+            'pos': jnp.zeros((), jnp.int32)}
+
+
+def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    """Single-token decode. x: (B,1,d); cache_k/v: (B,Smax,KV,hd); pos: ().
+
+    Returns (out (B,1,d), new_k, new_v). Softmax statistics reduce over the
+    sharded S axis (local reduce + (B,H) all-reduce under GSPMD) — the XLA
+    formulation of flash-decoding.
+    """
+    B, _, _ = x.shape
+    Smax = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[:, None, :], (B, 3, 1))
+    q, k_new, v_new = _project_qkv(params, x, x, cfg, positions, rope=True,
+                                   head_shard=False)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+
+    from repro.distributed.ctx import constrain
+    kx = _expand_kv(cache_k.astype(q.dtype), cfg.group_size)   # (B,Smax,H,hd)
+    vx = _expand_kv(cache_v.astype(q.dtype), cfg.group_size)
+    # flash-decoding layout: keep the S axis of everything derived from the
+    # cache on 'model' — otherwise the einsum partitioner flips to kv-head
+    # sharding and "involuntary full rematerialization" replicates (and
+    # f32-copies) the entire cache per layer (measured on llama3 decode).
+    kx = constrain(kx, 'batch', 'model', None, None)
+    vx = constrain(vx, 'batch', 'model', None, None)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum('bshd,bthd->bhst', q, kx).astype(jnp.float32) * scale
+    logits = constrain(logits, 'batch', None, None, 'model')
+    valid = (jnp.arange(Smax) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum('bhst,bthd->bshd', w, vx)
+    ct = cdtype(cfg)
+    out = out.reshape(B, 1, -1) @ params['wo'].astype(ct)
+    return out, cache_k, cache_v
+
+
+def cross_attention_cache(params, enc_out, cfg: ModelConfig):
+    """Precompute encoder-side K/V once for the whole decode."""
+    ct = cdtype(cfg)
+    B, T, _ = enc_out.shape
+    k = (enc_out @ params['wk'].astype(ct)).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ params['wv'].astype(ct)).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def cross_attention(params, xq, k, v, cfg: ModelConfig):
+    """Decoder→encoder attention (no mask, no rope)."""
+    ct = cdtype(cfg)
+    B, S, _ = xq.shape
+    q = (xq @ params['wq'].astype(ct)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    kx = _expand_kv(k.astype(q.dtype), cfg.group_size)
+    vx = _expand_kv(v.astype(q.dtype), cfg.group_size)
+    scale = cfg.head_dim ** -0.5
+    if S > cfg.attn_chunk or kx.shape[1] > cfg.attn_chunk:
+        out = _chunked_attention(q, kx, vx, False, scale, cfg.attn_chunk)
+    else:
+        out = _full_attention(q, kx, vx, False, scale)
+    return out.reshape(B, S, -1) @ params['wo'].astype(ct)

@@ -1,0 +1,143 @@
+"""Shared building blocks: init helpers, RMSNorm, RoPE / M-RoPE, SwiGLU MLP.
+
+All modules are purely functional: ``init_*`` returns a param subtree,
+``apply`` is a free function. Compute happens in cfg.compute_dtype with f32
+accumulation at reductions; params live in cfg.param_dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _dtype(name: str):
+    return {'float32': jnp.float32, 'bfloat16': jnp.bfloat16,
+            'float16': jnp.float16}[name]
+
+
+def pdtype(cfg: ModelConfig):
+    return _dtype(cfg.param_dtype)
+
+
+def cdtype(cfg: ModelConfig):
+    return _dtype(cfg.compute_dtype)
+
+
+def dense_init(rng, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (what Llama/Mistral releases use)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (std * jax.random.truncated_normal(rng, -3, 3, shape)).astype(dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def init_rmsnorm(cfg: ModelConfig, dim: int | None = None):
+    return {'scale': jnp.ones((dim or cfg.d_model,), pdtype(cfg))}
+
+
+def rmsnorm(params, x, eps: float, use_pallas: bool = False):
+    if use_pallas:
+        from repro.kernels.ops import rmsnorm as rmsnorm_kernel
+        return rmsnorm_kernel(x, params['scale'], eps)
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * params['scale'].astype(dt)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                    # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: (B, 3, S) = (temporal, h, w) ids.
+
+    The hd/2 frequency slots are partitioned into t/h/w sections; each section
+    rotates by its own positional component (dynamic-resolution vision needs
+    2-D spatial phase; text degenerates to all-three-equal = plain RoPE).
+    """
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                    # (hd/2,)
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    # per-slot positional component: (B, S, hd/2)
+    comp = jnp.transpose(positions, (0, 2, 1)).astype(jnp.float32)  # (B, S, 3)
+    pos = jnp.take(comp, sec, axis=-1)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- SwiGLU MLP
+def init_mlp(cfg: ModelConfig, rng) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d, f, dt = cfg.d_model, cfg.d_ff, pdtype(cfg)
+    return {'w1': dense_init(k1, (d, f), dt),
+            'w3': dense_init(k2, (d, f), dt),
+            'w2': dense_init(k3, (f, d), dt)}
+
+
+def _act(name: str):
+    return {'silu': jax.nn.silu, 'gelu': jax.nn.gelu,
+            'relu': jax.nn.relu, 'leaky_relu': lambda x: jax.nn.leaky_relu(x, 0.01)}[name]
+
+
+def mlp(params, x, cfg: ModelConfig):
+    from repro.distributed.ctx import constrain
+    ct = cdtype(cfg)
+    h = _act(cfg.act)(x @ params['w1'].astype(ct)) * (x @ params['w3'].astype(ct))
+    h = constrain(h, 'batch', None, 'model')    # col-parallel hidden
+    return h @ params['w2'].astype(ct)
+
+
+# ----------------------------------------------------------------- embeddings
+def init_embedding(cfg: ModelConfig, rng) -> dict:
+    return {'table': dense_init(rng, (cfg.padded_vocab, cfg.d_model),
+                                pdtype(cfg), scale=1.0)}
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return params['table'].astype(cdtype(cfg))[tokens]
+
+
+def unembed(params, x, cfg: ModelConfig):
+    """Logits against the (padded) vocab; pad slots masked to -inf."""
+    logits = x @ params['table'].astype(cdtype(cfg)).T
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Token-mean CE in f32 with optional z-loss (logit-norm stabilizer)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    if mask is not None:
+        return (loss * mask).sum() / jnp.clip(mask.sum(), 1, None)
+    return loss.mean()

@@ -1,0 +1,140 @@
+"""RWKV6 "Finch" block: data-dependent decay linear attention + channel mix.
+
+The headline RWKV6 feature — per-channel, per-token decay w_t produced from
+the input via a low-rank MLP — is kept faithfully; token-shift mixing uses
+static μ coefficients (RWKV5-style) for the non-decay streams. The wkv state
+is (H, hd, hd) per sequence: O(1) decode memory, which is why rwkv6 runs the
+long_500k shape.
+
+Same chunked-checkpoint scan strategy as ssm.py (boundaries saved, interiors
+recomputed) to bound training activation memory at O(S/chunk) states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // 64          # RWKV6 uses fixed 64-dim heads
+
+
+def init_rwkv_block(cfg: ModelConfig, rng) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lora = 64
+    ks = jax.random.split(rng, 10)
+    dt = pdtype(cfg)
+    return {
+        # time mix
+        'mu': 0.5 * jnp.ones((5, d), dt),          # shift-mix for r,k,v,g,w
+        'w_lora_a': dense_init(ks[0], (d, lora), dt),
+        'w_lora_b': dense_init(ks[1], (lora, d), dt, scale=1e-2),
+        'w0': jnp.full((d,), -5.0, dt),            # decay bias (slow decay)
+        'bonus': jnp.zeros((_n_heads(cfg), 64), dt),  # "u" current-token bonus
+        'wr': dense_init(ks[2], (d, d), dt),
+        'wk': dense_init(ks[3], (d, d), dt),
+        'wv': dense_init(ks[4], (d, d), dt),
+        'wg': dense_init(ks[5], (d, d), dt),
+        'wo': dense_init(ks[6], (d, d), dt),
+        'ln_scale': jnp.ones((_n_heads(cfg), 64), dt),  # per-head groupnorm
+        # channel mix
+        'mu_cm': 0.5 * jnp.ones((2, d), dt),
+        'ck': dense_init(ks[7], (d, f), dt),
+        'cv': dense_init(ks[8], (f, d), dt),
+        'cr': dense_init(ks[9], (d, d), dt),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with ``prev`` as the t=0 predecessor. (B,S,d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_streams(params, x, x_prev, cfg: ModelConfig):
+    ct = cdtype(cfg)
+    H = _n_heads(cfg)
+    xs = _shift(x, x_prev)
+    mu = params['mu'].astype(ct)
+    mix = [x + (xs - x) * mu[i] for i in range(5)]
+    r = mix[0] @ params['wr'].astype(ct)
+    k = mix[1] @ params['wk'].astype(ct)
+    v = mix[2] @ params['wv'].astype(ct)
+    g = jax.nn.silu(mix[3] @ params['wg'].astype(ct))
+    # data-dependent decay (the RWKV6 novelty): w ∈ (0,1) per channel/token
+    w_raw = params['w0'].astype(jnp.float32) + (
+        jnp.tanh(mix[4] @ params['w_lora_a'].astype(ct)).astype(jnp.float32)
+        @ params['w_lora_b'].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_raw))                        # (B,S,d)
+
+    def heads(t):
+        B, S, _ = t.shape
+        return t.reshape(B, S, H, 64)
+    return heads(r), heads(k), heads(v), g, heads(w)
+
+
+def _wkv_step(state, rkvw, bonus):
+    """state: (B,H,64,64) keyed [k, v]; returns y_t (B,H,64)."""
+    r, k, v, w = rkvw                                   # (B,H,64) each
+    att = state + jnp.einsum('bhk,bhv->bhkv', bonus * k, v)
+    y = jnp.einsum('bhk,bhkv->bhv', r, att)
+    state = state * w[..., None] + jnp.einsum('bhk,bhv->bhkv', k, v)
+    return state, y
+
+
+def rwkv_time_mix(params, x, x_prev, state, cfg: ModelConfig,
+                  chunk: int = 64):
+    """x: (B,S,d). Returns (out, new_x_prev, new_state)."""
+    ct = cdtype(cfg)
+    B, S, d = x.shape
+    H = _n_heads(cfg)
+    r, k, v, g, w = _time_mix_streams(params, x, x_prev, cfg)
+    bonus = jnp.exp(params['bonus'].astype(jnp.float32))
+
+    def step(st, inp):
+        return _wkv_step(st, inp, bonus)
+
+    xs = jax.tree.map(lambda t: t.transpose(1, 0, 2, 3).astype(jnp.float32),
+                      (r, k, v, w))
+    if S % chunk == 0 and S > chunk:
+        xs = jax.tree.map(lambda a: a.reshape(S // chunk, chunk, *a.shape[1:]), xs)
+
+        def chunk_body(st, inp):
+            return jax.checkpoint(
+                lambda ss, ii: jax.lax.scan(step, ss, ii))(st, inp)
+
+        state, ys = jax.lax.scan(chunk_body, state, xs)
+        ys = ys.reshape(S, B, H, 64)
+    else:
+        state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3)                        # (B,S,H,64)
+
+    # per-head groupnorm, then gate and project
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5) * params['ln_scale'].astype(jnp.float32)
+    y = (y.reshape(B, S, d).astype(ct) * g) @ params['wo'].astype(ct)
+    return y, x[:, -1, :], state
+
+
+def rwkv_channel_mix(params, x, x_prev, cfg: ModelConfig):
+    ct = cdtype(cfg)
+    xs = _shift(x, x_prev)
+    mu = params['mu_cm'].astype(ct)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ params['ck'].astype(ct)))
+    r = jax.nn.sigmoid(xr @ params['cr'].astype(ct))
+    return r * (k @ params['cv'].astype(ct)), x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    """Decode carry per block: token-shift predecessors + wkv matrix state.
+    (Prefill/train start from zeros; the transformer block threads these —
+    decode is just the S=1 case of rwkv_time_mix/rwkv_channel_mix.)"""
+    H = _n_heads(cfg)
+    return {'tm_prev': jnp.zeros((batch, cfg.d_model), jnp.float32),
+            'cm_prev': jnp.zeros((batch, cfg.d_model), jnp.float32),
+            'wkv': jnp.zeros((batch, H, 64, 64), jnp.float32)}

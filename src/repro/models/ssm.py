@@ -1,0 +1,134 @@
+"""Mamba-1 selective SSM block (Jamba's mixer) — scan form + O(1) decode.
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel is replaced by
+a chunked `lax.scan` over time with `jax.checkpoint` on chunk interiors —
+boundaries are saved, interiors recomputed in the backward pass, keeping the
+activation footprint at O(S/chunk · B·d_inner·d_state) instead of O(S · ...).
+Decode carries (conv window, ssm state) — constant memory in sequence length,
+which is what qualifies Jamba for the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype
+
+
+def init_mamba(cfg: ModelConfig, rng) -> dict:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    ks = jax.random.split(rng, 6)
+    dt = pdtype(cfg)
+    return {
+        'in_proj': dense_init(ks[0], (d, 2 * di), dt),
+        'conv_w': dense_init(ks[1], (cfg.d_conv, di), dt, scale=cfg.d_conv ** -0.5),
+        'conv_b': jnp.zeros((di,), dt),
+        'x_proj': dense_init(ks[2], (di, 2 * ds + 1), dt),   # → (B, C, dt)
+        'dt_proj_w': dense_init(ks[3], (1, di), dt, scale=1.0),
+        'dt_proj_b': jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))).astype(dt),
+        'A_log': jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(dt),
+        'D': jnp.ones((di,), dt),
+        'out_proj': dense_init(ks[5], (di, d), dt),
+    }
+
+
+def _ssm_inputs(params, x, cfg: ModelConfig):
+    """Shared front half: conv + selective (Δ, B̄, C) construction.
+    x: (B, S, d). Returns u, z, dt_, Bc, Cc and A."""
+    ct = cdtype(cfg)
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = x @ params['in_proj'].astype(ct)                   # (B, S, 2di)
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time
+    w = params['conv_w'].astype(ct)                         # (K, di)
+    pad = jnp.pad(u, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    u = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(cfg.d_conv))
+    u = jax.nn.silu(u + params['conv_b'].astype(ct))
+
+    bcd = u @ params['x_proj'].astype(ct)                   # (B, S, 2ds+1)
+    Bc = bcd[..., :ds].astype(jnp.float32)
+    Cc = bcd[..., ds:2 * ds].astype(jnp.float32)
+    dt_raw = bcd[..., -1:] @ params['dt_proj_w'].astype(ct) # (B, S, di)
+    dt_ = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + params['dt_proj_b'].astype(jnp.float32))
+    A = -jnp.exp(params['A_log'].astype(jnp.float32))       # (di, ds)
+    return u, z, dt_, Bc, Cc, A
+
+
+def mamba_scan(params, x, cfg: ModelConfig, chunk: int = 64):
+    """Training/prefill path. x: (B,S,d) → (B,S,d)."""
+    ct = cdtype(cfg)
+    B, S, d = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    u, z, dt_, Bc, Cc, A = _ssm_inputs(params, x, cfg)
+
+    decay = jnp.exp(dt_[..., None] * A)                     # (B,S,di,ds)
+    drive = (dt_ * u.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+    def step(h, inp):
+        dec, drv, c = inp                                   # (B,di,ds) ×2, (B,ds)
+        h = h * dec + drv
+        y = jnp.einsum('bdn,bn->bd', h, c)
+        return h, y
+
+    def chunk_body(h, inp):
+        inner = lambda hh, ii: step(hh, ii)
+        h, ys = jax.checkpoint(
+            lambda hh, ii: jax.lax.scan(inner, hh, ii))(h, inp)
+        return h, ys
+
+    xs = (decay.transpose(1, 0, 2, 3), drive.transpose(1, 0, 2, 3),
+          Cc.transpose(1, 0, 2))
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    if S % chunk == 0 and S > chunk:
+        xs = jax.tree.map(lambda a: a.reshape(S // chunk, chunk, *a.shape[1:]), xs)
+        _, ys = jax.lax.scan(chunk_body, h0, xs)
+        ys = ys.reshape(S, B, di)
+    else:
+        _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(ct)                    # (B,S,di)
+
+    y = y + u * params['D'].astype(ct)
+    y = y * jax.nn.silu(z)
+    return y @ params['out_proj'].astype(ct)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    return {'conv': jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
+            'ssm': jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32)}
+
+
+def mamba_decode(params, x, state, cfg: ModelConfig):
+    """Single-step decode. x: (B,1,d); state O(1) in sequence length."""
+    ct = cdtype(cfg)
+    B = x.shape[0]
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = x[:, 0, :] @ params['in_proj'].astype(ct)
+    u, z = jnp.split(xz, 2, axis=-1)                        # (B, di)
+
+    window = jnp.concatenate([state['conv'].astype(ct), u[:, None, :]], axis=1)
+    w = params['conv_w'].astype(ct)
+    u_conv = jnp.einsum('bkd,kd->bd', window, w) + params['conv_b'].astype(ct)
+    u_conv = jax.nn.silu(u_conv)
+    new_conv = window[:, 1:, :].astype(jnp.float32)
+
+    bcd = u_conv @ params['x_proj'].astype(ct)
+    Bc = bcd[..., :ds].astype(jnp.float32)
+    Cc = bcd[..., ds:2 * ds].astype(jnp.float32)
+    dt_raw = bcd[..., -1:] @ params['dt_proj_w'].astype(ct)
+    dt_ = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + params['dt_proj_b'].astype(jnp.float32))
+    A = -jnp.exp(params['A_log'].astype(jnp.float32))
+
+    h = state['ssm'] * jnp.exp(dt_[..., None] * A) \
+        + (dt_ * u_conv.astype(jnp.float32))[..., None] * Bc[:, None, :]
+    y = jnp.einsum('bdn,bn->bd', h, Cc).astype(ct)
+    y = y + u_conv * params['D'].astype(ct)
+    y = y * jax.nn.silu(z)
+    out = (y @ params['out_proj'].astype(ct))[:, None, :]
+    return out, {'conv': new_conv, 'ssm': h}

@@ -1,0 +1,404 @@
+"""Unified decoder (and encoder-decoder) transformer over all families.
+
+Layers are grouped into *blocks* of ``cfg.block_period`` slots (the lcm of the
+attention/MoE interleave cycles), block params are stacked with a leading
+``n_blocks`` axis, and depth is a single ``lax.scan`` — HLO size is O(1) in
+depth, which keeps 126-layer pod-scale compiles tractable and is how MaxText-
+class trainers are built.
+
+Public surface (``build_model``):
+  init(rng)                                  → params
+  forward(params, batch)                     → logits (+aux)
+  train_loss(params, batch, weights)         → scalar  (bilevel inner loss)
+  init_cache(batch, max_len)                 → decode cache
+  decode_step(params, inputs, cache)         → logits, cache
+  encode(params, enc_inputs)                 → encoder states  (enc-dec only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (cdtype, cross_entropy, dense_init, embed,
+                                 init_embedding, init_mlp, init_rmsnorm, mlp,
+                                 pdtype, rmsnorm, unembed)
+
+
+# ---------------------------------------------------------------------- init
+def _init_slot(cfg: ModelConfig, rng, mixer: str, ffn: str,
+               with_cross: bool) -> dict:
+    ks = jax.random.split(rng, 6)
+    p: dict[str, Any] = {'ln1': init_rmsnorm(cfg), 'ln2': init_rmsnorm(cfg)}
+    if mixer == 'attn':
+        p['mixer'] = attn.init_attention(cfg, ks[0])
+    elif mixer == 'mamba':
+        p['mixer'] = ssm_lib.init_mamba(cfg, ks[0])
+    else:                                   # rwkv: ln2+ffn feed channel-mix
+        p['mixer'] = rwkv_lib.init_rwkv_block(cfg, ks[0])
+    if mixer != 'rwkv':
+        if ffn == 'moe':
+            p['ffn'] = moe_lib.init_moe(cfg, ks[1])
+        else:
+            p['ffn'] = init_mlp(cfg, ks[1])
+    if with_cross:
+        p['ln_cross'] = init_rmsnorm(cfg)
+        p['cross'] = attn.init_attention(cfg, ks[2], cross=True)
+    return p
+
+
+def _init_blocks(cfg: ModelConfig, rng, n_blocks: int, with_cross: bool) -> dict:
+    kinds = cfg.layer_kinds()
+    slot_keys = jax.random.split(rng, len(kinds))
+
+    def init_block(block_rng):
+        sks = jax.random.split(block_rng, len(kinds))
+        return {f'slot{i}': _init_slot(cfg, sks[i], m, f, with_cross)
+                for i, (m, f) in enumerate(kinds)}
+
+    block_rngs = jax.random.split(rng, n_blocks)
+    if cfg.scan_layers:
+        return jax.vmap(init_block)(block_rngs)     # leading n_blocks axis
+    return [init_block(r) for r in block_rngs]
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    k_emb, k_blocks, k_enc, k_unemb = jax.random.split(rng, 4)
+    params: dict[str, Any] = {}
+    if cfg.embed_inputs:
+        params['embed'] = init_embedding(cfg, k_emb)
+        if not cfg.tie_embeddings:
+            params['unembed'] = init_embedding(cfg, k_unemb)
+    else:
+        # modality frontend is a stub: inputs arrive as (B, S, d) embeddings
+        params['unembed'] = init_embedding(cfg, k_unemb)
+    params['blocks'] = _init_blocks(cfg, k_blocks, cfg.n_blocks, cfg.is_encdec)
+    params['final_norm'] = init_rmsnorm(cfg)
+    if cfg.is_encdec:
+        enc_cfg = dataclasses.replace(cfg, ssm_kind=None, n_experts=0,
+                                      moe_every=1, attn_every=1)
+        params['enc_blocks'] = _init_blocks(enc_cfg, k_enc,
+                                            cfg.n_enc_layers, False)
+        params['enc_final_norm'] = init_rmsnorm(cfg)
+        params['embed'] = init_embedding(cfg, k_emb)  # decoder text embeddings
+    return params
+
+
+# ------------------------------------------------------------------- forward
+def _apply_slot(cfg: ModelConfig, sp: dict, x, positions, mixer: str,
+                ffn: str, causal: bool, enc_out=None):
+    """One layer slot (pre-norm residual). Returns (x, aux)."""
+    aux = jnp.float32(0.0)
+    if mixer == 'rwkv':
+        B = x.shape[0]
+        zeros_prev = jnp.zeros((B, cfg.d_model), x.dtype)
+        state = rwkv_lib.init_rwkv_state(cfg, B)
+        h, _, _ = rwkv_lib.rwkv_time_mix(sp['mixer'], rmsnorm(
+            sp['ln1'], x, cfg.norm_eps), zeros_prev, state['wkv'], cfg)
+        x = x + h
+        h, _ = rwkv_lib.rwkv_channel_mix(sp['mixer'], rmsnorm(
+            sp['ln2'], x, cfg.norm_eps), zeros_prev, cfg)
+        return x + h, aux
+
+    h = rmsnorm(sp['ln1'], x, cfg.norm_eps, cfg.use_pallas)
+    if mixer == 'attn':
+        h = attn.multihead_attention(sp['mixer'], h, cfg,
+                                     positions=positions, causal=causal)
+    else:
+        h = ssm_lib.mamba_scan(sp['mixer'], h, cfg)
+    x = x + h
+    if enc_out is not None:
+        h = rmsnorm(sp['ln_cross'], x, cfg.norm_eps)
+        h = attn.cross_attention(
+            sp['cross'],
+            h,
+            *attn.cross_attention_cache(sp['cross'], enc_out, cfg),
+            cfg)
+        x = x + h
+    h = rmsnorm(sp['ln2'], x, cfg.norm_eps, cfg.use_pallas)
+    if ffn == 'moe':
+        h, aux = moe_lib.moe_ffn(sp['ffn'], h, cfg)
+    else:
+        h = mlp(sp['ffn'], h, cfg)
+    return x + h, aux
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == 'none':
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == 'dots' else
+              jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_blocks(cfg: ModelConfig, blocks, x, positions, kinds, causal,
+                enc_out=None):
+    from repro.distributed.ctx import constrain
+
+    seq_ax = 'model' if cfg.seq_shard else None
+
+    def block_fn(x, block_params):
+        aux = jnp.float32(0.0)
+        # pin batch → (pod, data); optionally Megatron-SP sequence sharding
+        # of the residual stream (checkpointed carries shrink by the model-
+        # axis width; attention/FFN re-gather at their TP boundaries)
+        x = constrain(x, 'batch', seq_ax, None)
+        for i, (mixer, ffn) in enumerate(kinds):
+            x, a = _apply_slot(cfg, block_params[f'slot{i}'], x, positions,
+                               mixer, ffn, causal, enc_out)
+            x = constrain(x, 'batch', seq_ax, None)
+            aux = aux + a
+        return x, aux
+
+    if cfg.scan_layers:
+        body = _remat_wrap(cfg, block_fn)
+        x, auxs = jax.lax.scan(lambda c, bp: body(c, bp), x, blocks)
+        return x, auxs.sum()
+    aux = jnp.float32(0.0)
+    for bp in blocks:
+        x, a = block_fn(x, bp)
+        aux = aux + a
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, inputs, positions=None,
+            enc_inputs=None):
+    """inputs: (B,S) int tokens if cfg.embed_inputs else (B,S,d) embeddings.
+    Returns (logits (B,S,V_padded), aux_loss)."""
+    ct = cdtype(cfg)
+    if cfg.is_encdec or cfg.embed_inputs:
+        # enc-dec: decoder side consumes text tokens even when the encoder
+        # frontend is an embedding stub (embed_inputs=False).
+        x = embed(params['embed'], inputs, cfg)
+    else:
+        x = inputs.astype(ct)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[:, None, :], (B, 3, S))
+
+    enc_out = None
+    if cfg.is_encdec:
+        assert enc_inputs is not None, 'enc-dec needs encoder inputs'
+        enc_out = encode(cfg, params, enc_inputs)
+
+    from repro.distributed.ctx import constrain
+    x = constrain(x, 'batch', None, None)
+    x, aux = _run_blocks(cfg, params['blocks'], x, positions,
+                         cfg.layer_kinds(), causal=True, enc_out=enc_out)
+    x = rmsnorm(params['final_norm'], x, cfg.norm_eps)
+    table = params['embed'] if cfg.tie_embeddings else params['unembed']
+    logits = unembed(table, x, cfg)
+    return constrain(logits, 'batch', None, 'model'), aux
+
+
+def encode(cfg: ModelConfig, params, enc_inputs):
+    """Encoder stack over precomputed frame/patch embeddings (B, T, d)."""
+    x = enc_inputs.astype(cdtype(cfg))
+    B, T = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    # encoder blocks are built period-1 dense-attention (see init_params)
+    x, _ = _run_blocks(cfg, params['enc_blocks'], x, positions,
+                       [('attn', 'dense')], causal=False)
+    return rmsnorm(params['enc_final_norm'], x, cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- losses
+def train_loss(cfg: ModelConfig, params, batch, example_weights=None):
+    """Next-token CE (the bilevel *inner* objective f).
+
+    ``example_weights``: optional (B,) per-example loss weights — the outer
+    parameters of the data-reweighting task (§5.4) enter here.
+    """
+    logits, aux = forward(cfg, params, batch['inputs'],
+                          positions=batch.get('positions'),
+                          enc_inputs=batch.get('enc_inputs'))
+    labels = batch['labels']
+    mask = batch.get('mask')
+    # Sharded-vocab-safe CE: every reduction below is over the (possibly
+    # 'model'-sharded) V axis, which GSPMD lowers to local-reduce + tiny
+    # all-reduce; the label pick is a fused select+max (no one-hot buffer,
+    # no take_along_axis cross-shard gather). Keeping logits bf16 with f32
+    # reduction accumulators avoids a (B,S,V) f32 copy.
+    V = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    is_label = iota == labels[..., None]
+    m = jnp.max(logits, axis=-1).astype(jnp.float32)         # (B, S)
+    sumexp = jnp.sum(jnp.exp(logits.astype(jnp.float32)
+                             - m[..., None]), axis=-1)
+    lse = m + jnp.log(sumexp)
+    ll = jnp.max(jnp.where(is_label, logits,
+                           jnp.finfo(logits.dtype).min),
+                 axis=-1).astype(jnp.float32)
+    tok_loss = lse - ll                                     # (B, S)
+    if mask is None:
+        mask = jnp.ones_like(tok_loss)
+    if example_weights is not None:
+        mask = mask * example_weights[:, None]
+    loss = (tok_loss * mask).sum() / jnp.clip(mask.sum(), 1e-6, None)
+    return loss + aux
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    """Stacked per-block decode cache (leading n_blocks axis per slot)."""
+    dtype = dtype or cdtype(cfg)
+    nb = cfg.n_blocks
+    cache: dict[str, Any] = {'pos': jnp.zeros((), jnp.int32)}
+    slots = {}
+    for i, (mixer, _) in enumerate(cfg.layer_kinds()):
+        if mixer == 'attn':
+            shape = (nb, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            slots[f'slot{i}'] = {'k': jnp.zeros(shape, dtype),
+                                 'v': jnp.zeros(shape, dtype)}
+        elif mixer == 'mamba':
+            st = ssm_lib.init_mamba_state(cfg, batch)
+            slots[f'slot{i}'] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nb,) + a.shape), st)
+        else:
+            st = rwkv_lib.init_rwkv_state(cfg, batch)
+            slots[f'slot{i}'] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nb,) + a.shape), st)
+    cache['slots'] = slots
+    if cfg.is_encdec:
+        shape = (nb, batch, cfg.cross_len, cfg.n_kv_heads, cfg.head_dim)
+        cache['cross'] = {'k': jnp.zeros(shape, dtype),
+                          'v': jnp.zeros(shape, dtype)}
+    return cache
+
+
+def fill_cross_cache(cfg: ModelConfig, params, cache, enc_out):
+    """Precompute encoder-side K/V for every decoder layer (enc-dec decode)."""
+    def per_block(bp):
+        ks, vs = [], []
+        for i in range(len(cfg.layer_kinds())):
+            k, v = attn.cross_attention_cache(bp[f'slot{i}']['cross'],
+                                              enc_out, cfg)
+            ks.append(k)
+            vs.append(v)
+        return jnp.stack(ks), jnp.stack(vs)   # (n_slots, B, T, KV, hd)
+
+    if cfg.scan_layers:
+        k, v = jax.vmap(per_block)(params['blocks'])    # (nb, n_slots, ...)
+        k, v = k[:, 0], v[:, 0]  # period-1 enc-dec: one slot
+    else:
+        k, v = per_block(params['blocks'][0])
+        k, v = k[None, 0], v[None, 0]
+    cache = dict(cache)
+    cache['cross'] = {'k': k.astype(cache['cross']['k'].dtype),
+                      'v': v.astype(cache['cross']['v'].dtype)}
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, inputs, cache):
+    """One token for every sequence. inputs: (B,1) tokens or (B,1,d) embeds.
+    Returns (logits (B,1,V), new cache)."""
+    ct = cdtype(cfg)
+    pos = cache['pos']
+    if cfg.embed_inputs or cfg.is_encdec:
+        x = embed(params['embed'], inputs, cfg)
+    else:
+        x = inputs.astype(ct)
+    B = x.shape[0]
+    kinds = cfg.layer_kinds()
+
+    def block_fn(x, scanned):
+        bp, slot_cache, cross_kv = scanned
+        new_cache = {}
+        for i, (mixer, ffn) in enumerate(kinds):
+            sp = bp[f'slot{i}']
+            sc = slot_cache[f'slot{i}']
+            h = rmsnorm(sp['ln1'], x, cfg.norm_eps)
+            if mixer == 'attn':
+                h, nk, nv = attn.decode_attention(sp['mixer'], h, sc['k'],
+                                                  sc['v'], pos, cfg)
+                new_cache[f'slot{i}'] = {'k': nk, 'v': nv}
+                x = x + h
+            elif mixer == 'mamba':
+                h, st = ssm_lib.mamba_decode(sp['mixer'], h, sc, cfg)
+                new_cache[f'slot{i}'] = st
+                x = x + h
+            else:   # rwkv: S=1 scan reuses the train path
+                h, tm_prev, wkv = rwkv_lib.rwkv_time_mix(
+                    sp['mixer'], h, sc['tm_prev'].astype(h.dtype),
+                    sc['wkv'], cfg)
+                x = x + h
+                h2 = rmsnorm(sp['ln2'], x, cfg.norm_eps)
+                h2, cm_prev = rwkv_lib.rwkv_channel_mix(
+                    sp['mixer'], h2, sc['cm_prev'].astype(h2.dtype), cfg)
+                x = x + h2
+                new_cache[f'slot{i}'] = {
+                    'tm_prev': tm_prev.astype(jnp.float32),
+                    'cm_prev': cm_prev.astype(jnp.float32), 'wkv': wkv}
+                continue
+            if cross_kv is not None:
+                h = rmsnorm(sp['ln_cross'], x, cfg.norm_eps)
+                h = attn.cross_attention(sp['cross'], h, cross_kv[0],
+                                         cross_kv[1], cfg)
+                x = x + h
+            h = rmsnorm(sp['ln2'], x, cfg.norm_eps)
+            if ffn == 'moe':
+                h, _ = moe_lib.moe_ffn(sp['ffn'], h, cfg)
+            else:
+                h = mlp(sp['ffn'], h, cfg)
+            x = x + h
+        return x, new_cache
+
+    cross = cache.get('cross')
+    if cfg.scan_layers:
+        xs = (params['blocks'], cache['slots'],
+              (cross['k'], cross['v']) if cross else None)
+        x, new_slots = jax.lax.scan(
+            lambda c, s: block_fn(c, s), x, xs)
+    else:
+        new_slots = []
+        for b, bp in enumerate(params['blocks']):
+            sc = jax.tree.map(lambda a: a[b], cache['slots'])
+            ck = jax.tree.map(lambda a: a[b], cross) if cross else None
+            x, ns = block_fn(x, (bp, sc, (ck['k'], ck['v']) if ck else None))
+            new_slots.append(ns)
+        new_slots = jax.tree.map(lambda *a: jnp.stack(a), *new_slots)
+
+    x = rmsnorm(params['final_norm'], x, cfg.norm_eps)
+    table = params['embed'] if (cfg.tie_embeddings or cfg.is_encdec) \
+        else params['unembed']
+    logits = unembed(table, x, cfg)
+    new_cache = dict(cache)
+    new_cache['slots'] = new_slots
+    new_cache['pos'] = pos + 1
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------- factory
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    train_loss: Callable
+    init_cache: Callable
+    decode_step: Callable
+    encode: Callable | None = None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        forward=functools.partial(forward, cfg),
+        train_loss=functools.partial(train_loss, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        decode_step=functools.partial(decode_step, cfg),
+        encode=functools.partial(encode, cfg) if cfg.is_encdec else None,
+    )

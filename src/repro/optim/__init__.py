@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, adafactor, momentum, sgd,
+                                    clip_by_global_norm, chain, scale_by_schedule,
+                                    cosine_schedule, warmup_cosine_schedule)
+
+__all__ = ['Optimizer', 'sgd', 'momentum', 'adam', 'adamw', 'adafactor',
+           'clip_by_global_norm', 'chain', 'scale_by_schedule',
+           'cosine_schedule', 'warmup_cosine_schedule']

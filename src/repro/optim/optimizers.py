@@ -1,0 +1,224 @@
+"""Gradient-transform optimizers, built from scratch (no optax in-container).
+
+Same composable design as optax: an ``Optimizer`` is an (init, update) pair
+over pytrees; ``chain`` composes transforms. All state is a pytree so it
+shards, checkpoints, and donates like parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (updates, new_state); updates are
+    # *deltas* to be added to params.
+
+    def apply(self, grads: PyTree, state: PyTree, params: PyTree,
+              step: jax.Array) -> tuple[PyTree, PyTree]:
+        updates, state = self.update(grads, state, params, step)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        return params, state
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array]) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+        return jax.tree.map(lambda g: -lr_t * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, m, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+        m = jax.tree.map(lambda mi, g: beta * mi + g, m, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda mi, g: -lr_t * (beta * mi + g), m, grads)
+        else:
+            upd = jax.tree.map(lambda mi: -lr_t * mi, m)
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         mu_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return AdamState(
+            mu=jax.tree.map(lambda p: jnp.zeros(p.shape, mu_dtype), params),
+            nu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+        count = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: (b1 * m + (1 - b1) * g).astype(mu_dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** count
+        bc2 = 1 - b2 ** count
+        upd = jax.tree.map(
+            lambda m, v: -lr_t * (m.astype(jnp.float32) / bc1)
+            / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return upd, AdamState(mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, mu_dtype=jnp.float32) -> Optimizer:
+    base = adam(lr, b1, b2, eps, mu_dtype)
+
+    def update(grads, state, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+        upd, state = base.update(grads, state, params, step)
+        upd = jax.tree.map(
+            lambda u, p: u - lr_t * weight_decay * p.astype(jnp.float32),
+            upd, params)
+        return upd, state
+
+    return Optimizer(base.init, update)
+
+
+class AdafactorState(NamedTuple):
+    vr: PyTree    # factored second moment: row accumulator
+    vc: PyTree    # col accumulator (scalar-shaped for rank<2 leaves)
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Adafactor (Shazeer & Stern) without momentum: the TPU-megamodel
+    optimizer (T5/PaLM) — O(rows+cols) second-moment state instead of O(n),
+    which is what lets a 400B-class dry-run fit one pod's HBM (DESIGN.md §4).
+    """
+    def init(params):
+        def rows(p):
+            if p.ndim < 2:
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+
+        def cols(p):
+            if p.ndim < 2:
+                return jnp.zeros((), jnp.float32)
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+        return AdafactorState(vr=jax.tree.map(rows, params),
+                              vc=jax.tree.map(cols, params))
+
+    def update(grads, state, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** -decay
+
+        def upd(g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if g.ndim < 2:
+                vr_new = beta * vr + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(vr_new + eps)
+                return u, vr_new, vc
+            vr_new = beta * vr + (1 - beta) * g2.mean(-1)
+            vc_new = beta * vc + (1 - beta) * g2.mean(-2)
+            r = vr_new / jnp.clip(vr_new.mean(-1, keepdims=True), eps)
+            u = g * jax.lax.rsqrt(r[..., None] + eps) \
+                * jax.lax.rsqrt(vc_new[..., None, :] + eps) \
+                * jnp.sqrt(jnp.clip(vc_new.mean(-1, keepdims=True),
+                                    eps))[..., None]
+            return u, vr_new, vc_new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_vr = jax.tree.leaves(state.vr)
+        flat_vc = jax.tree.leaves(state.vc)
+        outs = [upd(g, vr, vc) for g, vr, vc in zip(flat_g, flat_vr, flat_vc)]
+        upds = treedef.unflatten([o[0] for o in outs])
+        vr = treedef.unflatten([o[1] for o in outs])
+        vc = treedef.unflatten([o[2] for o in outs])
+        # update clipping (RMS ≤ threshold), then scale by lr
+        def clip_scale(u):
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            return -lr_t * u / jnp.clip(rms / clip_threshold, 1.0)
+        upds = jax.tree.map(clip_scale, upds)
+        return upds, AdafactorState(vr, vc)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    """Gradient-transform stage: rescale grads to global-norm ≤ max_norm."""
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        # sum-of-squares via full reduce (no vdot: flatten of a sharded array
+        # all-gathers it — see core.tree_util.tree_vdot)
+        sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                 for g in jax.tree.leaves(grads))
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*stages: Optimizer) -> Optimizer:
+    """Compose gradient transforms left-to-right; the last stage should map
+    grads → parameter deltas (e.g. ``clip_by_global_norm() | adamw``)."""
+    def init(params):
+        return tuple(s.init(params) for s in stages)
+
+    def update(grads, states, params, step):
+        new_states = []
+        for s, st in zip(stages, states):
+            grads, st = s.update(grads, st, params, step)
+            new_states.append(st)
+        return grads, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def scale_by_schedule(base: Optimizer, schedule: Callable) -> Optimizer:
+    def update(grads, state, params, step):
+        upd, state = base.update(grads, state, params, step)
+        s = schedule(step)
+        return jax.tree.map(lambda u: u * s, upd), state
+
+    return Optimizer(base.init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_ratio: float = 0.1):
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                          (1 + jnp.cos(jnp.pi * frac)))
+    return sched
+
+
+def warmup_cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                           min_ratio: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), min_ratio)
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return sched

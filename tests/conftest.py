@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the 1 real CPU device; only launch/dryrun.py
+creates the 512-device placeholder topology (per its module docstring)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope='session', autouse=True)
+def _determinism():
+    np.random.seed(0)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

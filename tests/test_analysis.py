@@ -1,0 +1,68 @@
+"""Roofline-analysis machinery tests: HLO collective parser + differencing."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.analysis import (CellAnalysis, assemble, collective_bytes,
+                                   interior_corrections, model_flops)
+from repro.configs import get_config
+
+HLO = """
+ENTRY %main (p0: f32[4,8]) -> f32[4,8] {
+  %ag = f32[4,64]{1,0} all-gather(%x), replica_groups=[2,4]<=[8]
+  %ar = bf16[16,16]{1,0} all-reduce(%y), channel_id=1
+  %ars = f32[8]{0} all-reduce-start(%z), channel_id=2
+  %ard = f32[8]{0} all-reduce-done(%ars), channel_id=2
+  %rs = (f32[2,2]{1,0}, bf16[4]{0}) reduce-scatter(%a, %b), channel_id=3
+  %cp = u8[100]{0} collective-permute(%c), channel_id=4
+  %dot = f32[4,8]{1,0} dot(%p0, %w)
+}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO)
+    assert out['bytes']['all-gather'] == 4 * 64 * 4
+    # plain all-reduce + the -start variant; -done not double counted
+    assert out['bytes']['all-reduce'] == 16 * 16 * 2 + 8 * 4
+    assert out['counts']['all-reduce'] == 2
+    assert out['bytes']['reduce-scatter'] == 2 * 2 * 4 + 4 * 2
+    assert out['bytes']['collective-permute'] == 100
+    assert out['total_bytes'] == sum(out['bytes'].values())
+
+
+def test_differencing_assembly():
+    """total = outside + n_blocks · (C2 − C1), clamped sanely."""
+    c1 = {'flops': 10.0, 'bytes': 100.0}
+    c2 = {'flops': 16.0, 'bytes': 160.0}      # inside = 6 / 60, outside = 4 / 40
+    coll = {'total_bytes': 0, 'bytes': {k: 0 for k in (
+        'all-reduce', 'all-gather', 'reduce-scatter', 'all-to-all',
+        'collective-permute')}, 'counts': {}}
+    cell = assemble('a', 's', 'm', 4, c1, c2, 10, coll, coll,
+                    {'flops': 0.0, 'bytes': 0.0}, 1e9, {})
+    assert cell.flops_per_chip == 4 + 10 * 6
+    assert cell.bytes_per_chip == 40 + 10 * 60
+    t = cell.terms()
+    assert t['dominant'] in ('compute', 'memory', 'collective')
+    assert 0 <= t['roofline_fraction'] <= 1
+
+
+def test_model_flops_conventions():
+    cfg = get_config('yi_9b')
+    n = cfg.param_count(active_only=True)
+    assert model_flops(cfg, 'train', 256, 4096) == 6.0 * n * 256 * 4096
+    assert model_flops(cfg, 'decode', 128, 32768) == 2.0 * n * 128
+    moe = get_config('phi35_moe_42b_a66b')
+    # MoE uses ACTIVE params (6.6B, not 42B)
+    assert model_flops(moe, 'train', 1, 1) < 6.0 * moe.param_count() * 0.5
+
+
+def test_interior_corrections_scale_with_seq():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    cfg = get_config('yi_9b')
+    c1 = interior_corrections(cfg, mesh, 'train', 8, 2048)
+    c2 = interior_corrections(cfg, mesh, 'train', 8, 4096)
+    assert c2['flops'] > 3.5 * c1['flops']     # attention interior ~ S²
+    # decode has no time loops → zero correction
+    c3 = interior_corrections(cfg, mesh, 'decode', 8, 32768)
+    assert c3 == {'flops': 0.0, 'bytes': 0.0}

@@ -1,0 +1,168 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned arch
+instantiates a REDUCED same-family config, runs one forward/train step on CPU,
+asserts output shapes + finiteness, and exercises the decode path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, all_cells, get_config, shape_applicable
+from repro.models import build_model
+from repro.models.transformer import fill_cross_cache
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng, seq=S):
+    ks = jax.random.split(rng, 3)
+    labels = jax.random.randint(ks[0], (B, seq), 0, cfg.vocab_size)
+    if cfg.is_encdec:
+        return {'inputs': jax.random.randint(ks[1], (B, seq), 0, cfg.vocab_size),
+                'labels': labels,
+                'enc_inputs': jax.random.normal(ks[2], (B, seq, cfg.d_model))}
+    if not cfg.embed_inputs:
+        batch = {'inputs': jax.random.normal(ks[1], (B, seq, cfg.d_model)),
+                 'labels': labels}
+        if cfg.mrope:
+            pos = jnp.broadcast_to(jnp.arange(seq), (B, seq))
+            batch['positions'] = jnp.broadcast_to(pos[:, None, :], (B, 3, seq))
+        return batch
+    return {'inputs': jax.random.randint(ks[1], (B, seq), 0, cfg.vocab_size),
+            'labels': labels}
+
+
+@pytest.fixture(scope='module')
+def built():
+    """Init each reduced arch once per test session (CPU is single-core)."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            m = build_model(cfg)
+            cache[arch] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize('arch', ARCHS)
+def test_train_step_shapes_and_finiteness(arch, built):
+    cfg, m, params = built(arch)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, grads = jax.value_and_grad(m.train_loss)(params, batch)
+    assert jnp.isfinite(loss), f'{arch}: non-finite loss'
+    leaves = jax.tree.leaves(grads)
+    assert all(jnp.isfinite(g).all() for g in leaves), f'{arch}: NaN grads'
+    gnorm = jnp.sqrt(sum(jnp.vdot(g, g) for g in leaves))
+    assert gnorm > 0, f'{arch}: zero gradient'
+    logits, _ = m.forward(params, batch['inputs'],
+                          positions=batch.get('positions'),
+                          enc_inputs=batch.get('enc_inputs'))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+
+
+@pytest.mark.parametrize('arch', ARCHS)
+def test_decode_step(arch, built):
+    cfg, m, params = built(arch)
+    cache = m.init_cache(B, 16)
+    if cfg.is_encdec:
+        enc = jax.random.normal(jax.random.PRNGKey(2), (B, cfg.cross_len, cfg.d_model))
+        cache = fill_cross_cache(cfg, params, cache, m.encode(params, enc))
+    if cfg.embed_inputs or cfg.is_encdec:
+        tok = jnp.zeros((B, 1), jnp.int32)
+    else:
+        tok = jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.d_model))
+    for t in range(3):
+        logits, cache = m.decode_step(params, tok, cache)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert jnp.isfinite(logits).all()
+    assert int(cache['pos']) == 3
+
+
+@pytest.mark.parametrize('arch', ['yi_9b', 'qwen2_7b', 'phi35_moe_42b_a66b',
+                                  'rwkv6_1b6', 'jamba_v01_52b'])
+def test_decode_matches_forward(arch, built):
+    """Incremental decode must reproduce teacher-forced logits exactly —
+    catches cache/state threading bugs across attention, MoE, SSM, RWKV."""
+    cfg, m, params = built(arch)
+    seq = 8
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, seq), 0, cfg.vocab_size)
+    full, _ = m.forward(params, toks)
+    cache = m.init_cache(B, seq)
+    outs = []
+    for t in range(seq):
+        lg, cache = m.decode_step(params, toks[:, t:t + 1], cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_matches_full(built):
+    """Online-softmax path == plain softmax path (the 32k-prefill machinery)."""
+    import dataclasses
+    cfg, m, params = built('yi_9b')
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, 64), 0, cfg.vocab_size)
+    full, _ = m.forward(params, toks)
+    cfg_chunked = dataclasses.replace(cfg, attn_chunk=16)
+    m2 = build_model(cfg_chunked)
+    chunked, _ = m2.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_scan_layers_matches_python_loop(built):
+    import dataclasses
+    cfg, m, params = built('qwen2_7b')
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, 16), 0, cfg.vocab_size)
+    scanned, _ = m.forward(params, toks)
+    cfg_loop = dataclasses.replace(cfg, scan_layers=False)
+    m2 = build_model(cfg_loop)
+    blocks = params['blocks']
+    nb = cfg.n_blocks
+    loop_params = dict(params)
+    loop_params['blocks'] = [jax.tree.map(lambda a, i=i: a[i], blocks)
+                             for i in range(nb)]
+    looped, _ = m2.forward(loop_params, toks)
+    np.testing.assert_allclose(np.asarray(looped), np.asarray(scanned),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_is_dropless_and_weighted(built):
+    """Uniform router ⇒ top-k weights renormalize; output stays finite and
+    no token is dropped (loss gradient reaches every expert eventually)."""
+    cfg, m, params = built('phi35_moe_42b_a66b')
+    batch = _batch(cfg, jax.random.PRNGKey(7))
+    loss, grads = jax.value_and_grad(m.train_loss)(params, batch)
+    w1g = grads['blocks']['slot0']['ffn']['w1']
+    # every expert receives gradient from a 128-token batch w.h.p.
+    per_expert = jnp.abs(w1g).sum(axis=(0, 2, 3))
+    assert (per_expert > 0).mean() > 0.9
+
+
+def test_cell_matrix_covers_40():
+    cells = all_cells()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    skipped = [c for c in cells if not c[2]]
+    assert len(skipped) == 8          # long_500k × 8 full-attention archs
+    assert {a for a, s, ok, w in skipped} == {
+        'llama3_405b', 'mistral_large_123b', 'yi_9b', 'qwen2_7b',
+        'qwen2_vl_7b', 'llama4_maverick_400b_a17b', 'phi35_moe_42b_a66b',
+        'seamless_m4t_large_v2'}
+    assert all(s.name == 'long_500k' for a, s, ok, w in skipped)
+
+
+@pytest.mark.parametrize('arch', ARCHS)
+def test_param_count_sanity(arch):
+    """Config-derived totals track published sizes (loose 15% band)."""
+    published = {
+        'llama3_405b': 405e9, 'mistral_large_123b': 123e9, 'yi_9b': 8.8e9,
+        'qwen2_7b': 7.6e9, 'qwen2_vl_7b': 7.6e9,
+        'llama4_maverick_400b_a17b': 400e9, 'phi35_moe_42b_a66b': 42e9,
+        'seamless_m4t_large_v2': 2.3e9, 'jamba_v01_52b': 52e9,
+        'rwkv6_1b6': 1.6e9}
+    n = get_config(arch).param_count()
+    assert abs(n - published[arch]) / published[arch] < 0.15

@@ -1,0 +1,186 @@
+"""IHVP solver unit tests: Nyström (all variants) vs dense oracles + baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CGIHVP, ExactIHVP, NeumannIHVP, NystromIHVP,
+                        PyTreeIndexer, make_hvp, nystrom_inverse_dense,
+                        tree_random_like)
+
+PARAMS = {'w': jnp.zeros((8,)), 'b': jnp.zeros((2, 2)), 's': jnp.zeros(())}
+
+
+def _flat(tree):
+    return jnp.concatenate([x.ravel() for x in jax.tree.leaves(tree)])
+
+
+def _quadratic(Hm):
+    def loss(prm, hp, batch):
+        th = _flat(prm)
+        return 0.5 * th @ Hm @ th
+    return loss
+
+
+def _setup(seed=0, rank=None, cond=1.0):
+    idxr = PyTreeIndexer(PARAMS)
+    p = idxr.total
+    r = rank or p
+    B = jax.random.normal(jax.random.PRNGKey(seed), (p, r))
+    Hm = B @ B.T + cond * jnp.eye(p) * (rank is None)
+    hvp = make_hvp(_quadratic(Hm), PARAMS, None, None)
+    v = tree_random_like(jax.random.PRNGKey(seed + 1), PARAMS)
+    return idxr, p, Hm, hvp, v
+
+
+class TestNystrom:
+    def test_full_rank_k_equals_p(self):
+        idxr, p, Hm, hvp, v = _setup()
+        rho = 1e-2
+        u = NystromIHVP(k=p, rho=rho).solve(hvp, idxr, v, jax.random.PRNGKey(2))
+        u_true = jnp.linalg.solve(Hm + rho * jnp.eye(p), _flat(v))
+        np.testing.assert_allclose(_flat(u), u_true, rtol=5e-3, atol=5e-3)
+
+    @pytest.mark.parametrize('r', [2, 4, 8])
+    def test_lowrank_exact_recovery(self, r):
+        """Rank-r PSD Hessian is recovered exactly from k=r columns (Remark 1)."""
+        idxr, p, Hm, hvp, v = _setup(seed=3, rank=r)
+        rho = 1e-2
+        u = NystromIHVP(k=r, rho=rho).solve(hvp, idxr, v, jax.random.PRNGKey(4))
+        u_true = jnp.linalg.solve(Hm + rho * jnp.eye(p), _flat(v))
+        np.testing.assert_allclose(_flat(u), u_true, rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize('kappa', [1, 2, 3, 5])
+    def test_kappa_equivalence(self, kappa):
+        """Alg. 1: every κ produces the same result (paper §2.4)."""
+        idxr, p, Hm, hvp, v = _setup(seed=5)
+        rho = 0.1  # moderate damping keeps the f32 comparison tight
+        solver = NystromIHVP(k=p, rho=rho)
+        sketch = solver.prepare(hvp, idxr, jax.random.PRNGKey(6))
+        ref = _flat(solver.apply(sketch, v))
+        out = _flat(NystromIHVP(k=p, rho=rho, kappa=kappa).apply(sketch, v))
+        scale = jnp.abs(ref).max()
+        np.testing.assert_allclose(out / scale, ref / scale, atol=2e-3)
+
+    def test_literal_eq6_matches_stabilized(self):
+        idxr, p, Hm, hvp, v = _setup(seed=7)
+        rho = 0.5  # well-damped ⇒ Eq. 6's squared conditioning is benign
+        a = NystromIHVP(k=p, rho=rho, stabilized=True).solve(
+            hvp, idxr, v, jax.random.PRNGKey(8))
+        b = NystromIHVP(k=p, rho=rho, stabilized=False).solve(
+            hvp, idxr, v, jax.random.PRNGKey(8))
+        np.testing.assert_allclose(_flat(a), _flat(b), rtol=2e-2, atol=2e-2)
+
+    def test_column_chunk_equivalence(self):
+        """lax.map-chunked column extraction == one-shot vmap extraction."""
+        idxr, p, Hm, hvp, v = _setup(seed=9)
+        a = NystromIHVP(k=8, rho=1e-2, column_chunk=3).solve(
+            hvp, idxr, v, jax.random.PRNGKey(10))
+        b = NystromIHVP(k=8, rho=1e-2).solve(hvp, idxr, v, jax.random.PRNGKey(10))
+        np.testing.assert_allclose(_flat(a), _flat(b), rtol=1e-5, atol=1e-5)
+
+    def test_zero_hessian_degenerate(self):
+        """All-zero H (the ReLU dead-column pathology §5): falls back to v/ρ."""
+        idxr = PyTreeIndexer(PARAMS)
+        hvp = make_hvp(lambda prm, hp, b: 0.0 * _flat(prm).sum(), PARAMS, None, None)
+        v = tree_random_like(jax.random.PRNGKey(11), PARAMS)
+        rho = 0.1
+        u = NystromIHVP(k=5, rho=rho).solve(hvp, idxr, v, jax.random.PRNGKey(12))
+        np.testing.assert_allclose(_flat(u), _flat(v) / rho, rtol=1e-5)
+        assert not jnp.isnan(_flat(u)).any()
+
+    def test_dense_fig1_shape(self):
+        """Fig. 1 setting: rank-20 40-dim matrix, k=5..40."""
+        p, r, rho = 40, 20, 0.1
+        A = jax.random.normal(jax.random.PRNGKey(13), (p, r))
+        H = A @ A.T
+        truth = jnp.linalg.inv(H + rho * jnp.eye(p))
+        err_prev = jnp.inf
+        for k in (5, 20, 40):
+            ny = nystrom_inverse_dense(H, k=k, rho=rho, rng=jax.random.PRNGKey(14))
+            err = jnp.abs(ny - truth).max()
+            assert err <= err_prev + 1e-5, f'error must not grow with k (k={k})'
+            err_prev = err
+        assert err_prev < 5e-3  # k=p ⇒ near-exact
+
+
+class TestBaselines:
+    def test_cg_converges(self):
+        idxr, p, Hm, hvp, v = _setup(seed=15)
+        rho = 1e-2
+        u = CGIHVP(iters=4 * p, rho=rho).solve(hvp, idxr, v, None)
+        u_true = jnp.linalg.solve(Hm + rho * jnp.eye(p), _flat(v))
+        np.testing.assert_allclose(_flat(u), u_true, rtol=1e-3, atol=1e-3)
+
+    def test_neumann_converges_well_conditioned(self):
+        """Neumann targets H⁻¹v and needs ‖I−αH‖<1; use a benign spectrum."""
+        idxr = PyTreeIndexer(PARAMS)
+        p = idxr.total
+        evals = jnp.linspace(0.5, 1.5, p)
+        Q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(16), (p, p)))
+        Hm = (Q * evals) @ Q.T
+        hvp = make_hvp(_quadratic(Hm), PARAMS, None, None)
+        v = tree_random_like(jax.random.PRNGKey(17), PARAMS)
+        u = NeumannIHVP(iters=200, alpha=0.5).solve(hvp, idxr, v, None)
+        u_true = jnp.linalg.solve(Hm, _flat(v))
+        np.testing.assert_allclose(_flat(u), u_true, rtol=1e-3, atol=1e-3)
+
+    def test_neumann_diverges_when_alpha_violates_norm_bound(self):
+        """The instability the paper fixes: ‖αH‖>2 ⇒ series diverges."""
+        idxr, p, Hm, hvp, v = _setup(seed=18)  # ‖H‖ ~ tens
+        u = NeumannIHVP(iters=100, alpha=1.0).solve(hvp, idxr, v, None)
+        assert (~jnp.isfinite(_flat(u))).any() or jnp.abs(_flat(u)).max() > 1e6
+
+    def test_exact_is_oracle(self):
+        idxr, p, Hm, hvp, v = _setup(seed=19)
+        rho = 1e-2
+        u = ExactIHVP(rho=rho).solve(hvp, idxr, v, None)
+        u_true = jnp.linalg.solve(Hm + rho * jnp.eye(p), _flat(v))
+        np.testing.assert_allclose(_flat(u), u_true, rtol=1e-4, atol=1e-4)
+
+
+class TestIndexer:
+    def test_one_hot_roundtrip(self):
+        idxr = PyTreeIndexer(PARAMS)
+        for j in (0, 7, 8, 11, idxr.total - 1):
+            oh_tree = idxr.one_hot(jax.tree.map(lambda a: a[0],
+                                                idxr.from_flat([j])))
+            flat = _flat(oh_tree)
+            assert flat[j] == 1.0 and flat.sum() == 1.0
+
+    def test_gather_matches_flat_indexing(self):
+        idxr = PyTreeIndexer(PARAMS)
+        k = 4
+        batched = jax.tree.map(
+            lambda l: jax.random.normal(jax.random.PRNGKey(20),
+                                        (k,) + l.shape), PARAMS)
+        flat = jnp.stack([_flat(jax.tree.map(lambda x: x[i], batched))
+                          for i in range(k)])
+        flat_idx = [0, 5, 9, 12]
+        idx = idxr.from_flat(flat_idx)
+        np.testing.assert_allclose(idxr.gather(batched, idx),
+                                   flat[:, jnp.array(flat_idx)], rtol=1e-6)
+
+    def test_sample_indices_cover_all_leaves(self):
+        idxr = PyTreeIndexer(PARAMS)
+        idx = idxr.sample_indices(jax.random.PRNGKey(21), 8)
+        assert idx['leaf'].shape == (8,)
+        assert idx['dims'].shape == (8, idxr.max_rank)
+        # distinct below the int32 boundary (replace=False path)
+        pairs = {(int(l), tuple(map(int, d)))
+                 for l, d in zip(idx['leaf'], idx['dims'])}
+        assert len(pairs) == 8
+        # every sampled coordinate is in range
+        table = np.asarray(idxr._dim_table)[np.asarray(idx['leaf'])]
+        assert (np.asarray(idx['dims']) < table).all()
+
+    def test_structured_safe_beyond_int32(self):
+        """Index math never forms a global flat offset: a (virtual) tree
+        with > 2^31 params samples/one-hots fine (the yi-9b hypergrad cell
+        overflowed here before structuring)."""
+        big = {'a': jax.ShapeDtypeStruct((50_000, 50_000), jnp.float32),
+               'b': jax.ShapeDtypeStruct((126, 16384, 53248), jnp.float32)}
+        idxr = PyTreeIndexer(big)
+        assert idxr.total > 2 ** 31
+        idx = idxr.sample_indices(jax.random.PRNGKey(0), 16)
+        assert (np.asarray(idx['dims']) >= 0).all()

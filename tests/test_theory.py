@@ -1,0 +1,85 @@
+"""Property-based tests of the paper's theory (Theorem 1, Remark 1).
+
+Theorem 1:  ‖h* − h‖₂ ≤ ‖g‖₂ ‖F‖op · (1/ρ) ‖E‖op / (ρ + ‖E‖op),  E = H − H_k.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+
+def _nystrom_pieces(H, k, rho, seed):
+    p = H.shape[0]
+    idx = jax.random.choice(jax.random.PRNGKey(seed), p, (k,), replace=False)
+    C = H[:, idx]
+    H_KK = 0.5 * (C[idx, :] + C[idx, :].T)
+    H_k = C @ jnp.linalg.pinv(H_KK, rcond=1e-6) @ C.T
+    inv_true = jnp.linalg.inv(H + rho * jnp.eye(p))
+    inv_ny = jnp.linalg.inv(H_k + rho * jnp.eye(p))
+    return H_k, inv_true, inv_ny
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 10), st.integers(1, 12),
+       st.sampled_from([1e-2, 1e-1, 1.0]))
+def test_theorem1_bound(seed, r, h_dim, rho):
+    """The hypergradient error never exceeds the Theorem 1 bound."""
+    p = 24
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = jax.random.normal(k1, (p, r))
+    H = A @ A.T                                   # PSD, rank r
+    k = min(r + 2, p)
+    H_k, inv_true, inv_ny = _nystrom_pieces(H, k, rho, seed + 1)
+
+    g = jax.random.normal(k2, (p,))
+    F = jax.random.normal(k3, (p, h_dim))
+
+    h_star = -g @ inv_true @ F
+    h_ny = -g @ inv_ny @ F
+
+    E_op = jnp.linalg.norm(H - H_k, ord=2)
+    bound = (jnp.linalg.norm(g) * jnp.linalg.norm(F, ord=2)
+             * (1.0 / rho) * E_op / (rho + E_op))
+    lhs = jnp.linalg.norm(h_star - h_ny)
+    assert lhs <= bound * (1 + 1e-4) + 1e-5, (float(lhs), float(bound))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8))
+def test_exact_recovery_rank_k(seed, r):
+    """Remark 1 corollary: rank-r H ⇒ E[‖H − H_r‖] → 0 with r independent
+    columns; for random PSD H the recovery is exact a.s."""
+    p = 20
+    A = jax.random.normal(jax.random.PRNGKey(seed), (p, r))
+    H = A @ A.T
+    H_k, _, _ = _nystrom_pieces(H, r, 1e-2, seed + 1)
+    scale = jnp.abs(H).max() + 1e-9
+    assert jnp.abs(H - H_k).max() / scale < 5e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_nystrom_error_monotone_in_k_on_average(seed):
+    """More columns ⇒ (weakly) better sketch, measured in operator norm."""
+    p, r = 24, 12
+    A = jax.random.normal(jax.random.PRNGKey(seed), (p, r))
+    H = A @ A.T
+    errs = []
+    for k in (2, 6, 12):
+        H_k, _, _ = _nystrom_pieces(H, k, 1e-2, seed + 7)
+        errs.append(float(jnp.linalg.norm(H - H_k, ord=2)))
+    assert errs[2] <= errs[0] + 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1e-2, 1e-1, 1.0]))
+def test_psd_preserved(seed, rho):
+    """(H_k + ρI) stays PD ⇒ the IHVP never flips the gradient direction
+    on the sketched subspace (the stability property §2.2 claims)."""
+    p, r = 20, 8
+    A = jax.random.normal(jax.random.PRNGKey(seed), (p, r))
+    H = A @ A.T
+    H_k, _, inv_ny = _nystrom_pieces(H, r + 2, rho, seed + 3)
+    eigs = jnp.linalg.eigvalsh(0.5 * (inv_ny + inv_ny.T))
+    assert eigs.min() > 0.0
