@@ -1,15 +1,33 @@
-"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json),
+plus the analytic IHVP-apply roofline by contraction backend.
 
 Prints per (arch × shape): the three terms in seconds, the dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, memory per chip, and the
 roofline fraction (compute term / binding term). Methodology:
 launch/analysis.py docstring.
+
+``run_ihvp_backend_model`` models the Nyström apply (two tall-skinny
+C-passes) on TPU-class hardware for the three contraction backends. At
+k ≤ 128 the arithmetic intensity of a (p, k) contraction is ~k/4 FLOP/byte —
+far below the ~240 FLOP/byte ridge — so the apply is HBM-bound and the model
+is bytes/BW + launch overhead:
+
+  tree    2 C-passes as 2·n_leaves einsum dispatches + n_leaves (k,)/(p_i,)
+          partials re-reduced on host-side tree sum
+  flat    2 C-passes as 2 fused matmuls over the (k, p) buffer
+  pallas  2 pallas_call grids with the k-tile accumulator VMEM-resident:
+          exactly one HBM read of C per pass and one (k,)/(p,) write — the
+          floor for this shape
 """
 import glob
 import json
 import os
 
 from benchmarks.common import emit
+
+# v5e-class chip: HBM bandwidth and a conservative per-dispatch overhead.
+_HBM_GBPS = 819.0
+_DISPATCH_S = 2e-6
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), '..', 'experiments',
                           'dryrun')
@@ -45,4 +63,60 @@ def run():
              f"useful={t['useful_flop_ratio']:.3f} "
              f"mem1pod={mem:.1f}GB mem2pod={mp:.1f}GB")
         rows.append((tag, t))
+    rows.append(('ihvp_backend_model', run_ihvp_backend_model()))
     return rows
+
+
+def _apply_model_s(p: int, k: int, n_leaves: int, backend: str,
+                   refine: int = 1) -> float:
+    """Modeled seconds for one Nyström apply.
+
+    The stabilized apply is (1 + 2·refine) two-C-pass sweeps: the Woodbury
+    pair (Cᵀv + fused v/ρ + Cw), plus per refinement sweep a forward
+    H_k·u pair and another Woodbury pair. refine=0 is the literal
+    two-pass apply; the shipped solver default is refine=1 (6 C-passes) —
+    see NystromIHVP.refine.
+    """
+    sweeps = 1 + 2 * refine            # two C-passes each
+    c_bytes = p * k * 4
+    vec_bytes = p * 4
+    if backend == 'tree':
+        # per sweep: 2 C-passes leaf by leaf, plus the unfused epilogue —
+        # the Cw correction is materialized (write+read) before tree_axpy
+        # combines it with v/ρ: 5 vector passes (v read ×2, corr
+        # write+read, u write) — and every leaf is its own einsum dispatch
+        # plus a partial-sum reduction.
+        bytes_moved = sweeps * (2 * c_bytes + 5 * vec_bytes
+                                + n_leaves * k * 4)
+        dispatches = sweeps * 3 * n_leaves
+    elif backend == 'flat':
+        # per sweep: 2 fused matmuls; XLA fuses v/ρ + Cw into the second
+        # pass: v read ×2, u write.
+        bytes_moved = sweeps * (2 * c_bytes + 3 * vec_bytes)
+        dispatches = sweeps * 2
+    elif backend == 'pallas':
+        # same traffic floor as flat, with the (k,) accumulator pinned in
+        # VMEM across the grid (flat relies on XLA picking that schedule;
+        # the kernel guarantees it).
+        bytes_moved = sweeps * (2 * c_bytes + 3 * vec_bytes)
+        dispatches = sweeps * 2
+    else:
+        raise ValueError(backend)
+    return bytes_moved / (_HBM_GBPS * 1e9) + dispatches * _DISPATCH_S
+
+
+def run_ihvp_backend_model(shapes=((1 << 22, 32, 8), (1 << 27, 64, 128),
+                                   (1 << 30, 128, 512)), refine: int = 1):
+    """Backend apply-time model over (p, k, n_leaves) production shapes,
+    at the solver's default refinement level (matches what tab5 measures)."""
+    out = {}
+    for p, k, n_leaves in shapes:
+        per = {b: _apply_model_s(p, k, n_leaves, b, refine)
+               for b in ('tree', 'flat', 'pallas')}
+        out[(p, k, n_leaves)] = per
+        emit('roofline_ihvp_backend', per['pallas'] * 1e6,
+             f'p={p} k={k} n_leaves={n_leaves} refine={refine} '
+             f"tree={per['tree']*1e3:.3f}ms flat={per['flat']*1e3:.3f}ms "
+             f"pallas={per['pallas']*1e3:.3f}ms "
+             f"tree/pallas={per['tree']/per['pallas']:.2f}x")
+    return out

@@ -1,4 +1,5 @@
-"""Tab. 5: hypergradient speed & memory by backend and l/k.
+"""Tab. 5: hypergradient speed & memory by solver, and IHVP apply-time by
+contraction backend.
 
 No GPU in-container: we report (a) CPU wall-clock per hypergradient on a
 ~0.3M-param MLP (relative speeds are meaningful: the same HVP primitives
@@ -6,6 +7,13 @@ dominate), and (b) the analytic cost model that transfers to TPU —
 sequential-HVP count (latency-critical: CG/Neumann chain l HVPs; Nyström's
 k column-HVPs are batchable) and sketch-memory bytes (Nyström's O(kp) vs
 O(p) — the paper's Tab. 5 memory column).
+
+``run_backend_apply`` times the Nyström apply under the three contraction
+backends (tree | flat | pallas) over pytrees of growing leaf count at fixed
+total p: the tree backend pays per-leaf einsum dispatch that grows with leaf
+count, the flat backend is one fused matmul per pass regardless, and pallas
+off-TPU runs in interpret mode (correctness reference, not a speed number —
+its compiled-TPU cost model is in benchmarks/roofline.py).
 """
 import time
 
@@ -13,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, solver_cfg
-from repro.core import PyTreeIndexer, hypergradient
+from repro.core import (NystromIHVP, PallasBackend, PyTreeIndexer,
+                        hypergradient, make_hvp, tree_random_like)
 from repro.tasks import build_reweighting
 
 
@@ -65,4 +74,67 @@ def run(sizes=(5, 10, 20), reps: int = 3):
         emit('tab5_speed_memory', per * 1e6,
              f'method=nystrom_kappa1 l_or_k={lk} wall_s={per:.4f} '
              f'sequential_hvps=0 sketch_MB={4*p_count/1e6:.1f}(peak κp)')
+    out.update(run_backend_apply())
+    return out
+
+
+def _leafy_params(n_leaves: int, p_total: int) -> dict:
+    """n_leaves equal 2-D leaves summing to ~p_total params (an MLP-shaped
+    tree: the multi-leaf case the tree backend pays per-leaf dispatch on)."""
+    rows = max(1, p_total // (n_leaves * 64))
+    return {f'layer{i:02d}': jnp.zeros((rows, 64)) for i in range(n_leaves)}
+
+
+def run_backend_apply(leaf_counts=(2, 8, 32), p_total=1 << 18, k=32,
+                      reps: int = 20, include_pallas: bool = True):
+    """Apply-time by contraction backend at fixed p, growing leaf count.
+
+    The quadratic inner loss is diagonal so sketch construction is cheap and
+    the timing isolates the apply path (two tall-skinny contractions) —
+    which is what sketch amortization makes hot in production.
+    """
+    out = {}
+    for n_leaves in leaf_counts:
+        params = _leafy_params(n_leaves, p_total)
+        idxr = PyTreeIndexer(params)
+        p_count = idxr.total
+        d = 1.0 + jnp.arange(p_count, dtype=jnp.float32) / p_count
+
+        def inner(prm, hp, batch):
+            th = jnp.concatenate([x.ravel() for x in jax.tree.leaves(prm)])
+            return 0.5 * jnp.sum(d * th * th)
+
+        hvp = make_hvp(inner, params, None, None)
+        v = tree_random_like(jax.random.PRNGKey(0), params)
+        backends = ['tree', 'flat']
+        # off-TPU, pallas runs in interpret mode (~13 s/apply): one
+        # correctness data point at the largest tree is enough there.
+        if include_pallas and (jax.default_backend() == 'tpu'
+                               or n_leaves == leaf_counts[-1]):
+            backends.append('pallas')
+        for backend in backends:
+            be = (PallasBackend(interpret=None, block_p=4096)
+                  if backend == 'pallas' else backend)
+            solver = NystromIHVP(k=k, rho=1e-2, backend=be)
+            sketch = solver.prepare(hvp, idxr, jax.random.PRNGKey(1))
+            sketch = jax.block_until_ready(sketch)
+            apply_fn = jax.jit(solver.apply)
+            jax.block_until_ready(apply_fn(sketch, v))      # warmup/compile
+            # interpret-mode pallas is a correctness path; don't loop on it
+            n = 1 if (backend == 'pallas'
+                      and jax.default_backend() != 'tpu') else reps
+            t0 = time.time()
+            for _ in range(n):
+                jax.block_until_ready(apply_fn(sketch, v))
+            per = (time.time() - t0) / n
+            out[('apply', backend, n_leaves)] = per
+            emit('tab5_backend_apply', per * 1e6,
+                 f'backend={backend} n_leaves={n_leaves} p={p_count} k={k} '
+                 f'apply_wall_s={per:.6f}'
+                 + (' (interpret mode)' if n == 1 else ''))
+        tree_t = out[('apply', 'tree', n_leaves)]
+        flat_t = out[('apply', 'flat', n_leaves)]
+        emit('tab5_backend_apply', 0.0,
+             f'summary n_leaves={n_leaves} flat_speedup_vs_tree='
+             f'{tree_t / flat_t:.2f}x')
     return out

@@ -6,6 +6,9 @@ Public API:
   BilevelTrainer / BilevelState                   — warm-start bilevel loop
   make_hvp / extract_columns / PyTreeIndexer      — HVP substrate
 """
+from repro.core.backend import (BACKENDS, FlatBackend, PallasBackend,
+                                TreeBackend, flatten_sketch, flatten_vec,
+                                get_backend, unflatten_vec)
 from repro.core.bilevel import BilevelState, BilevelTrainer
 from repro.core.hvp import extract_columns, make_hvp, make_hvp_fn
 from repro.core.hypergrad import (HypergradConfig, hypergradient,
@@ -19,10 +22,13 @@ from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_zeros_like)
 
 __all__ = [
-    'BilevelState', 'BilevelTrainer', 'HypergradConfig', 'SOLVERS',
+    'BACKENDS', 'BilevelState', 'BilevelTrainer', 'FlatBackend',
+    'HypergradConfig', 'PallasBackend', 'SOLVERS', 'TreeBackend',
     'CGIHVP', 'ExactIHVP', 'NeumannIHVP', 'NystromIHVP', 'NystromSketch',
-    'PyTreeIndexer', 'extract_columns', 'hypergradient', 'make_hvp',
-    'make_hvp_fn', 'nystrom_inverse_dense', 'tree_add', 'tree_axpy',
-    'tree_cast', 'tree_norm', 'tree_random_like', 'tree_scale', 'tree_size',
-    'tree_sub', 'tree_vdot', 'tree_zeros_like', 'unrolled_hypergradient',
+    'PyTreeIndexer', 'extract_columns', 'flatten_sketch', 'flatten_vec',
+    'get_backend', 'hypergradient', 'make_hvp', 'make_hvp_fn',
+    'nystrom_inverse_dense', 'tree_add', 'tree_axpy', 'tree_cast',
+    'tree_norm', 'tree_random_like', 'tree_scale', 'tree_size', 'tree_sub',
+    'tree_vdot', 'tree_zeros_like', 'unflatten_vec',
+    'unrolled_hypergradient',
 ]

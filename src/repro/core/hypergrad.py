@@ -104,6 +104,13 @@ class HypergradConfig:
     column_chunk: int | None = None
     sketch_refresh_every: int = 1  # outer steps between sketch rebuilds
     importance_sampling: bool = False
+    backend: str = 'tree'         # contraction backend: tree | flat | pallas
+    #   tree   = pytree einsums, sharding-transparent (required under pjit)
+    #   flat   = fused (k, p) buffer, one XLA matmul per contraction
+    #   pallas = flat buffer + TPU kernels (interpret-mode fallback off-TPU)
+    refine: int = 1               # residual sweeps on the stabilized apply:
+    #   0 = literal two-C-pass apply; each sweep adds 4 C-passes and drives
+    #   the f32 cancellation error (~eps·λmax/ρ) down to roundoff
 
     def build(self):
         from repro.core.solvers import (CGIHVP, ExactIHVP, NeumannIHVP,
@@ -111,7 +118,8 @@ class HypergradConfig:
         if self.solver == 'nystrom':
             return NystromIHVP(k=self.k, rho=self.rho, kappa=self.kappa,
                                column_chunk=self.column_chunk,
-                               importance_sampling=self.importance_sampling)
+                               importance_sampling=self.importance_sampling,
+                               backend=self.backend, refine=self.refine)
         if self.solver == 'cg':
             return CGIHVP(iters=self.k, rho=self.rho)
         if self.solver == 'neumann':

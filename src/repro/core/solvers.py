@@ -12,22 +12,39 @@ through Hessian-vector products (HVPs).
 * ``NeumannIHVP`` — Neumann series (Lorraine et al. 2020).
 * ``ExactIHVP`` — dense solve, for tiny problems / oracles in tests.
 
-Sharding: solvers are pure jax; under pjit, C (leading-k parameter pytree)
-inherits the parameter sharding, CᵀC / Cᵀv lower to per-shard contractions +
-one psum of k² / k floats, and the k×k solve is replicated. No solver holds
-any p×p object.
+Contraction backends: every tall-skinny contraction in the Nyström hot path
+(Cᵀv, Cw, CᵀC, CᵀB) goes through a pluggable backend
+(``repro.core.backend``), selected by ``NystromIHVP(backend=...)``:
+
+  'tree'   per-leaf pytree einsums — the default; the only backend that
+           preserves pjit/multi-axis shardings of the parameter tree, so
+           use it whenever params are sharded.
+  'flat'   the sketch is fused once at prepare() into a single (p, k) f32
+           buffer; each contraction is then ONE fused XLA matmul instead of
+           n_leaves einsums + a Python sum. Fastest on CPU/GPU/single-chip.
+  'pallas' same flat buffer with the gram / Cᵀv / fused-apply passes running
+           in the hand-tiled Pallas TPU kernels (repro.kernels) — one HBM
+           read of C per pass. Interpret-mode (slow) fallback off-TPU.
+
+Sharding: solvers are pure jax; under pjit with backend='tree', C (leading-k
+parameter pytree) inherits the parameter sharding, CᵀC / Cᵀv lower to
+per-shard contractions + one psum of k² / k floats, and the k×k solve is
+replicated. No solver holds any p×p object. The flat backends fuse the
+sketch into one (p, k) buffer and are meant for unsharded (or single-axis
+data-parallel) steps.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import get_backend
 from repro.core.hvp import extract_columns
 from repro.core.tree_util import (PyTree, PyTreeIndexer, tree_axpy, tree_scale,
-                                  tree_sub, tree_vdot, tree_zeros_like)
+                                  tree_vdot, tree_zeros_like)
 
 HVP = Callable[[PyTree], PyTree]
 
@@ -37,39 +54,6 @@ HVP = Callable[[PyTree], PyTree]
 # Hessian columns under ReLU break the plain inverse).
 _EIG_REL_TOL = 1e-7
 _SAFE_BIG = 1e30
-
-
-# ---------------------------------------------------------------------------
-# tall-skinny pytree contractions (the only dense math the solver needs)
-# ---------------------------------------------------------------------------
-def _ctv(C: PyTree, v: PyTree) -> jax.Array:
-    """t = Cᵀ v ∈ R^k.  C leaves: (k, *shape); v leaves: (*shape)."""
-    parts = jax.tree.leaves(jax.tree.map(
-        lambda c, x: jnp.einsum('k...,...->k', c.astype(jnp.float32),
-                                x.astype(jnp.float32)), C, v))
-    return sum(parts)
-
-
-def _cv(C: PyTree, w: jax.Array) -> PyTree:
-    """u = C w: contract the leading k axis with w ∈ R^k."""
-    return jax.tree.map(
-        lambda c: jnp.einsum('k...,k->...', c.astype(jnp.float32), w), C)
-
-
-def _gram(C: PyTree) -> jax.Array:
-    """CᵀC ∈ R^{k×k}."""
-    parts = jax.tree.leaves(jax.tree.map(
-        lambda c: jnp.einsum('k...,j...->kj', c.astype(jnp.float32),
-                             c.astype(jnp.float32)), C))
-    return sum(parts)
-
-
-def _cross(A: PyTree, B: PyTree) -> jax.Array:
-    """Aᵀ B for two leading-axis pytrees → (ka, kb)."""
-    parts = jax.tree.leaves(jax.tree.map(
-        lambda a, b: jnp.einsum('k...,j...->kj', a.astype(jnp.float32),
-                                b.astype(jnp.float32)), A, B))
-    return sum(parts)
 
 
 def _sym_solve(M: jax.Array, t: jax.Array) -> jax.Array:
@@ -97,29 +81,59 @@ def _sym_solve(M: jax.Array, t: jax.Array) -> jax.Array:
 class NystromSketch:
     """Prepared sketch: reusable across many IHVP applies (and outer steps).
 
-    ``W``/``sig2`` is the numerically-stable spectral form of H_k
-    (H_k = W diag(σ²) Wᵀ, W orthonormal p×k): present when the solver was
-    built with ``stabilized=True``.
+    ``C`` is the backend-native sketch operand: a leading-k parameter pytree
+    for backend='tree', the fused sketch-major (k, p) f32 buffer for
+    backend='flat', or the kernel-tiled (p, k) transpose for
+    backend='pallas' — there is no separate unflatten spec; apply() reads
+    the output structure off the incoming ``v``.
+
+    ``B``/``gram_B`` is the numerically-stable whitened form of H_k
+    (H_k = B Bᵀ with B = C·U diag(λ†^(1/2)); gram_B = BᵀB): present when the
+    solver was built with ``stabilized=True``. ``B`` uses the same
+    backend-native representation as ``C``; ``gram_C`` = CᵀC is cached
+    instead when ``stabilized=False`` (the Eq. 6 apply's k×k system needs
+    it, and it is ρ-independent).
+
+    The sketch is ρ-free: every apply path solves against the *applying*
+    solver's rho (the k×k system (gram + ρI-ish) w = t is re-solved per
+    apply — O(k³) replicated flops, negligible), so one sketch can be
+    reused across a damping sweep. ``rho`` records the prepare-time value
+    for reference only.
     """
-    C: PyTree           # H[:, K], leaves (k, *param_shape)
+    C: Any              # H[:, K], backend-native (see class docstring)
     H_KK: jax.Array     # (k, k), symmetrized
     indices: dict       # structured {'leaf', 'dims'} (PyTreeIndexer)
-    rho: jax.Array      # scalar
-    W: PyTree | None = None
-    sig2: jax.Array | None = None
+    rho: jax.Array      # scalar (prepare-time record; applies use solver rho)
+    B: Any = None
+    gram_B: jax.Array | None = None
+    gram_C: jax.Array | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class NystromIHVP:
     """The paper's method. κ=None ⇒ Eq. 6 (time-efficient).
 
-    ``stabilized=True`` (default) applies the inverse through the spectral
-    form of H_k (Frangella–Tropp–Udell-style): Eq. 6's k×k system
-    H_KK + CᵀC/ρ carries cond(H)² and costs ~3 digits in f32; the spectral
-    form is backward-stable and makes each apply *cheaper* (no solve at apply
-    time). ``stabilized=False`` is the literal Eq. 6 for paper-faithful
-    benchmarking; both agree to solver tolerance on well-conditioned H
-    (tests/test_solvers.py).
+    ``stabilized=True`` (default) applies the inverse through the whitened
+    factor of H_k (Frangella–Tropp–Udell-style): Eq. 6's k×k system
+    H_KK + CᵀC/ρ carries cond(H)² and costs ~3 digits in f32; the whitened
+    Woodbury identity is backward-stable (its k×k system BᵀB + ρI carries
+    cond(H), not cond(H)²). Either way the apply's rho is *this solver's*
+    rho — a sketch is ρ-free and retargets across damping values
+    (tests/test_solvers.py::test_sketch_retargets_across_rho).
+    ``stabilized=False`` is the literal Eq. 6 for paper-faithful
+    benchmarking; both agree to solver tolerance on well-conditioned H.
+
+    ``backend`` selects the contraction backend ('tree' | 'flat' | 'pallas',
+    see module docstring), or accepts a pre-built backend instance (e.g.
+    ``PallasBackend(interpret=True)`` in tests). A sketch prepared under one
+    backend must be applied under the same backend.
+
+    ``refine``: iterative-refinement sweeps on the stabilized apply. An f32
+    Woodbury apply bottoms out at ~eps·λmax/ρ absolute error (the v/ρ-scale
+    cancellation); each sweep re-applies the inverse to the residual
+    v − (H_k + ρI)u — four extra C-passes, still zero HVPs — and drives the
+    error to f32 roundoff (measured: 3e-3 → 5e-6 at ρ=1e-3 on the analytic
+    quadratic). refine=0 restores the literal two-pass apply.
     """
     k: int
     rho: float = 1e-2
@@ -127,116 +141,154 @@ class NystromIHVP:
     column_chunk: int | None = None
     importance_sampling: bool = False  # Remark 1 (Drineas–Mahoney weights)
     stabilized: bool = True
+    backend: Any = 'tree'
+    refine: int = 1
+
+    def _be(self):
+        if isinstance(self.backend, str):
+            return get_backend(self.backend)
+        return self.backend
 
     # -- sketch construction (k HVPs; the only part that touches the model) --
     def prepare(self, hvp: HVP, indexer: PyTreeIndexer, rng: jax.Array,
                 diag_weights: jax.Array | None = None) -> NystromSketch:
+        be = self._be()
         weights = diag_weights if self.importance_sampling else None
         idx = indexer.sample_indices(rng, self.k, weights)
-        C = extract_columns(hvp, indexer, idx, self.column_chunk)
-        H_KK = indexer.gather(C, idx)
+        C_tree = extract_columns(hvp, indexer, idx, self.column_chunk)
+        H_KK = indexer.gather(C_tree, idx)
         H_KK = 0.5 * (H_KK + H_KK.T)
-        W, sig2 = (None, None)
+        C_op = be.prepare_operand(C_tree)
+        B, gram_B, gram_C = (None, None, None)
         if self.stabilized:
-            W, sig2 = _spectral_form(C, H_KK)
-        return NystromSketch(C=C, H_KK=H_KK, indices=idx,
-                             rho=jnp.float32(self.rho), W=W, sig2=sig2)
+            B, gram_B = _whitened_form(be, C_op, H_KK)
+        else:
+            # ρ-independent, so cached here: the Eq. 6 apply stays 2-pass.
+            gram_C = be.gram(C_op)
+        return NystromSketch(C=C_op, H_KK=H_KK, indices=idx,
+                             rho=jnp.float32(self.rho), B=B,
+                             gram_B=gram_B, gram_C=gram_C)
 
     # -- apply (no HVPs; two tall-skinny contractions + tiny replicated math)
     def apply(self, sketch: NystromSketch, v: PyTree) -> PyTree:
+        be = self._be()
         if self.kappa is not None and self.kappa < self.k:
-            return _apply_woodbury_chunked(sketch, v, self.kappa)
-        if self.stabilized and sketch.W is not None:
-            return _apply_spectral(sketch, v)
-        return _apply_woodbury_direct(sketch, v)
+            return _apply_woodbury_chunked(be, sketch, v, self.kappa,
+                                           self.rho)
+        if self.stabilized and sketch.B is not None:
+            return _apply_whitened(be, sketch, v, self.rho, self.refine)
+        return _apply_woodbury_direct(be, sketch, v, self.rho)
 
     def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
               rng: jax.Array) -> PyTree:
         return self.apply(self.prepare(hvp, indexer, rng), v)
 
 
-def _spectral_form(C: PyTree, H_KK: jax.Array):
-    """H_k = C H_KK† Cᵀ = W diag(σ²) Wᵀ with orthonormal W, via two k×k eighs.
+def _whitened_form(be, C_op, H_KK: jax.Array):
+    """H_k = C H_KK† Cᵀ = B Bᵀ with B = C · U diag(λ†^(1/2)), via k×k eighs.
 
-    B = C · U diag(λ†^(1/2)) gives H_k = BBᵀ; the SVD of the distributed B is
-    recovered from its k×k Gram (BᵀB = Q diag(σ²) Qᵀ), so every p-sized op is
-    a pytree einsum and every decomposition is replicated k×k math.
+    Every p-sized op is one backend contraction; every decomposition is
+    replicated k×k math. The apply then uses the *exact* Woodbury identity
+
+        (B Bᵀ + ρI)⁻¹ = (I − B (BᵀB + ρI)⁻¹ Bᵀ) / ρ
+
+    which holds for any B — unlike the previous spectral form it never needs
+    an orthonormal p×k basis, so f32 eigenvector error is not amplified by
+    1/ρ (that error cost ~1% at ρ=1e-3 on the full-rank analytic test; this
+    form is ~1e-4 there, ~1e-6 with one refinement sweep). Directions with
+    λ(H_KK) below the relative threshold are dropped from B (zero columns),
+    reproducing the truncated pseudo-inverse semantics for the ReLU
+    dead-column pathology (§5). ρ enters only at apply time.
     """
     lam, U = jnp.linalg.eigh(H_KK)
     lam_max = jnp.max(jnp.abs(lam)) + 1e-30
     tol = _EIG_REL_TOL * lam_max * H_KK.shape[0]
-    inv_sqrt = jnp.where(lam > tol, 1.0 / jnp.sqrt(jnp.clip(lam, tol, None)), 0.0)
-    S = U * inv_sqrt[None, :]
-    B = jax.tree.map(lambda c: jnp.einsum('k...,kj->j...',
-                                          c.astype(jnp.float32), S), C)
-    mu, Q = jnp.linalg.eigh(_gram(B))          # mu = σ² ≥ 0
-    sig2 = jnp.clip(mu, 0.0, None)
-    sig = jnp.sqrt(sig2)
-    inv_sig = jnp.where(sig > _EIG_REL_TOL * (sig[-1] + 1e-30), 1.0 / sig, 0.0)
-    QS = Q * inv_sig[None, :]
-    W = jax.tree.map(lambda b: jnp.einsum('k...,kj->j...', b, QS), B)
-    return W, sig2
+    inv_sqrt = jnp.where(lam > tol, 1.0 / jnp.sqrt(jnp.clip(lam, tol, None)),
+                         0.0)
+    B = be.mul_right(C_op, U * inv_sqrt[None, :])
+    G = be.gram(B)                              # (k, k)  [psum of k² floats]
+    return B, 0.5 * (G + G.T)
 
 
-def _apply_spectral(s: NystromSketch, v: PyTree) -> PyTree:
-    """u = v/ρ + W diag(1/(σ²+ρ) − 1/ρ) Wᵀ v  (exact inverse of H_k + ρI)."""
-    rho = s.rho
-    t = _ctv(s.W, v)                           # (k,) [psum of k floats]
-    coef = 1.0 / (s.sig2 + rho) - 1.0 / rho    # ≤ 0; exactly 0 on dropped dirs
-    return tree_axpy(1.0, _cv(s.W, coef * t), tree_scale(v, 1.0 / rho))
+def _apply_whitened(be, s: NystromSketch, v: PyTree, rho: float,
+                    refine: int = 1) -> PyTree:
+    """u = v/ρ − B (BᵀB + ρI)⁻¹ (Bᵀ v) / ρ  with BᵀB stored in the sketch
+    (ρ enters only here, so the sketch retargets across damping values),
+    plus ``refine`` residual-correction sweeps against H_k = BBᵀ."""
+    vf = be.vec(v)
+    k = s.gram_B.shape[0]
+    M = s.gram_B + rho * jnp.eye(k, dtype=s.gram_B.dtype)
+
+    def woodbury(x):
+        t = be.ctv(s.B, x)                     # (k,) [psum of k floats]
+        w = -jnp.linalg.solve(M, t) / rho      # tiny replicated math
+        return be.combine(s.B, w, x, rho)
+
+    u = woodbury(vf)
+    for _ in range(refine):
+        h_u = be.cv(s.B, be.ctv(s.B, u))       # H_k u
+        r = be.sub(be.sub(vf, be.scale(u, rho)), h_u)
+        u = be.add(u, woodbury(r))
+    return be.unvec(u, v)
 
 
-def _apply_woodbury_direct(s: NystromSketch, v: PyTree) -> PyTree:
+def _apply_woodbury_direct(be, s: NystromSketch, v: PyTree,
+                           rho: float) -> PyTree:
     """Eq. 6:  u = v/ρ − C (H_KK + CᵀC/ρ)⁻¹ (Cᵀv) / ρ²."""
-    rho = s.rho
-    t = _ctv(s.C, v)                       # (k,)   [psum of k floats]
-    M = s.H_KK + _gram(s.C) / rho          # (k,k)  [psum of k² floats]
+    vf = be.vec(v)
+    t = be.ctv(s.C, vf)                    # (k,)   [psum of k floats]
+    # gram_C is cached at prepare() for stabilized=False sketches; fall back
+    # to one extra C-pass when applying a stabilized sketch Eq. 6-style.
+    gram_C = s.gram_C if s.gram_C is not None else be.gram(s.C)
+    M = s.H_KK + gram_C / rho              # (k,k)
     w = _sym_solve(M, t)                   # replicated tiny solve
-    correction = _cv(s.C, w / (rho * rho))
-    return tree_sub(tree_scale(v, 1.0 / rho), correction)
+    return be.unvec(be.combine(s.C, -w / (rho * rho), vf, rho), v)
 
 
-def _eig_factors(s: NystromSketch):
+def _eig_factors(be, s: NystromSketch):
     """L = C·U and deactivated-eigenvalue diagonal for Alg. 1 paths."""
     lam, U = jnp.linalg.eigh(s.H_KK)
     scale = jnp.max(jnp.abs(lam)) + 1e-30
     lam_safe = jnp.where(jnp.abs(lam) < _EIG_REL_TOL * scale, _SAFE_BIG, lam)
-    L = jax.tree.map(lambda c: jnp.einsum('k...,kj->j...',
-                                          c.astype(jnp.float32), U), s.C)
-    return L, lam_safe
+    return be.mul_right(s.C, U), lam_safe
 
 
-def _apply_woodbury_chunked(s: NystromSketch, v: PyTree, kappa: int) -> PyTree:
+def _apply_woodbury_chunked(be, s: NystromSketch, v: PyTree, kappa: int,
+                            rho: float) -> PyTree:
     """Alg. 1: recursive rank-κ Woodbury updates, applied in operator form.
 
     State after chunk m: Ĥ_m x = x/ρ − Σ_{j≤m} G_j R_j (G_jᵀ x), held as the
-    factor list {(G_j, R_j)}. Per chunk: apply Ĥ_m to the κ new columns, solve
-    a κ×κ system, append a factor. Bit-equivalent to Eq. 6 for every κ.
+    factor list {(G_j, R_j)}. Per chunk: apply Ĥ_m to the κ new columns
+    (one block of backend contractions — no vmap), solve a κ×κ system,
+    append a factor. Bit-equivalent to Eq. 6 for every κ.
     """
     k = s.indices['leaf'].shape[0]
-    rho = s.rho
-    L, lam = _eig_factors(s)
-    factors: list[tuple[PyTree, jax.Array]] = []
+    L, lam = _eig_factors(be, s)
+    factors: list[tuple[Any, jax.Array]] = []
 
-    def apply_running(x: PyTree) -> PyTree:
-        out = tree_scale(x, 1.0 / rho)
+    def apply_running_block(X):
+        """Ĥ_m applied to a tall-skinny block (backend-native layout)."""
+        out = be.scale(X, 1.0 / rho)
         for G, R in factors:
-            out = tree_sub(out, _cv(G, R @ _ctv(G, x)))
+            out = be.sub(out, be.mul_right(G, R @ be.cross(G, X)))
         return out
 
     for start in range(0, k, kappa):
         width = min(kappa, k - start)
-        Lm = jax.tree.map(lambda l: jax.lax.slice_in_dim(l, start, start + width, axis=0), L)
+        Lm = be.slice_k(L, start, width)
         Jm = jnp.diag(lam[start:start + width])
-        # Ĥ_m applied to each of the κ columns (vmap over the leading axis).
-        HmL = jax.vmap(apply_running)(Lm)
-        S = Jm + _cross(Lm, HmL)
+        HmL = apply_running_block(Lm)
+        S = Jm + be.cross(Lm, HmL)
         S = 0.5 * (S + S.T)
         jitter = 1e-8 * (jnp.trace(jnp.abs(S)) / width + 1.0)
         R = jnp.linalg.inv(S + jitter * jnp.eye(width, dtype=S.dtype))
         factors.append((HmL, 0.5 * (R + R.T)))
 
-    return apply_running(v)
+    vf = be.vec(v)
+    out = be.scale(vf, 1.0 / rho)
+    for G, R in factors:
+        out = be.sub(out, be.cv(G, R @ be.ctv(G, vf)))
+    return be.unvec(out, v)
 
 
 def nystrom_inverse_dense(H: jax.Array, k: int, rho: float,

@@ -1,6 +1,10 @@
 from repro.distributed.sharding import (batch_axes, batch_spec, cache_specs,
                                         named_shardings, param_specs)
-from repro.distributed.compression import (ErrorFeedbackInt8, compressed_psum)
+from repro.distributed.compression import (ErrorFeedbackInt8,
+                                           compressed_all_reduce,
+                                           compressed_psum)
+from repro.distributed.ctx import shard_map
 
 __all__ = ['batch_axes', 'batch_spec', 'cache_specs', 'named_shardings',
-           'param_specs', 'ErrorFeedbackInt8', 'compressed_psum']
+           'param_specs', 'ErrorFeedbackInt8', 'compressed_all_reduce',
+           'compressed_psum', 'shard_map']

@@ -48,6 +48,29 @@ def quantize_roundtrip(x: jax.Array) -> jax.Array:
     return _dequantize(q, s, pad, x.shape)
 
 
+def compressed_all_reduce(contribs: jax.Array, mesh,
+                          axis_name: str) -> jax.Array:
+    """jit-able entry point: int8-wire all-reduce of per-device terms.
+
+    ``contribs``: (n_contributions, *shape) — row i is one device's local
+    contribution (the hypergradient cross-pod reduction shape: each pod
+    holds its own outer-step gradient term); the leading axis must be a
+    multiple of the mesh axis size. Returns the quantized sum of ALL rows,
+    replicated on every device: each shard sums its local rows in f32, then
+    the int8-wire psum crosses the axis. NOTE: a psum of a *replicated*
+    operand multiplies by the axis size — the leading contribution axis is
+    what makes this a reduction rather than a scale-by-n."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.ctx import shard_map
+    rest = (None,) * (contribs.ndim - 1)
+    return shard_map(
+        lambda v: compressed_psum(v.astype(jnp.float32).sum(axis=0),
+                                  axis_name),
+        mesh=mesh, in_specs=P(axis_name, *rest),
+        out_specs=P(*rest))(contribs)
+
+
 def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     """int8-wire psum (use inside shard_map): shared pmax scale, int32
     accumulate — numerically identical to an int8 ring all-reduce."""

@@ -22,6 +22,14 @@ import contextlib
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax.shard_map landed in 0.5.x; on 0.4.x it lives in jax.experimental.
+# Every call site in this repo goes through this name so the version split
+# stays in one place.
+if hasattr(jax, 'shard_map'):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401  (jax<0.5)
+
 _MESH: Mesh | None = None
 
 

@@ -7,4 +7,9 @@ ref.py         pure-jnp oracles (the allclose ground truth in tests)
 Kernels: nystrom_gram (tall-skinny CᵀC), woodbury (Cᵀv / Woodbury apply),
 flash_attention (causal GQA forward), rmsnorm. The dry-run keeps the XLA
 twins so HLO cost analysis sees real FLOPs (DESIGN.md §3).
+
+The Nyström kernels are wired into the solver hot path through
+``repro.core.backend.PallasBackend`` (``NystromIHVP(backend='pallas')``):
+gram / Cᵀv / the fused Woodbury pass-2 stream the (p, k) sketch once per
+pass with the k-tile accumulator VMEM-resident.
 """

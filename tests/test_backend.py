@@ -1,0 +1,167 @@
+"""Contraction-backend parity: tree / flat / pallas(interpret) must agree.
+
+The three backends implement the same four tall-skinny contractions over
+different operand representations (per-leaf pytree einsums, one fused XLA
+matmul, Pallas TPU kernels). Any divergence beyond f32 accumulation noise is
+a bug in the fusion or the kernel tiling — the shapes below deliberately hit
+the padding edges (k not a multiple of the 128-lane width, p not a multiple
+of block_p).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (NystromIHVP, PallasBackend, PyTreeIndexer,
+                        flatten_sketch, flatten_vec, get_backend, make_hvp,
+                        tree_random_like, unflatten_vec)
+
+# p = 8 + 999 + 4 + 1 = 1012: not a multiple of any block size; leaves span
+# rank 1/2/0 and odd sizes.
+PARAMS = {'w': jnp.zeros((8,)), 'm': jnp.zeros((27, 37)), 'b': jnp.zeros((2, 2)),
+          's': jnp.zeros(())}
+
+
+# the canonical flattener is itself under test (test_flatten_roundtrip
+# checks it against a hand-rolled oracle); elsewhere it is the comparator.
+_flat = flatten_vec
+
+
+def _random_sketch(k, seed=0):
+    """Leading-k pytree + matching v, the raw material of every contraction."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    C = jax.tree.map(lambda l: jax.random.normal(keys[0], (k,) + l.shape),
+                     PARAMS)
+    v = tree_random_like(keys[1], PARAMS)
+    return C, v
+
+
+def _instances():
+    # small block_p so the 1012-element flat buffer spans several grid steps
+    # with a ragged tail; interpret=True keeps pallas runnable off-TPU.
+    return {'tree': get_backend('tree'),
+            'flat': get_backend('flat'),
+            'pallas': PallasBackend(interpret=True, block_p=128)}
+
+
+@pytest.mark.parametrize('k', [5, 33, 128])
+def test_primitive_parity(k):
+    """gram / ctv / cv / mul_right / combine agree across backends."""
+    C_tree, v = _random_sketch(k, seed=k)
+    w = jax.random.normal(jax.random.PRNGKey(k + 1), (k,))
+    M = jax.random.normal(jax.random.PRNGKey(k + 2), (k, 3))
+    rho = 0.05
+    out = {}
+    for name, be in _instances().items():
+        C = be.prepare_operand(C_tree)
+        vf = be.vec(v)
+        out[name] = {
+            'gram': be.gram(C),
+            'ctv': be.ctv(C, vf),
+            'cv': _flat(be.unvec(be.cv(C, w), v)),
+            'mul': be.gram(be.mul_right(C, M)),
+            'combine': _flat(be.unvec(be.combine(C, w, vf, rho), v)),
+        }
+    for name in ('flat', 'pallas'):
+        for op in out['tree']:
+            ref, got = out['tree'][op], out[name][op]
+            tol = 1e-4 * (np.abs(np.asarray(ref)).max() + 1.0)
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=tol,
+                                       err_msg=f'{name}:{op} (k={k})')
+
+
+def test_flatten_roundtrip():
+    C_tree, v = _random_sketch(7)
+
+    def oracle_flat(tree):                     # independent of flatten_vec
+        return np.concatenate([np.asarray(x, np.float32).ravel()
+                               for x in jax.tree.leaves(tree)])
+
+    Cf = flatten_sketch(C_tree)
+    assert Cf.shape == (7, oracle_flat(v).size)
+    np.testing.assert_allclose(flatten_vec(v), oracle_flat(v))
+    back = unflatten_vec(flatten_vec(v), v)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(v)):
+        np.testing.assert_array_equal(a, b)
+    # row j of the fused buffer == flattened column j of the pytree sketch
+    row3 = oracle_flat(jax.tree.map(lambda c: c[3], C_tree))
+    np.testing.assert_allclose(Cf[3], row3)
+
+
+def _quadratic_setup(seed=0):
+    idxr = PyTreeIndexer(PARAMS)
+    p = idxr.total
+    B = jax.random.normal(jax.random.PRNGKey(seed), (p, 16))
+    Hm = B @ B.T / p + 0.5 * jnp.eye(p)
+    def loss(prm, hp, batch):
+        th = _flat(prm)
+        return 0.5 * th @ Hm @ th
+    hvp = make_hvp(loss, PARAMS, None, None)
+    v = tree_random_like(jax.random.PRNGKey(seed + 1), PARAMS)
+    return idxr, hvp, v
+
+
+@pytest.mark.parametrize('stabilized', [True, False])
+@pytest.mark.parametrize('k', [10, 33])
+def test_solver_apply_parity(stabilized, k):
+    """End-to-end: same rng ⇒ same sketch columns ⇒ same IHVP, per backend."""
+    idxr, hvp, v = _quadratic_setup(seed=11)
+    rng = jax.random.PRNGKey(12)
+    outs = {}
+    for name, be in _instances().items():
+        solver = NystromIHVP(k=k, rho=1e-2, stabilized=stabilized, backend=be)
+        outs[name] = _flat(solver.solve(hvp, idxr, v, rng))
+    scale = np.abs(np.asarray(outs['tree'])).max()
+    for name in ('flat', 'pallas'):
+        np.testing.assert_allclose(outs[name] / scale, outs['tree'] / scale,
+                                   atol=2e-5, err_msg=f'{name} k={k}')
+
+
+@pytest.mark.parametrize('kappa', [1, 4])
+def test_solver_chunked_parity(kappa):
+    """Alg. 1 chunked-Woodbury path agrees across backends for every κ."""
+    idxr, hvp, v = _quadratic_setup(seed=21)
+    rng = jax.random.PRNGKey(22)
+    outs = {}
+    for name, be in _instances().items():
+        solver = NystromIHVP(k=12, rho=0.1, kappa=kappa, backend=be)
+        outs[name] = _flat(solver.solve(hvp, idxr, v, rng))
+    scale = np.abs(np.asarray(outs['tree'])).max()
+    for name in ('flat', 'pallas'):
+        np.testing.assert_allclose(outs[name] / scale, outs['tree'] / scale,
+                                   atol=2e-4, err_msg=f'{name} kappa={kappa}')
+
+
+def test_backend_through_hypergrad_config():
+    """HypergradConfig(backend=...) reaches the solver and changes nothing
+    numerically (f32 tolerance)."""
+    from repro.core import HypergradConfig
+    idxr, hvp, v = _quadratic_setup(seed=31)
+    outs = {}
+    for backend in ('tree', 'flat'):
+        solver = HypergradConfig(solver='nystrom', k=8, rho=1e-2,
+                                 backend=backend).build()
+        assert solver.backend == backend
+        outs[backend] = _flat(solver.solve(hvp, idxr, v,
+                                           jax.random.PRNGKey(32)))
+    np.testing.assert_allclose(outs['flat'], outs['tree'], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match='unknown backend'):
+        get_backend('gpu4life')
+
+
+def test_apply_under_jit_flat():
+    """Flat-backend prepare+apply jit cleanly (sketch is a valid pytree)."""
+    idxr, hvp, v = _quadratic_setup(seed=41)
+    solver = NystromIHVP(k=6, rho=1e-2, backend='flat')
+
+    @jax.jit
+    def run(rng):
+        sketch = solver.prepare(hvp, idxr, rng)
+        return solver.apply(sketch, v)
+
+    u = run(jax.random.PRNGKey(42))
+    assert jnp.isfinite(_flat(u)).all()

@@ -43,12 +43,20 @@ class TestNystrom:
 
     @pytest.mark.parametrize('r', [2, 4, 8])
     def test_lowrank_exact_recovery(self, r):
-        """Rank-r PSD Hessian is recovered exactly from k=r columns (Remark 1)."""
+        """Rank-r PSD Hessian is recovered exactly from k=r columns (Remark 1).
+
+        Compared at the vector scale (as in test_kappa_equivalence): at k=r
+        the f32 *reference* solve itself deviates from the f64 truth by up to
+        ~3e-3 on small components (ρ=1e-2 amplifies the null-space noise of
+        the rank-deficient H by 1/ρ), so a per-component rtol at 1e-3 asserts
+        below the reference's own noise floor.
+        """
         idxr, p, Hm, hvp, v = _setup(seed=3, rank=r)
         rho = 1e-2
         u = NystromIHVP(k=r, rho=rho).solve(hvp, idxr, v, jax.random.PRNGKey(4))
         u_true = jnp.linalg.solve(Hm + rho * jnp.eye(p), _flat(v))
-        np.testing.assert_allclose(_flat(u), u_true, rtol=1e-3, atol=1e-3)
+        scale = jnp.abs(u_true).max()
+        np.testing.assert_allclose(_flat(u) / scale, u_true / scale, atol=1e-3)
 
     @pytest.mark.parametrize('kappa', [1, 2, 3, 5])
     def test_kappa_equivalence(self, kappa):
@@ -78,6 +86,19 @@ class TestNystrom:
             hvp, idxr, v, jax.random.PRNGKey(10))
         b = NystromIHVP(k=8, rho=1e-2).solve(hvp, idxr, v, jax.random.PRNGKey(10))
         np.testing.assert_allclose(_flat(a), _flat(b), rtol=1e-5, atol=1e-5)
+
+    def test_sketch_retargets_across_rho(self):
+        """The sketch is ρ-free: one prepare, applied under two different
+        damping values, matches each value's own dense truth (the amortized
+        rho-sweep use the pre-built-sketch hypergradient path supports)."""
+        idxr, p, Hm, hvp, v = _setup(seed=23)
+        sketch = NystromIHVP(k=p, rho=1e-2).prepare(hvp, idxr,
+                                                    jax.random.PRNGKey(24))
+        for rho in (1e-2, 1e-1, 1.0):
+            u = NystromIHVP(k=p, rho=rho).apply(sketch, v)
+            u_true = jnp.linalg.solve(Hm + rho * jnp.eye(p), _flat(v))
+            np.testing.assert_allclose(_flat(u), u_true, rtol=5e-3, atol=5e-3,
+                                       err_msg=f'rho={rho}')
 
     def test_zero_hessian_degenerate(self):
         """All-zero H (the ReLU dead-column pathology §5): falls back to v/ρ."""

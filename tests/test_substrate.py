@@ -153,15 +153,24 @@ class TestCompression:
         np.testing.assert_allclose(total, 50e-3, rtol=0.15)
 
     def test_compressed_psum_matches_plain(self):
-        devs = jax.devices()
+        """One contribution row per device; on the 1-device CPU mesh the
+        quantized sum must round-trip the single contribution."""
         mesh = jax.make_mesh((1,), ('x',))
-        from repro.distributed.compression import compressed_psum
+        from repro.distributed.compression import compressed_all_reduce
         x = jax.random.normal(jax.random.PRNGKey(1), (512,))
-        out = jax.jit(jax.shard_map(
-            lambda v: compressed_psum(v, 'x'), mesh=mesh,
-            in_specs=jax.sharding.PartitionSpec(None),
-            out_specs=jax.sharding.PartitionSpec(None)))(x)
+        out = jax.jit(lambda v: compressed_all_reduce(v, mesh, 'x'))(x[None])
+        assert out.shape == x.shape
         np.testing.assert_allclose(out, x, atol=float(jnp.abs(x).max()) / 100)
+
+    def test_compressed_all_reduce_sums_every_row(self):
+        """More contribution rows than devices: every row must reach the
+        sum (a 3-row stack on the 1-device mesh returns row0+row1+row2)."""
+        mesh = jax.make_mesh((1,), ('x',))
+        from repro.distributed.compression import compressed_all_reduce
+        contribs = jnp.stack([jnp.full((64,), 1.0), jnp.full((64,), 2.0),
+                              jnp.full((64,), 4.0)])
+        out = compressed_all_reduce(contribs, mesh, 'x')
+        np.testing.assert_allclose(out, 7.0, atol=0.1)
 
 
 # ---------------------------------------------------------------- optimizers

@@ -5,6 +5,9 @@ Theorem 1:  ‖h* − h‖₂ ≤ ‖g‖₂ ‖F‖op · (1/ρ) ‖E‖op / (ρ
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip('hypothesis', reason='property tests need the test extra')
 from hypothesis import given, settings, strategies as st
 
 
