@@ -7,17 +7,23 @@ roofline fraction (compute term / binding term). Methodology:
 launch/analysis.py docstring.
 
 ``run_ihvp_backend_model`` models the Nyström apply (two tall-skinny
-C-passes) on TPU-class hardware for the three contraction backends. At
-k ≤ 128 the arithmetic intensity of a (p, k) contraction is ~k/4 FLOP/byte —
-far below the ~240 FLOP/byte ridge — so the apply is HBM-bound and the model
-is bytes/BW + launch overhead:
+C-passes) on TPU-class hardware for the contraction backends. At k ≤ 128
+the arithmetic intensity of a (p, k) contraction is ~k/4 FLOP/byte — far
+below the ~240 FLOP/byte ridge — so the apply is HBM-bound and the model
+is bytes/BW + launch overhead (+ collective latency when sharded):
 
-  tree    2 C-passes as 2·n_leaves einsum dispatches + n_leaves (k,)/(p_i,)
-          partials re-reduced on host-side tree sum
-  flat    2 C-passes as 2 fused matmuls over the (k, p) buffer
-  pallas  2 pallas_call grids with the k-tile accumulator VMEM-resident:
-          exactly one HBM read of C per pass and one (k,)/(p,) write — the
-          floor for this shape
+  tree          2 C-passes as 2·n_leaves einsum dispatches + n_leaves
+                (k,)/(p_i,) partials re-reduced on host-side tree sum
+  flat          2 C-passes as 2 fused matmuls over the (k, p) buffer
+  flat_sharded  per-device traffic is flat's divided by n_shards (each chip
+                streams only its (k, p/n_shards) local buffer, plus one
+                read of the (p/n_shards,) psum-weight vector per reduction
+                pass); each sweep's Cᵀv finishes with a k-float psum whose
+                latency (_PSUM_LAT_S, small-message all-reduce) does not
+                shrink with n_shards — the scaling floor
+  pallas        2 pallas_call grids with the k-tile accumulator
+                VMEM-resident: exactly one HBM read of C per pass and one
+                (k,)/(p,) write — the floor for this shape
 """
 import glob
 import json
@@ -28,6 +34,9 @@ from benchmarks.common import emit
 # v5e-class chip: HBM bandwidth and a conservative per-dispatch overhead.
 _HBM_GBPS = 819.0
 _DISPATCH_S = 2e-6
+# small-message (k ≤ 128 floats) all-reduce latency on an ICI ring — wire
+# latency, not bandwidth, so it is independent of n_shards and of k.
+_PSUM_LAT_S = 5e-6
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), '..', 'experiments',
                           'dryrun')
@@ -68,7 +77,7 @@ def run():
 
 
 def _apply_model_s(p: int, k: int, n_leaves: int, backend: str,
-                   refine: int = 1) -> float:
+                   refine: int = 1, n_shards: int = 1) -> float:
     """Modeled seconds for one Nyström apply.
 
     The stabilized apply is (1 + 2·refine) two-C-pass sweeps: the Woodbury
@@ -94,6 +103,15 @@ def _apply_model_s(p: int, k: int, n_leaves: int, backend: str,
         # pass: v read ×2, u write.
         bytes_moved = sweeps * (2 * c_bytes + 3 * vec_bytes)
         dispatches = sweeps * 2
+    elif backend == 'flat_sharded':
+        # flat's per-sweep traffic over the local (k, p/n_shards) buffer,
+        # plus one read of the (p/n_shards,) psum-weight vector in the
+        # reduction pass; the k-float psum closing each sweep's Cᵀv is
+        # latency-bound and does NOT scale down with n_shards.
+        bytes_moved = sweeps * (2 * c_bytes + 4 * vec_bytes) / max(1, n_shards)
+        dispatches = sweeps * 3                   # fuse-local ops/shard_map
+        return (bytes_moved / (_HBM_GBPS * 1e9) + dispatches * _DISPATCH_S
+                + sweeps * _PSUM_LAT_S)
     elif backend == 'pallas':
         # same traffic floor as flat, with the (k,) accumulator pinned in
         # VMEM across the grid (flat relies on XLA picking that schedule;
@@ -106,17 +124,25 @@ def _apply_model_s(p: int, k: int, n_leaves: int, backend: str,
 
 
 def run_ihvp_backend_model(shapes=((1 << 22, 32, 8), (1 << 27, 64, 128),
-                                   (1 << 30, 128, 512)), refine: int = 1):
+                                   (1 << 30, 128, 512)), refine: int = 1,
+                           n_shards: int = 8):
     """Backend apply-time model over (p, k, n_leaves) production shapes,
-    at the solver's default refinement level (matches what tab5 measures)."""
+    at the solver's default refinement level (matches what tab5 measures).
+    flat_sharded is modeled at ``n_shards`` chips: per-chip traffic divides
+    by n_shards while the per-sweep k-float psum latency stays fixed, so
+    its advantage saturates once psum latency dominates (visible at the
+    smallest shape)."""
     out = {}
     for p, k, n_leaves in shapes:
-        per = {b: _apply_model_s(p, k, n_leaves, b, refine)
-               for b in ('tree', 'flat', 'pallas')}
+        per = {b: _apply_model_s(p, k, n_leaves, b, refine,
+                                 n_shards=n_shards if b == 'flat_sharded'
+                                 else 1)
+               for b in ('tree', 'flat', 'flat_sharded', 'pallas')}
         out[(p, k, n_leaves)] = per
         emit('roofline_ihvp_backend', per['pallas'] * 1e6,
              f'p={p} k={k} n_leaves={n_leaves} refine={refine} '
              f"tree={per['tree']*1e3:.3f}ms flat={per['flat']*1e3:.3f}ms "
+             f"flat_sharded(x{n_shards})={per['flat_sharded']*1e3:.3f}ms "
              f"pallas={per['pallas']*1e3:.3f}ms "
              f"tree/pallas={per['tree']/per['pallas']:.2f}x")
     return out

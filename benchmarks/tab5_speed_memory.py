@@ -8,12 +8,20 @@ sequential-HVP count (latency-critical: CG/Neumann chain l HVPs; Nyström's
 k column-HVPs are batchable) and sketch-memory bytes (Nyström's O(kp) vs
 O(p) — the paper's Tab. 5 memory column).
 
-``run_backend_apply`` times the Nyström apply under the three contraction
+``run_backend_apply`` times the Nyström apply under the contraction
 backends (tree | flat | pallas) over pytrees of growing leaf count at fixed
 total p: the tree backend pays per-leaf einsum dispatch that grows with leaf
 count, the flat backend is one fused matmul per pass regardless, and pallas
 off-TPU runs in interpret mode (correctness reference, not a speed number —
-its compiled-TPU cost model is in benchmarks/roofline.py).
+its compiled-TPU cost model is in benchmarks/roofline.py). Each row also
+reports the resident sketch-buffer memory (C plus the whitened factor B),
+for f32 and — on the flat family — bf16 sketch storage, so the
+docs/backends.md table cites reproducible numbers.
+
+``run_sharded_backend_apply`` times flat_sharded vs tree on a mesh over all
+visible devices; on a 1-device host it emits a SKIPPED row with the
+XLA_FLAGS incantation instead (the host device count is fixed before jax
+initializes, so this process cannot grow a mesh itself).
 """
 import time
 
@@ -21,8 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, solver_cfg
-from repro.core import (NystromIHVP, PallasBackend, PyTreeIndexer,
-                        hypergradient, make_hvp, tree_random_like)
+from repro.core import (FlatBackend, FlatShardedBackend, NystromIHVP,
+                        PallasBackend, PyTreeIndexer, hypergradient,
+                        make_hvp, tree_random_like)
 from repro.tasks import build_reweighting
 
 
@@ -75,7 +84,17 @@ def run(sizes=(5, 10, 20), reps: int = 3):
              f'method=nystrom_kappa1 l_or_k={lk} wall_s={per:.4f} '
              f'sequential_hvps=0 sketch_MB={4*p_count/1e6:.1f}(peak κp)')
     out.update(run_backend_apply())
+    out.update(run_sharded_backend_apply())
     return out
+
+
+def _sketch_bytes(sketch) -> int:
+    """Resident bytes of the prepared sketch's p-sized state: the operand C
+    plus the whitened factor B (flat_sharded's ShardedOperand counts its
+    per-device rows once each — replicated leaves genuinely occupy a copy
+    per device there)."""
+    return sum(x.nbytes for part in (sketch.C, sketch.B) if part is not None
+               for x in jax.tree.leaves(part))
 
 
 def _leafy_params(n_leaves: int, p_total: int) -> dict:
@@ -106,15 +125,15 @@ def run_backend_apply(leaf_counts=(2, 8, 32), p_total=1 << 18, k=32,
 
         hvp = make_hvp(inner, params, None, None)
         v = tree_random_like(jax.random.PRNGKey(0), params)
-        backends = ['tree', 'flat']
+        backends = [('tree', 'tree'), ('flat', 'flat'),
+                    ('flat_bf16', FlatBackend(sketch_dtype=jnp.bfloat16))]
         # off-TPU, pallas runs in interpret mode (~13 s/apply): one
         # correctness data point at the largest tree is enough there.
         if include_pallas and (jax.default_backend() == 'tpu'
                                or n_leaves == leaf_counts[-1]):
-            backends.append('pallas')
-        for backend in backends:
-            be = (PallasBackend(interpret=None, block_p=4096)
-                  if backend == 'pallas' else backend)
+            backends.append(('pallas', PallasBackend(interpret=None,
+                                                     block_p=4096)))
+        for backend, be in backends:
             solver = NystromIHVP(k=k, rho=1e-2, backend=be)
             sketch = solver.prepare(hvp, idxr, jax.random.PRNGKey(1))
             sketch = jax.block_until_ready(sketch)
@@ -130,11 +149,76 @@ def run_backend_apply(leaf_counts=(2, 8, 32), p_total=1 << 18, k=32,
             out[('apply', backend, n_leaves)] = per
             emit('tab5_backend_apply', per * 1e6,
                  f'backend={backend} n_leaves={n_leaves} p={p_count} k={k} '
-                 f'apply_wall_s={per:.6f}'
+                 f'apply_wall_s={per:.6f} '
+                 f'sketch_MB={_sketch_bytes(sketch) / 1e6:.1f}'
                  + (' (interpret mode)' if n == 1 else ''))
         tree_t = out[('apply', 'tree', n_leaves)]
         flat_t = out[('apply', 'flat', n_leaves)]
         emit('tab5_backend_apply', 0.0,
              f'summary n_leaves={n_leaves} flat_speedup_vs_tree='
              f'{tree_t / flat_t:.2f}x')
+    return out
+
+
+def run_sharded_backend_apply(n_leaves: int = 16, p_total=1 << 18, k: int = 32,
+                              reps: int = 20):
+    """flat_sharded vs tree apply-time on a mesh over every visible device.
+
+    Every leaf's rows shard over the single 'model' axis except one
+    deliberately replicated leaf, so the psum down-weighting path is always
+    exercised. Emits f32 and bf16 sketch rows. On 1 visible device this
+    emits a SKIPPED pointer instead — relaunch under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the
+    host-mesh numbers quoted in docs/backends.md.
+    """
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    n_dev = jax.device_count()
+    out = {}
+    if n_dev < 2:
+        emit('tab5_sharded_apply', 0.0,
+             'SKIPPED (1 device): rerun under '
+             'XLA_FLAGS=--xla_force_host_platform_device_count=8')
+        return out
+    mesh = Mesh(np.array(jax.devices()), ('model',))
+    params = _leafy_params(n_leaves, p_total)
+    # rows divide n_dev for every leaf but one: 'layer00' stays replicated
+    # so the 1/replication psum weighting is part of the measured path.
+    specs = {name: (P() if name == 'layer00' else P('model', None))
+             for name in params}
+    idxr = PyTreeIndexer(params)
+    p_count = idxr.total
+    d = 1.0 + jnp.arange(p_count, dtype=jnp.float32) / p_count
+
+    def inner(prm, hp, batch):
+        th = jnp.concatenate([x.ravel() for x in jax.tree.leaves(prm)])
+        return 0.5 * jnp.sum(d * th * th)
+
+    hvp = make_hvp(inner, params, None, None)
+    v = tree_random_like(jax.random.PRNGKey(0), params)
+    cases = {
+        'tree': 'tree',
+        'flat_sharded': FlatShardedBackend(mesh=mesh, specs=specs),
+        'flat_sharded_bf16': FlatShardedBackend(mesh=mesh, specs=specs,
+                                                sketch_dtype=jnp.bfloat16),
+    }
+    for name, be in cases.items():
+        solver = NystromIHVP(k=k, rho=1e-2, backend=be)
+        sketch = jax.block_until_ready(
+            solver.prepare(hvp, idxr, jax.random.PRNGKey(1)))
+        apply_fn = jax.jit(solver.apply)
+        jax.block_until_ready(apply_fn(sketch, v))          # warmup/compile
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(apply_fn(sketch, v))
+        per = (time.time() - t0) / reps
+        out[('sharded_apply', name)] = per
+        emit('tab5_sharded_apply', per * 1e6,
+             f'backend={name} n_dev={n_dev} n_leaves={n_leaves} p={p_count} '
+             f'k={k} apply_wall_s={per:.6f} '
+             f'sketch_MB={_sketch_bytes(sketch) / 1e6:.1f}')
+    emit('tab5_sharded_apply', 0.0,
+         f'summary n_dev={n_dev} sharded_speedup_vs_tree='
+         f"{out[('sharded_apply', 'tree')] / out[('sharded_apply', 'flat_sharded')]:.2f}x")
     return out

@@ -6,9 +6,10 @@ Public API:
   BilevelTrainer / BilevelState                   — warm-start bilevel loop
   make_hvp / extract_columns / PyTreeIndexer      — HVP substrate
 """
-from repro.core.backend import (BACKENDS, FlatBackend, PallasBackend,
-                                TreeBackend, flatten_sketch, flatten_vec,
-                                get_backend, unflatten_vec)
+from repro.core.backend import (BACKENDS, FlatBackend, FlatShardedBackend,
+                                PallasBackend, ShardedOperand, TreeBackend,
+                                flatten_sketch, flatten_vec, get_backend,
+                                unflatten_vec)
 from repro.core.bilevel import BilevelState, BilevelTrainer
 from repro.core.hvp import extract_columns, make_hvp, make_hvp_fn
 from repro.core.hypergrad import (HypergradConfig, hypergradient,
@@ -23,7 +24,8 @@ from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
 
 __all__ = [
     'BACKENDS', 'BilevelState', 'BilevelTrainer', 'FlatBackend',
-    'HypergradConfig', 'PallasBackend', 'SOLVERS', 'TreeBackend',
+    'FlatShardedBackend', 'HypergradConfig', 'PallasBackend',
+    'ShardedOperand', 'SOLVERS', 'TreeBackend',
     'CGIHVP', 'ExactIHVP', 'NeumannIHVP', 'NystromIHVP', 'NystromSketch',
     'PyTreeIndexer', 'extract_columns', 'flatten_sketch', 'flatten_vec',
     'get_backend', 'hypergradient', 'make_hvp', 'make_hvp_fn',

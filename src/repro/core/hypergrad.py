@@ -95,7 +95,30 @@ def unrolled_hypergradient(inner_loss: InnerLoss,
 
 @dataclasses.dataclass
 class HypergradConfig:
-    """Config-system entry for the hypergradient feature (see configs/)."""
+    """Config-system entry for the hypergradient feature (see configs/).
+
+    Backend selection (full decision table: README.md / docs/backends.md):
+    ``backend`` names a contraction backend; ``flat_sharded`` additionally
+    needs ``mesh`` (the jax.sharding.Mesh the step runs under) and
+    ``param_specs`` (the PartitionSpec pytree for the parameters, e.g.
+    ``repro.distributed.sharding.param_specs(cfg, mesh)``) — ``build()``
+    constructs the bound backend instance from them. ``sketch_dtype``
+    ('bfloat16' halves sketch memory; contractions accumulate f32) applies
+    to the flat family and is rejected for ``tree``, which never builds a
+    fused buffer.
+
+    >>> cfg = HypergradConfig(solver='nystrom', k=4, backend='flat')
+    >>> solver = cfg.build()
+    >>> (solver.k, solver.backend)
+    (4, 'flat')
+    >>> import jax, numpy as np
+    >>> from jax.sharding import Mesh, PartitionSpec as P
+    >>> mesh = Mesh(np.array(jax.devices()[:1]), ('model',))
+    >>> sharded = HypergradConfig(backend='flat_sharded', mesh=mesh,
+    ...                           sketch_dtype='bfloat16').build()
+    >>> sharded.backend.name
+    'flat_sharded'
+    """
     solver: str = 'nystrom'       # nystrom | cg | neumann | exact
     k: int = 10                   # Nyström rank / iterations l for baselines
     rho: float = 1e-2             # damping (Nyström/exact) or CG Tikhonov
@@ -104,13 +127,42 @@ class HypergradConfig:
     column_chunk: int | None = None
     sketch_refresh_every: int = 1  # outer steps between sketch rebuilds
     importance_sampling: bool = False
-    backend: str = 'tree'         # contraction backend: tree | flat | pallas
-    #   tree   = pytree einsums, sharding-transparent (required under pjit)
-    #   flat   = fused (k, p) buffer, one XLA matmul per contraction
-    #   pallas = flat buffer + TPU kernels (interpret-mode fallback off-TPU)
+    backend: str = 'tree'         # tree | flat | flat_sharded | pallas
+    #   tree         = pytree einsums, sharding-transparent, the default
+    #   flat         = fused (k, p) buffer, one XLA matmul per contraction
+    #   flat_sharded = per-device fused shards + psum (needs mesh/specs)
+    #   pallas       = flat buffer + TPU kernels (interpret fallback off-TPU)
+    mesh: Any = None              # flat_sharded: the step's jax Mesh
+    param_specs: Any = None       # flat_sharded: PartitionSpec pytree
+    sketch_dtype: str | None = None  # flat family: 'bfloat16' halves sketch
+    #   memory; contractions still accumulate in f32
     refine: int = 1               # residual sweeps on the stabilized apply:
     #   0 = literal two-C-pass apply; each sweep adds 4 C-passes and drives
     #   the f32 cancellation error (~eps·λmax/ρ) down to roundoff
+
+    def _build_backend(self):
+        from repro.core.backend import get_backend
+        if not isinstance(self.backend, str):
+            if (self.sketch_dtype is not None or self.mesh is not None
+                    or self.param_specs is not None):
+                raise ValueError(
+                    'backend is a pre-built instance: set sketch_dtype / '
+                    'mesh / param_specs on the instance itself — the config '
+                    'fields would be silently ignored')
+            return self.backend            # pre-built instance passes through
+        kwargs = {}
+        if self.sketch_dtype is not None:
+            if self.backend == 'tree':
+                raise ValueError(
+                    "sketch_dtype has no effect on backend='tree' (it never "
+                    'builds a fused buffer); pick a flat-family backend')
+            kwargs['sketch_dtype'] = jnp.dtype(self.sketch_dtype).type
+        if self.backend == 'flat_sharded':
+            kwargs.update(mesh=self.mesh, specs=self.param_specs)
+        elif self.mesh is not None or self.param_specs is not None:
+            raise ValueError(
+                "mesh/param_specs are only consumed by backend='flat_sharded'")
+        return get_backend(self.backend, **kwargs) if kwargs else self.backend
 
     def build(self):
         from repro.core.solvers import (CGIHVP, ExactIHVP, NeumannIHVP,
@@ -119,7 +171,8 @@ class HypergradConfig:
             return NystromIHVP(k=self.k, rho=self.rho, kappa=self.kappa,
                                column_chunk=self.column_chunk,
                                importance_sampling=self.importance_sampling,
-                               backend=self.backend, refine=self.refine)
+                               backend=self._build_backend(),
+                               refine=self.refine)
         if self.solver == 'cg':
             return CGIHVP(iters=self.k, rho=self.rho)
         if self.solver == 'neumann':

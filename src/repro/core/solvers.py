@@ -16,22 +16,27 @@ Contraction backends: every tall-skinny contraction in the Nyström hot path
 (Cᵀv, Cw, CᵀC, CᵀB) goes through a pluggable backend
 (``repro.core.backend``), selected by ``NystromIHVP(backend=...)``:
 
-  'tree'   per-leaf pytree einsums — the default; the only backend that
-           preserves pjit/multi-axis shardings of the parameter tree, so
-           use it whenever params are sharded.
-  'flat'   the sketch is fused once at prepare() into a single (p, k) f32
-           buffer; each contraction is then ONE fused XLA matmul instead of
-           n_leaves einsums + a Python sum. Fastest on CPU/GPU/single-chip.
-  'pallas' same flat buffer with the gram / Cᵀv / fused-apply passes running
-           in the hand-tiled Pallas TPU kernels (repro.kernels) — one HBM
-           read of C per pass. Interpret-mode (slow) fallback off-TPU.
+  'tree'         per-leaf pytree einsums — the default and the parity
+                 oracle; sharding-transparent but pays n_leaves dispatches
+                 per contraction.
+  'flat'         the sketch is fused once at prepare() into a single (k, p)
+                 buffer; each contraction is then ONE fused XLA matmul
+                 instead of n_leaves einsums + a Python sum. Fastest on
+                 CPU/GPU/single-chip; unsharded steps only.
+  'flat_sharded' flat's fusion under GSPMD sharding: per-device local
+                 (k, p_local) buffers built inside shard_map, reductions
+                 finished by a k-float (k×k) psum. Needs mesh + param
+                 PartitionSpecs; never all-gathers a parameter leaf.
+  'pallas'       flat buffer with the gram / Cᵀv / fused-apply passes in
+                 the hand-tiled Pallas TPU kernels (repro.kernels) — one
+                 HBM read of C per pass. Interpret-mode fallback off-TPU.
 
 Sharding: solvers are pure jax; under pjit with backend='tree', C (leading-k
-parameter pytree) inherits the parameter sharding, CᵀC / Cᵀv lower to
-per-shard contractions + one psum of k² / k floats, and the k×k solve is
-replicated. No solver holds any p×p object. The flat backends fuse the
-sketch into one (p, k) buffer and are meant for unsharded (or single-axis
-data-parallel) steps.
+parameter pytree) inherits the parameter sharding and CᵀC / Cᵀv lower to
+per-shard contractions + one psum. backend='flat_sharded' keeps that
+sharding story while also fusing the per-device p-pass into one matmul —
+the fast path for sharded steps (docs/backends.md has the full design and
+measured numbers). No solver holds any p×p object.
 """
 from __future__ import annotations
 
@@ -82,10 +87,11 @@ class NystromSketch:
     """Prepared sketch: reusable across many IHVP applies (and outer steps).
 
     ``C`` is the backend-native sketch operand: a leading-k parameter pytree
-    for backend='tree', the fused sketch-major (k, p) f32 buffer for
-    backend='flat', or the kernel-tiled (p, k) transpose for
-    backend='pallas' — there is no separate unflatten spec; apply() reads
-    the output structure off the incoming ``v``.
+    for backend='tree', the fused sketch-major (k, p) buffer for
+    backend='flat', the per-device ``ShardedOperand`` (local fused buffer +
+    psum weights) for backend='flat_sharded', or the kernel-tiled (p, k)
+    transpose for backend='pallas' — there is no separate unflatten spec;
+    apply() reads the output structure off the incoming ``v``.
 
     ``B``/``gram_B`` is the numerically-stable whitened form of H_k
     (H_k = B Bᵀ with B = C·U diag(λ†^(1/2)); gram_B = BᵀB): present when the
@@ -123,10 +129,13 @@ class NystromIHVP:
     ``stabilized=False`` is the literal Eq. 6 for paper-faithful
     benchmarking; both agree to solver tolerance on well-conditioned H.
 
-    ``backend`` selects the contraction backend ('tree' | 'flat' | 'pallas',
-    see module docstring), or accepts a pre-built backend instance (e.g.
-    ``PallasBackend(interpret=True)`` in tests). A sketch prepared under one
-    backend must be applied under the same backend.
+    ``backend`` selects the contraction backend ('tree' | 'flat' |
+    'flat_sharded' | 'pallas', see module docstring), or accepts a
+    pre-built backend instance (e.g. ``PallasBackend(interpret=True)`` in
+    tests, or a ``FlatShardedBackend(mesh=..., specs=...)`` — the string
+    form of flat_sharded cannot carry its mesh, so sharded steps pass the
+    instance or go through ``HypergradConfig``). A sketch prepared under
+    one backend must be applied under the same backend.
 
     ``refine``: iterative-refinement sweeps on the stabilized apply. An f32
     Woodbury apply bottoms out at ~eps·λmax/ρ absolute error (the v/ρ-scale
@@ -134,6 +143,22 @@ class NystromIHVP:
     v − (H_k + ρI)u — four extra C-passes, still zero HVPs — and drives the
     error to f32 roundoff (measured: 3e-3 → 5e-6 at ρ=1e-3 on the analytic
     quadratic). refine=0 restores the literal two-pass apply.
+
+    At full rank (k = p) the Nyström inverse is exact — the quickest
+    end-to-end check:
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core.hvp import make_hvp
+    >>> from repro.core.tree_util import PyTreeIndexer
+    >>> params = {'w': jnp.zeros((6,))}
+    >>> d = 1.0 + jnp.arange(6.0)                       # H = diag(d)
+    >>> hvp = make_hvp(lambda p, hp, b: 0.5 * jnp.sum(d * p['w'] ** 2),
+    ...                params, None, None)
+    >>> solver = NystromIHVP(k=6, rho=1e-3, backend='flat')
+    >>> u = solver.solve(hvp, PyTreeIndexer(params), {'w': jnp.ones((6,))},
+    ...                  jax.random.PRNGKey(0))
+    >>> bool(jnp.allclose(u['w'], 1.0 / (d + 1e-3), rtol=1e-3))
+    True
     """
     k: int
     rho: float = 1e-2

@@ -176,6 +176,69 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
     return cache
 
 
+# --------------------------------------------------- per-leaf shard queries
+# (the contraction-backend layer — repro.core.backend.FlatShardedBackend —
+# plans its per-device fused buffer from these; they apply the same
+# degrade-to-replication policy as the param rules above.)
+def sanitize_spec(shape: tuple, spec: P | None, mesh: Mesh) -> P:
+    """``spec`` with entries that cannot shard ``shape`` on ``mesh`` dropped.
+
+    An entry is dropped (→ replicated dim) when any of its axes is absent
+    from the mesh, the combined axis size is 1, or the dim is not divisible
+    by it — the exact policy of ``param_specs``/``ctx.constrain``, applied
+    post-hoc so a backend can accept any (spec × mesh × shape) combination.
+    The result is padded/truncated to ``len(shape)`` entries.
+    """
+    entries = list(spec) if spec is not None else []
+    entries = entries[:len(shape)] + [None] * (len(shape) - len(entries))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= _axis_size(mesh, a) if a in mesh.axis_names else 0
+        out.append(e if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+def spec_shard_count(spec: P, mesh: Mesh) -> int:
+    """Number of *distinct* shards a (sanitized) spec produces — the product
+    of its mesh-axis sizes."""
+    n = 1
+    for e in spec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            n *= _axis_size(mesh, a)
+    return n
+
+
+def replication_factor(spec: P, mesh: Mesh) -> int:
+    """How many devices hold each shard: mesh size / distinct shards.
+
+    1 ⇔ fully sharded over every mesh axis; mesh size ⇔ fully replicated.
+    This is the overcount weight a cross-device psum over a per-device
+    fused buffer must divide out per leaf.
+    """
+    return mesh.devices.size // spec_shard_count(spec, mesh)
+
+
+def local_shape(shape: tuple, spec: P, mesh: Mesh) -> tuple:
+    """Per-device block shape of a leaf with (sanitized) ``spec``."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        size = 1
+        if e is not None:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                size *= _axis_size(mesh, a)
+        out.append(dim // size)
+    return tuple(out)
+
+
 # --------------------------------------------------------------- utilities
 def named_shardings(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,

@@ -1,0 +1,175 @@
+"""Multi-device flat_sharded parity checks — run in a fresh interpreter.
+
+Invoked by tests/test_backend_sharded.py via a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the device count
+must be fixed before jax initializes, and conftest.py deliberately keeps
+the main test process on the 1 real CPU device — see its docstring).
+NOT named test_*.py so pytest never collects it directly.
+
+Checks, on a 2×4 ('data', 'model') host mesh:
+
+  * all four contractions (ctv / cv / gram+cross / mul_right) plus the
+    fused combine match the tree backend to f32 tolerance, with leaves
+    spanning fully-sharded / partially-sharded / replicated / non-divisible
+    (the 9-element leaf with P('data') degrades to replication) / scalar;
+  * end-to-end NystromIHVP apply parity for stabilized / Eq. 6 / chunked;
+  * the compiled prepare→ctv pipeline contains an all-reduce (the psum)
+    and NO all-gather — the fused path never rematerializes a leaf;
+  * bf16 sketch storage stays within bf16-rounding tolerance of tree/f32.
+
+Prints one ``OK <name>`` marker per passed check; the pytest wrapper
+asserts on the full set, so a silently-skipped check fails the suite.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import (NystromIHVP, PyTreeIndexer, get_backend, make_hvp,
+                        tree_random_like)
+from repro.core.backend import flatten_vec
+from repro.distributed.sharding import sanitize_spec
+
+PARAMS = {'w': jnp.zeros((16, 8)),    # P('data','model'): fully sharded
+          'm': jnp.zeros((27, 37)),   # replicated by spec
+          'a': jnp.zeros((8, 4)),     # P('model', None): partially sharded
+          'b': jnp.zeros((9,)),       # P('data') but 9 % 2 != 0 → fallback
+          's': jnp.zeros(())}         # scalar
+SPECS = {'w': P('data', 'model'), 'm': P(None, None), 'a': P('model', None),
+         'b': P('data'), 's': P()}
+K = 7
+
+
+def _mesh():
+    n = jax.device_count()
+    assert n == 8, f'expected 8 host devices, got {n} (XLA_FLAGS not set?)'
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ('data', 'model'))
+
+
+def _sketch_and_vec(seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    C = jax.tree.map(lambda l: jax.random.normal(keys[0], (K,) + l.shape),
+                     PARAMS)
+    return C, tree_random_like(keys[1], PARAMS)
+
+
+def check_primitives(mesh):
+    C_tree, v = _sketch_and_vec()
+    tb, sb = get_backend('tree'), get_backend('flat_sharded', mesh=mesh,
+                                              specs=SPECS)
+    Ct, Cs = tb.prepare_operand(C_tree), sb.prepare_operand(C_tree)
+    vt, vs = tb.vec(v), sb.vec(v)
+    w = jax.random.normal(jax.random.PRNGKey(3), (K,))
+    M = jax.random.normal(jax.random.PRNGKey(4), (K, 3))
+    cases = {
+        'ctv': (sb.ctv(Cs, vs), tb.ctv(Ct, vt)),
+        'gram': (sb.gram(Cs), tb.gram(Ct)),
+        'cv': (flatten_vec(sb.unvec(sb.cv(Cs, w), v)),
+               flatten_vec(tb.cv(Ct, w))),
+        'mul_right': (sb.gram(sb.mul_right(Cs, M)),
+                      tb.gram(tb.mul_right(Ct, M))),
+        'combine': (flatten_vec(sb.unvec(sb.combine(Cs, w, vs, 0.05), v)),
+                    flatten_vec(tb.combine(Ct, w, vt, 0.05))),
+    }
+    for name, (got, ref) in cases.items():
+        tol = 2e-4 * (np.abs(np.asarray(ref)).max() + 1.0)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=tol,
+                                   err_msg=name)
+        print(f'OK primitive:{name}')
+
+
+def _quadratic():
+    idxr = PyTreeIndexer(PARAMS)
+    p = idxr.total
+    B = jax.random.normal(jax.random.PRNGKey(7), (p, 16))
+    Hm = B @ B.T / p + 0.5 * jnp.eye(p)
+
+    def loss(prm, hp, batch):
+        th = flatten_vec(prm)
+        return 0.5 * th @ Hm @ th
+
+    return idxr, make_hvp(loss, PARAMS, None, None)
+
+
+def check_solver(mesh):
+    idxr, hvp = _quadratic()
+    _, v = _sketch_and_vec(seed=9)
+    sb = get_backend('flat_sharded', mesh=mesh, specs=SPECS)
+    rng = jax.random.PRNGKey(12)
+    for label, kw in (('stabilized', dict(k=10, rho=1e-2, stabilized=True)),
+                      ('eq6', dict(k=10, rho=1e-2, stabilized=False)),
+                      ('chunked', dict(k=8, rho=0.1, kappa=3))):
+        ut = flatten_vec(NystromIHVP(backend='tree', **kw)
+                         .solve(hvp, idxr, v, rng))
+        us = flatten_vec(NystromIHVP(backend=sb, **kw)
+                         .solve(hvp, idxr, v, rng))
+        scale = np.abs(np.asarray(ut)).max()
+        np.testing.assert_allclose(us / scale, ut / scale, atol=2e-4,
+                                   err_msg=label)
+        print(f'OK solver:{label}')
+
+
+def check_no_all_gather(mesh):
+    """The whole sharded pipeline — fuse, whitened apply, un-fuse — must
+    lower without a single all-gather of a parameter leaf."""
+    C_tree, v = _sketch_and_vec()
+    sb = get_backend('flat_sharded', mesh=mesh, specs=SPECS)
+    place = {kk: sanitize_spec(PARAMS[kk].shape, SPECS[kk], mesh)
+             for kk in PARAMS}
+    Cp = {kk: jax.device_put(C_tree[kk],
+                             NamedSharding(mesh, P(None, *place[kk])))
+          for kk in PARAMS}
+    vp = {kk: jax.device_put(v[kk], NamedSharding(mesh, place[kk]))
+          for kk in PARAMS}
+
+    def pipeline(Ct, v_):
+        op = sb.prepare_operand(Ct)
+        t = sb.ctv(op, sb.vec(v_))
+        return t, sb.unvec(sb.combine(op, t, sb.vec(v_), 0.1), v_)
+
+    txt = jax.jit(pipeline).lower(Cp, vp).compile().as_text()
+    assert 'all-reduce' in txt, 'expected the psum to lower to all-reduce'
+    assert 'all-gather' not in txt, 'sharded leaf was all-gathered'
+    print('OK hlo:no-all-gather')
+
+
+def check_bf16(mesh):
+    C_tree, v = _sketch_and_vec(seed=21)
+    tb = get_backend('tree')
+    sb = get_backend('flat_sharded', mesh=mesh, specs=SPECS,
+                     sketch_dtype=jnp.bfloat16)
+    op = sb.prepare_operand(C_tree)
+    assert op.buf.dtype == jnp.bfloat16
+    ref = tb.ctv(tb.prepare_operand(C_tree), tb.vec(v))
+    got = sb.ctv(op, sb.vec(v))
+    assert got.dtype == jnp.float32          # psum accumulates f32
+    rel = float(np.max(np.abs(np.asarray(got - ref)))
+                / (np.max(np.abs(np.asarray(ref))) + 1e-9))
+    assert rel < 2e-2, f'bf16 ctv rel err {rel}'
+    gref = tb.gram(tb.prepare_operand(C_tree))
+    grel = float(np.max(np.abs(np.asarray(sb.gram(op) - gref)))
+                 / (np.max(np.abs(np.asarray(gref))) + 1e-9))
+    assert grel < 2e-2, f'bf16 gram rel err {grel}'
+    print('OK bf16:tolerance')
+
+
+EXPECTED = ['primitive:ctv', 'primitive:gram', 'primitive:cv',
+            'primitive:mul_right', 'primitive:combine', 'solver:stabilized',
+            'solver:eq6', 'solver:chunked', 'hlo:no-all-gather',
+            'bf16:tolerance']
+
+
+def main():
+    mesh = _mesh()
+    check_primitives(mesh)
+    check_solver(mesh)
+    check_no_all_gather(mesh)
+    check_bf16(mesh)
+    print('ALL CHECKS PASSED')
+    return 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

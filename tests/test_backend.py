@@ -1,20 +1,27 @@
-"""Contraction-backend parity: tree / flat / pallas(interpret) must agree.
+"""Contraction-backend parity: tree / flat / flat_sharded / pallas agree.
 
-The three backends implement the same four tall-skinny contractions over
+The four backends implement the same four tall-skinny contractions over
 different operand representations (per-leaf pytree einsums, one fused XLA
-matmul, Pallas TPU kernels). Any divergence beyond f32 accumulation noise is
-a bug in the fusion or the kernel tiling — the shapes below deliberately hit
-the padding edges (k not a multiple of the 128-lane width, p not a multiple
-of block_p).
+matmul, per-device fused shards + psum, Pallas TPU kernels). Any divergence
+beyond f32 accumulation noise is a bug in the fusion or the kernel tiling —
+the shapes below deliberately hit the padding edges (k not a multiple of the
+128-lane width, p not a multiple of block_p).
+
+flat_sharded runs here on a single-device mesh (the degenerate-but-complete
+case: same fuse/psum code path, one shard); the real multi-device parity
+suite is tests/test_backend_sharded.py, which re-launches itself under
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import (NystromIHVP, PallasBackend, PyTreeIndexer,
-                        flatten_sketch, flatten_vec, get_backend, make_hvp,
-                        tree_random_like, unflatten_vec)
+from repro.core import (FlatShardedBackend, NystromIHVP, PallasBackend,
+                        PyTreeIndexer, flatten_sketch, flatten_vec,
+                        get_backend, make_hvp, tree_random_like,
+                        unflatten_vec)
 
 # p = 8 + 999 + 4 + 1 = 1012: not a multiple of any block size; leaves span
 # rank 1/2/0 and odd sizes.
@@ -36,11 +43,22 @@ def _random_sketch(k, seed=0):
     return C, v
 
 
+def _mesh1():
+    """Single-device mesh: flat_sharded's degenerate case (one shard)."""
+    return Mesh(np.array(jax.devices()[:1]), ('model',))
+
+
 def _instances():
     # small block_p so the 1012-element flat buffer spans several grid steps
     # with a ragged tail; interpret=True keeps pallas runnable off-TPU.
+    # flat_sharded's specs name an axis the 1-device mesh can't split —
+    # sanitize_spec degrades every entry to replication (size-1 axis).
     return {'tree': get_backend('tree'),
             'flat': get_backend('flat'),
+            'flat_sharded': FlatShardedBackend(
+                mesh=_mesh1(),
+                specs={'w': P('model'), 'm': P(None, 'model'),
+                       'b': P(), 's': P()}),
             'pallas': PallasBackend(interpret=True, block_p=128)}
 
 
@@ -62,7 +80,7 @@ def test_primitive_parity(k):
             'mul': be.gram(be.mul_right(C, M)),
             'combine': _flat(be.unvec(be.combine(C, w, vf, rho), v)),
         }
-    for name in ('flat', 'pallas'):
+    for name in (n for n in out if n != 'tree'):
         for op in out['tree']:
             ref, got = out['tree'][op], out[name][op]
             tol = 1e-4 * (np.abs(np.asarray(ref)).max() + 1.0)
@@ -112,7 +130,7 @@ def test_solver_apply_parity(stabilized, k):
         solver = NystromIHVP(k=k, rho=1e-2, stabilized=stabilized, backend=be)
         outs[name] = _flat(solver.solve(hvp, idxr, v, rng))
     scale = np.abs(np.asarray(outs['tree'])).max()
-    for name in ('flat', 'pallas'):
+    for name in (n for n in outs if n != 'tree'):
         np.testing.assert_allclose(outs[name] / scale, outs['tree'] / scale,
                                    atol=2e-5, err_msg=f'{name} k={k}')
 
@@ -127,7 +145,7 @@ def test_solver_chunked_parity(kappa):
         solver = NystromIHVP(k=12, rho=0.1, kappa=kappa, backend=be)
         outs[name] = _flat(solver.solve(hvp, idxr, v, rng))
     scale = np.abs(np.asarray(outs['tree'])).max()
-    for name in ('flat', 'pallas'):
+    for name in (n for n in outs if n != 'tree'):
         np.testing.assert_allclose(outs[name] / scale, outs['tree'] / scale,
                                    atol=2e-4, err_msg=f'{name} kappa={kappa}')
 
@@ -146,6 +164,61 @@ def test_backend_through_hypergrad_config():
                                            jax.random.PRNGKey(32)))
     np.testing.assert_allclose(outs['flat'], outs['tree'], rtol=1e-4,
                                atol=1e-4)
+
+
+@pytest.mark.parametrize('name', ['flat', 'pallas', 'flat_sharded'])
+def test_bf16_sketch_storage(name):
+    """sketch_dtype=bf16 halves the fused buffer; contractions accumulate
+    f32, so error stays at bf16-rounding (~1e-2 rel), not bf16-accumulation
+    scale."""
+    C_tree, v = _random_sketch(16, seed=5)
+    ref_be = get_backend('tree')
+    ref = {'ctv': ref_be.ctv(C_tree, v), 'gram': ref_be.gram(C_tree)}
+    if name == 'flat_sharded':
+        be = FlatShardedBackend(mesh=_mesh1(), sketch_dtype=jnp.bfloat16)
+    elif name == 'pallas':
+        be = PallasBackend(interpret=True, block_p=128,
+                           sketch_dtype=jnp.bfloat16)
+    else:
+        be = get_backend(name, sketch_dtype=jnp.bfloat16)
+    C = be.prepare_operand(C_tree)
+    buf = C.buf if name == 'flat_sharded' else C
+    assert buf.dtype == jnp.bfloat16
+    assert buf.nbytes * 2 == buf.size * 4          # half of f32 storage
+    for op, got in (('ctv', be.ctv(C, be.vec(v))), ('gram', be.gram(C))):
+        assert got.dtype == jnp.float32            # f32 accumulation
+        scale = np.abs(np.asarray(ref[op])).max() + 1e-9
+        np.testing.assert_allclose(np.asarray(got) / scale,
+                                   np.asarray(ref[op]) / scale, atol=2e-2,
+                                   err_msg=f'{name}:{op}')
+
+
+def test_hypergrad_config_flat_sharded_and_sketch_dtype():
+    """HypergradConfig builds a bound FlatShardedBackend from mesh/specs,
+    threads sketch_dtype through, and rejects nonsense combinations."""
+    from repro.core import HypergradConfig
+    cfg = HypergradConfig(backend='flat_sharded', mesh=_mesh1(),
+                          param_specs=None, sketch_dtype='bfloat16')
+    be = cfg.build().backend
+    assert isinstance(be, FlatShardedBackend)
+    assert be.sketch_dtype == jnp.bfloat16
+    idxr, hvp, v = _quadratic_setup(seed=51)
+    tree_u = _flat(HypergradConfig(k=8).build().solve(
+        hvp, idxr, v, jax.random.PRNGKey(52)))
+    shrd_u = _flat(HypergradConfig(k=8, backend='flat_sharded',
+                                   mesh=_mesh1()).build().solve(
+        hvp, idxr, v, jax.random.PRNGKey(52)))
+    np.testing.assert_allclose(shrd_u, tree_u, rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match='sketch_dtype'):
+        HypergradConfig(backend='tree', sketch_dtype='bfloat16').build()
+    with pytest.raises(ValueError, match='pre-built'):
+        # config fields must not be silently ignored for instance backends
+        HypergradConfig(backend=get_backend('flat'),
+                        sketch_dtype='bfloat16').build()
+    with pytest.raises(ValueError, match='flat_sharded'):
+        HypergradConfig(backend='flat', mesh=_mesh1()).build()
+    with pytest.raises(ValueError, match='requires a mesh'):
+        get_backend('flat_sharded')
 
 
 def test_unknown_backend_rejected():

@@ -1,0 +1,38 @@
+"""flat_sharded on a real multi-device mesh: subprocess-launched parity.
+
+The host-platform device count is a process-wide XLA flag that must be set
+before jax initializes, and conftest.py intentionally keeps this process on
+the single real CPU device (smoke tests and benches depend on it). So the
+8-device parity suite — tests/sharded_parity_check.py — runs in a fresh
+interpreter with XLA_FLAGS=--xla_force_host_platform_device_count=8, and
+this wrapper asserts on its ``OK <name>`` markers so a check that silently
+vanished fails loudly here.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+_TESTS_DIR = Path(__file__).resolve().parent
+_SCRIPT = _TESTS_DIR / 'sharded_parity_check.py'
+_SRC = _TESTS_DIR.parent / 'src'
+
+
+def test_flat_sharded_8device_parity():
+    env = dict(os.environ)
+    env['XLA_FLAGS'] = ('--xla_force_host_platform_device_count=8 '
+                        + env.get('XLA_FLAGS', '')).strip()
+    env['PYTHONPATH'] = str(_SRC) + (
+        os.pathsep + env['PYTHONPATH'] if env.get('PYTHONPATH') else '')
+    # NOTE: deliberately keep JAX_PLATFORMS from the parent env — clearing
+    # it makes the child probe for accelerator plugins (minutes of timeout
+    # on hosts with libtpu installed and no TPU).
+    res = subprocess.run([sys.executable, str(_SCRIPT)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    report = f'--- stdout ---\n{res.stdout}\n--- stderr ---\n{res.stderr}'
+    assert res.returncode == 0, report
+
+    import sharded_parity_check as spc
+    for marker in spc.EXPECTED:
+        assert f'OK {marker}' in res.stdout, f'missing {marker}\n{report}'
+    assert 'ALL CHECKS PASSED' in res.stdout, report
