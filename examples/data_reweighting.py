@@ -1,14 +1,21 @@
 """Data reweighting (paper §5.4): a weight-net learns to down-weight
 head-class examples on long-tailed data; outer loss is balanced validation.
 
-    PYTHONPATH=src python examples/data_reweighting.py --imbalance 100
+Uses the high-level ``BilevelTrainer`` (whose outer step differentiates
+through the ``implicit_root`` solution map — see docs/implicit-api.md).
+
+    python examples/data_reweighting.py --imbalance 100
 """
 import argparse
+import pathlib
 import sys
 
-import jax
+try:
+    import repro  # noqa: F401  (pip install -e .  /  PYTHONPATH=src)
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / 'src'))
 
-sys.path.insert(0, 'src')
+import jax                                               # noqa: E402
 
 from repro.core import BilevelTrainer, HypergradConfig   # noqa: E402
 from repro.optim import adam, momentum                   # noqa: E402

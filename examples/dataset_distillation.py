@@ -1,15 +1,22 @@
 """Dataset distillation (paper §5.2): learn 50 synthetic images whose
 training signal reproduces the full 10-class digit-GMM dataset.
 
-    PYTHONPATH=src python examples/dataset_distillation.py
+Uses the high-level ``BilevelTrainer`` (whose outer step differentiates
+through the ``implicit_root`` solution map — see docs/implicit-api.md).
+
+    python examples/dataset_distillation.py
 """
 import argparse
+import pathlib
 import sys
 
-import jax
-import jax.numpy as jnp
+try:
+    import repro  # noqa: F401  (pip install -e .  /  PYTHONPATH=src)
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / 'src'))
 
-sys.path.insert(0, 'src')
+import jax                                               # noqa: E402
+import jax.numpy as jnp                                  # noqa: E402
 
 from repro.core import BilevelTrainer, HypergradConfig   # noqa: E402
 from repro.optim import adam, sgd                        # noqa: E402

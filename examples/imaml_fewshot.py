@@ -1,19 +1,35 @@
-"""iMAML few-shot meta learning (paper §5.3) with a pluggable IHVP backend.
+"""iMAML few-shot meta learning (paper §5.3) on the implicit_root API:
+per-task hypergradients are ``jax.grad`` through the adaptation map, and a
+meta-batch of tasks is ``jax.vmap`` over it (one batched program instead of
+a per-task Python loop — the benchmark emits the measured speedup row).
 
-    PYTHONPATH=src python examples/imaml_fewshot.py --episodes 60
+    python examples/imaml_fewshot.py --episodes 60 --meta-batch 4
 """
 import argparse
+import pathlib
 import sys
 
-sys.path.insert(0, 'src')
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))          # the benchmarks/ package lives at root
+try:
+    import repro  # noqa: F401  (pip install -e .  /  PYTHONPATH=src)
+except ImportError:
+    sys.path.insert(0, str(_ROOT / 'src'))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument('--episodes', type=int, default=60)
+    ap.add_argument('--meta-batch', type=int, default=4,
+                    help='tasks per vmapped meta-step')
+    ap.add_argument('--bench-tasks', type=int, default=8,
+                    help='meta-batch size for the vmap-vs-loop speedup '
+                         'benchmark (0 disables)')
     args = ap.parse_args()
     from benchmarks import tab3_imaml
-    accs = tab3_imaml.run(n_episodes=args.episodes, n_eval=20)
+    accs = tab3_imaml.run(n_episodes=args.episodes, n_eval=20,
+                          meta_batch=args.meta_batch,
+                          bench_tasks=args.bench_tasks)
     for method, acc in accs.items():
         print(f'{method}: 1-shot test accuracy {acc:.3f}')
 

@@ -1,49 +1,115 @@
 """Quickstart (paper §5.1): per-parameter weight-decay HPO on logistic
-regression with the Nyström hypergradient — runs in ~30 s on CPU.
+regression, written the natural JAX way — the inner training run is an
+``implicit_root`` solution map, and the hypergradient is plain ``jax.grad``
+through it (the custom_vjp backward runs the Nyström IHVP). ~30 s on CPU.
 
-    PYTHONPATH=src python examples/quickstart.py [--solver cg|neumann|nystrom]
+    python examples/quickstart.py [--solver cg|neumann|nystrom|exact]
 """
 import argparse
+import pathlib
 import sys
 
-import jax
+try:
+    import repro  # noqa: F401  (pip install -e .  /  PYTHONPATH=src)
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / 'src'))
 
-sys.path.insert(0, 'src')
+import jax                                               # noqa: E402
+import jax.numpy as jnp                                  # noqa: E402
 
-from repro.core import BilevelTrainer, HypergradConfig   # noqa: E402
-from repro.optim import momentum, sgd                    # noqa: E402
+from repro.core import (config_from_cli, hypergradient,  # noqa: E402
+                        implicit_root, sgd_solver,
+                        unrolled_hypergradient)
+from repro.optim import momentum                         # noqa: E402
 from repro.tasks import build_logreg_weight_decay        # noqa: E402
+
+INNER_STEPS = 100
+INNER_LR = 0.1
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument('--solver', default='nystrom',
                     choices=['nystrom', 'cg', 'neumann', 'exact'])
-    ap.add_argument('--k', type=int, default=5)
-    ap.add_argument('--rho', type=float, default=1e-2)
+    ap.add_argument('--k', type=int, default=None,
+                    help='sketch rank / iterations (default 5)')
+    ap.add_argument('--rho', type=float, default=None,
+                    help='damping (default 1e-2)')
     ap.add_argument('--outer-steps', type=int, default=10)
+    ap.add_argument('--legacy-check', action='store_true',
+                    help='also compute one hypergradient via the legacy '
+                         'hypergradient() wrapper and print the deviation')
     args = ap.parse_args()
 
     task = build_logreg_weight_decay()
-    trainer = BilevelTrainer(
-        inner_loss=task['inner'], outer_loss=task['outer'],
-        inner_opt=sgd(0.1), outer_opt=momentum(0.1, 0.9),
-        hypergrad=HypergradConfig(solver=args.solver, k=args.k, rho=args.rho),
-        init_params=task['init_params'], reset_inner=True)
+    # registry-driven flag forwarding: explicitly-passed flags the solver
+    # does not consume are rejected loudly by build(), never silently dropped
+    hypergrad = config_from_cli(args.solver,
+                                flags={'k': args.k, 'rho': args.rho},
+                                defaults={'k': 5, 'rho': 1e-2})
 
-    rng = jax.random.PRNGKey(0)
-    state = trainer.init(rng, task['init_params'](rng), task['init_hparams']())
+    # INNER_STEPS SGD steps from zero init (§5.1 reset protocol)
+    inner_solver = sgd_solver(task['inner'], INNER_STEPS, INNER_LR,
+                              init=lambda phi, b: {'w': jnp.zeros_like(
+                                  phi['wd'])})
 
-    def repeat(b):
-        while True:
-            yield b
+    solve = implicit_root(inner_solver, task['inner'], hypergrad)
+    opt = momentum(0.1, 0.9)
 
-    state, hist = trainer.run(state, repeat(task['train']),
-                              repeat(task['val']),
-                              steps_per_outer=100,
-                              n_outer=args.outer_steps, log_every=1)
-    print(f"final validation loss: {hist['outer_loss'][-1]:.4f} "
-          f"(solver={args.solver})")
+    @jax.jit
+    def outer_step(phi, ost, step, rng):
+        def obj(phi):
+            theta = solve(phi, task['train'], rng=rng)
+            return task['outer'](theta, phi, task['val'])
+        val, g = jax.value_and_grad(obj)(phi)
+        phi, ost = opt.apply(g, ost, phi, step)
+        return phi, ost, val
+
+    phi = task['init_hparams']()
+    ost = opt.init(phi)
+    for i in range(args.outer_steps):
+        phi, ost, val = outer_step(phi, ost, jnp.int32(i),
+                                   jax.random.PRNGKey(i))
+        print(f'[quickstart] outer {i + 1}/{args.outer_steps} '
+              f'val={float(val):.4f} (pre-update)')
+
+    if args.legacy_check:
+        rng = jax.random.PRNGKey(0)
+        theta = inner_solver(phi, task['train'])
+        new = jax.grad(lambda p: task['outer'](
+            solve(p, task['train'], rng=rng), p, task['val']))(phi)
+        # API-compat: the legacy imperative entry point (now a wrapper over
+        # implicit_root) still accepts its old signature and agrees exactly
+        legacy = hypergradient(task['inner'], task['outer'], theta, phi,
+                               task['train'], task['val'],
+                               hypergrad.build(), rng)
+        dev = max(float(jnp.abs(a - b).max()) for a, b in
+                  zip(jax.tree.leaves(legacy), jax.tree.leaves(new)))
+        print(f'[quickstart] legacy hypergradient() max deviation: {dev:.2e}')
+        # numerics: validate the custom_vjp assembly itself against an
+        # *independent* oracle (differentiating through the inner unroll —
+        # no implicit_root code shared). The exact solver isolates the
+        # plumbing: at k≪p the Nyström estimate legitimately differs from
+        # the oracle by its rank-truncation error, which is not a bug.
+        exact_solve = implicit_root(inner_solver, task['inner'],
+                                    config_from_cli('exact',
+                                                    flags={'rho': args.rho},
+                                                    defaults={'rho': 1e-2}))
+        via_exact = jax.grad(lambda p: task['outer'](
+            exact_solve(p, task['train']), p, task['val']))(phi)
+        oracle = unrolled_hypergradient(
+            task['inner'], task['outer'], theta, phi, task['train'],
+            task['val'], steps=INNER_STEPS, lr=INNER_LR)
+        rel = (max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(jax.tree.leaves(oracle), jax.tree.leaves(via_exact)))
+               / max(float(jnp.abs(x).max())
+                     for x in jax.tree.leaves(oracle)))
+        print(f'[quickstart] custom_vjp (exact solver) vs unrolled oracle: '
+              f'relative deviation {rel:.2e}')
+
+    theta = jax.jit(inner_solver)(phi, task['train'])
+    final = float(task['outer'](theta, phi, task['val']))
+    print(f'final validation loss: {final:.4f} (solver={args.solver})')
 
 
 if __name__ == '__main__':

@@ -16,9 +16,13 @@ Kill it mid-run and relaunch with the same --ckpt-dir to exercise the
 checkpoint/restart path.
 """
 import argparse
+import pathlib
 import sys
 
-sys.path.insert(0, 'src')
+try:
+    import repro  # noqa: F401  (pip install -e .  /  PYTHONPATH=src)
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / 'src'))
 
 from repro.launch import train  # noqa: E402
 

@@ -1,8 +1,9 @@
 """repro.core — the paper's contribution: Nyström implicit differentiation.
 
 Public API:
+  implicit_root                                   — differentiable θ*(φ) map
   NystromIHVP / CGIHVP / NeumannIHVP / ExactIHVP  — IHVP solvers
-  hypergradient / unrolled_hypergradient          — Eq. 3 assembly
+  hypergradient / unrolled_hypergradient          — Eq. 3 assembly (legacy)
   BilevelTrainer / BilevelState                   — warm-start bilevel loop
   make_hvp / extract_columns / PyTreeIndexer      — HVP substrate
 """
@@ -12,10 +13,12 @@ from repro.core.backend import (BACKENDS, FlatBackend, FlatShardedBackend,
                                 unflatten_vec)
 from repro.core.bilevel import BilevelState, BilevelTrainer
 from repro.core.hvp import extract_columns, make_hvp, make_hvp_fn
-from repro.core.hypergrad import (HypergradConfig, hypergradient,
-                                  unrolled_hypergradient)
-from repro.core.solvers import (SOLVERS, CGIHVP, ExactIHVP, NeumannIHVP,
-                                NystromIHVP, NystromSketch,
+from repro.core.hypergrad import (HypergradConfig, config_from_cli,
+                                  hypergradient, unrolled_hypergradient)
+from repro.core.implicit import implicit_root, sgd_solver
+from repro.core.solvers import (SOLVERS, CGIHVP, DenseFactor, ExactIHVP,
+                                IterativeOperator, NeumannIHVP, NystromIHVP,
+                                NystromSketch, SolverSpec,
                                 nystrom_inverse_dense)
 from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_cast, tree_norm, tree_random_like,
@@ -23,14 +26,17 @@ from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_zeros_like)
 
 __all__ = [
-    'BACKENDS', 'BilevelState', 'BilevelTrainer', 'FlatBackend',
-    'FlatShardedBackend', 'HypergradConfig', 'PallasBackend',
-    'ShardedOperand', 'SOLVERS', 'TreeBackend',
+    'BACKENDS', 'BilevelState', 'BilevelTrainer', 'DenseFactor',
+    'FlatBackend', 'FlatShardedBackend', 'HypergradConfig',
+    'IterativeOperator', 'PallasBackend', 'ShardedOperand', 'SOLVERS',
+    'SolverSpec', 'TreeBackend',
     'CGIHVP', 'ExactIHVP', 'NeumannIHVP', 'NystromIHVP', 'NystromSketch',
     'PyTreeIndexer', 'extract_columns', 'flatten_sketch', 'flatten_vec',
-    'get_backend', 'hypergradient', 'make_hvp', 'make_hvp_fn',
-    'nystrom_inverse_dense', 'tree_add', 'tree_axpy', 'tree_cast',
-    'tree_norm', 'tree_random_like', 'tree_scale', 'tree_size', 'tree_sub',
-    'tree_vdot', 'tree_zeros_like', 'unflatten_vec',
+    'config_from_cli', 'get_backend', 'hypergradient', 'implicit_root',
+    'make_hvp',
+    'make_hvp_fn', 'nystrom_inverse_dense', 'sgd_solver', 'tree_add',
+    'tree_axpy',
+    'tree_cast', 'tree_norm', 'tree_random_like', 'tree_scale', 'tree_size',
+    'tree_sub', 'tree_vdot', 'tree_zeros_like', 'unflatten_vec',
     'unrolled_hypergradient',
 ]

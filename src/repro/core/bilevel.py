@@ -7,6 +7,13 @@ The driver is jit-friendly: ``inner_step`` and ``outer_step`` are pure
 functions over an explicit ``BilevelState`` pytree, so the trainer in
 ``launch/train.py`` can pjit them over the production mesh and the
 checkpoint manager can snapshot the whole state atomically.
+
+Outer steps differentiate through the ``implicit_root`` solution map
+(``repro.core.implicit``): the warm-started θ is wrapped as θ*(φ) and the
+hypergradient is literally ``jax.grad`` of ``g(θ*(φ), φ)``. Two RNG streams
+live in the state: ``rng`` drives everything user-visible (inner resets),
+``vjp_rng`` exclusively seeds the backward pass's Nyström column sampling —
+keeping sketch randomness reproducible independent of the training stream.
 """
 from __future__ import annotations
 
@@ -17,8 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hvp import make_hvp
-from repro.core.hypergrad import HypergradConfig, hypergradient
-from repro.core.solvers import NystromIHVP
+from repro.core.hypergrad import HypergradConfig
+from repro.core.implicit import implicit_root
+from repro.core.solvers import IterativeOperator
 from repro.core.tree_util import PyTree, PyTreeIndexer
 from repro.optim.optimizers import Optimizer
 
@@ -33,6 +41,7 @@ class BilevelState:
     inner_step: jax.Array   # int32 scalar
     outer_step: jax.Array   # int32 scalar
     rng: jax.Array
+    vjp_rng: jax.Array      # seeds implicit-root backward (sketch columns)
 
 
 @dataclasses.dataclass
@@ -52,6 +61,7 @@ class BilevelTrainer:
     reset_inner: bool = False
 
     def init(self, rng: jax.Array, params: PyTree, hparams: PyTree) -> BilevelState:
+        rng, vjp_rng = jax.random.split(rng)
         return BilevelState(
             params=params,
             hparams=hparams,
@@ -60,6 +70,7 @@ class BilevelTrainer:
             inner_step=jnp.int32(0),
             outer_step=jnp.int32(0),
             rng=rng,
+            vjp_rng=vjp_rng,
         )
 
     # ------------------------------------------------------------------ inner
@@ -73,21 +84,36 @@ class BilevelTrainer:
             inner_step=state.inner_step + 1), loss
 
     # ------------------------------------------------------------------ outer
+    def _solution_map(self, params: PyTree):
+        """The warm-started θ viewed as an ``implicit_root`` solution map.
+
+        The inner unroll already happened (inner_step_fn); the map's forward
+        just returns its endpoint, and its custom_vjp backward supplies the
+        implicit hypergradient."""
+        return implicit_root(lambda phi, batch: params, self.inner_loss,
+                             self.hypergrad)
+
     def outer_step_fn(self, state: BilevelState, inner_batch: Any,
                       outer_batch: Any) -> tuple[BilevelState, jax.Array]:
-        rng, sub = jax.random.split(state.rng)
-        solver = self.hypergrad.build()
-        indexer = PyTreeIndexer(state.params)
-        hgrad = hypergradient(self.inner_loss, self.outer_loss,
-                              state.params, state.hparams,
-                              inner_batch, outer_batch, solver, sub, indexer)
+        """One hypergradient update on φ.
+
+        Returns the *pre-update* outer loss g(θ, φ_t) — the value the
+        hypergradient was computed at (it falls out of value_and_grad for
+        free), not the loss after the φ update."""
+        vjp_rng, sub = jax.random.split(state.vjp_rng)
+        solve = self._solution_map(state.params)
+
+        def outer_obj(phi):
+            theta = solve(phi, inner_batch, rng=sub)
+            return self.outer_loss(theta, phi, outer_batch)
+
+        outer_loss_pre, hgrad = jax.value_and_grad(outer_obj)(state.hparams)
         hparams, outer_opt_state = self.outer_opt.apply(
             hgrad, state.outer_opt_state, state.hparams, state.outer_step)
-        outer_loss = self.outer_loss(state.params, state.hparams, outer_batch)
 
         state = dataclasses.replace(
             state, hparams=hparams, outer_opt_state=outer_opt_state,
-            outer_step=state.outer_step + 1, rng=rng)
+            outer_step=state.outer_step + 1, vjp_rng=vjp_rng)
 
         if self.reset_inner:
             assert self.init_params is not None, 'reset_inner needs init_params'
@@ -97,53 +123,84 @@ class BilevelTrainer:
                 state, params=params,
                 inner_opt_state=self.inner_opt.init(params),
                 inner_step=jnp.int32(0), rng=rng)
-        return state, outer_loss
+        return state, outer_loss_pre
 
     # ------------------------------------------- amortized-sketch outer step
     def build_sketch(self, state: BilevelState, inner_batch: Any):
-        """Build a Nyström sketch once; reuse for ``sketch_refresh_every``
-        outer steps (beyond-paper amortization — see EXPERIMENTS.md §Perf)."""
+        """Prepare the solver state once; reuse for ``sketch_refresh_every``
+        outer steps (beyond-paper amortization — see EXPERIMENTS.md §Perf).
+
+        Only amortizable (pytree-of-arrays) states survive across steps —
+        NystromSketch, DenseFactor. Iterative solvers return a trace-local
+        ``IterativeOperator`` (it closes over this step's hvp), which would
+        only fail later and opaquely inside the next jitted outer step, so
+        it is rejected here instead."""
         solver = self.hypergrad.build()
-        assert isinstance(solver, NystromIHVP)
         indexer = PyTreeIndexer(state.params)
         hvp = make_hvp(self.inner_loss, state.params, state.hparams, inner_batch)
-        rng, sub = jax.random.split(state.rng)
-        return solver.prepare(hvp, indexer, sub), dataclasses.replace(state, rng=rng)
+        vjp_rng, sub = jax.random.split(state.vjp_rng)
+        prepared = solver.prepare(hvp, indexer, sub)
+        if isinstance(prepared, IterativeOperator):
+            raise TypeError(
+                f'{type(solver).__name__}.prepare returns a trace-local '
+                'IterativeOperator — iterative solvers have nothing to '
+                'amortize across outer steps; use outer_step_fn instead of '
+                'the sketch path')
+        return prepared, dataclasses.replace(state, vjp_rng=vjp_rng)
 
     def outer_step_with_sketch(self, state: BilevelState, sketch,
                                inner_batch: Any, outer_batch: Any):
-        solver = self.hypergrad.build()
-        indexer = PyTreeIndexer(state.params)
-        rng, sub = jax.random.split(state.rng)
-        hgrad = hypergradient(self.inner_loss, self.outer_loss,
-                              state.params, state.hparams,
-                              inner_batch, outer_batch, solver, sub, indexer,
-                              sketch=sketch)
+        """``outer_step_fn`` with the backward pass's ``prepare`` replaced by
+        a pre-built sketch. Returns the pre-update outer loss, like
+        ``outer_step_fn``."""
+        solve = self._solution_map(state.params)
+
+        def outer_obj(phi):
+            theta = solve(phi, inner_batch, state=sketch)
+            return self.outer_loss(theta, phi, outer_batch)
+
+        outer_loss_pre, hgrad = jax.value_and_grad(outer_obj)(state.hparams)
         hparams, outer_opt_state = self.outer_opt.apply(
             hgrad, state.outer_opt_state, state.hparams, state.outer_step)
-        outer_loss = self.outer_loss(state.params, state.hparams, outer_batch)
         return dataclasses.replace(
             state, hparams=hparams, outer_opt_state=outer_opt_state,
-            outer_step=state.outer_step + 1, rng=rng), outer_loss
+            outer_step=state.outer_step + 1), outer_loss_pre
 
     # ------------------------------------------------------------------ loop
     def run(self, state: BilevelState, inner_batches, outer_batches,
             steps_per_outer: int, n_outer: int, log_every: int = 0,
             jit: bool = True):
         """Host-side loop (examples / tests). Production loop lives in
-        launch/train.py with pjit + checkpointing."""
+        launch/train.py with pjit + checkpointing.
+
+        Losses are buffered as device arrays and materialized (one host
+        sync for the whole buffer) only at ``log_every`` boundaries and at
+        the end — a ``float()`` per inner step would force a device sync
+        per step and serialize the async dispatch pipeline."""
         inner = jax.jit(self.inner_step_fn) if jit else self.inner_step_fn
         outer = jax.jit(self.outer_step_fn) if jit else self.outer_step_fn
         history = {'inner_loss': [], 'outer_loss': []}
+        pending_inner: list[jax.Array] = []
+        pending_outer: list[jax.Array] = []
+
+        def flush():
+            history['inner_loss'].extend(float(x) for x in pending_inner)
+            history['outer_loss'].extend(float(x) for x in pending_outer)
+            pending_inner.clear()
+            pending_outer.clear()
+
         it_in, it_out = iter(inner_batches), iter(outer_batches)
         for o in range(n_outer):
             for _ in range(steps_per_outer):
                 state, li = inner(state, next(it_in))
-                history['inner_loss'].append(float(li))
+                pending_inner.append(li)
             ib, ob = next(it_in), next(it_out)
             state, lo = outer(state, ib, ob)
-            history['outer_loss'].append(float(lo))
+            pending_outer.append(lo)
             if log_every and (o + 1) % log_every == 0:
+                flush()
                 print(f'[bilevel] outer {o + 1}/{n_outer} '
-                      f'g={float(lo):.4f} f={history["inner_loss"][-1]:.4f}')
+                      f'g={history["outer_loss"][-1]:.4f} '
+                      f'(pre-update) f={history["inner_loss"][-1]:.4f}')
+        flush()
         return state, history

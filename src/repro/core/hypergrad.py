@@ -8,6 +8,12 @@ inner gradient). Total cost per hypergradient:
 
   * Nyström: k + 1 batched-parallel HVPs (sketch, reusable) + 1 VJP
   * CG/Neumann: l *sequential* HVPs + 1 VJP
+
+The assembly itself lives in ``repro.core.implicit``: the inner solution is a
+``jax.custom_vjp`` map whose backward pass *is* the IHVP + mixed-term VJP, so
+Eq. 3 falls out of plain ``jax.grad`` composition. ``hypergradient`` below is
+the original imperative entry point, kept as a thin compatibility wrapper
+(see docs/implicit-api.md for the migration table).
 """
 from __future__ import annotations
 
@@ -17,8 +23,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.hvp import make_hvp
-from repro.core.tree_util import PyTree, PyTreeIndexer, tree_sub
+from repro.core.tree_util import PyTree, PyTreeIndexer
 
 InnerLoss = Callable[..., jax.Array]   # f(params, hparams, batch) -> scalar
 OuterLoss = Callable[..., jax.Array]   # g(params, hparams, batch) -> scalar
@@ -36,36 +41,26 @@ def hypergradient(inner_loss: InnerLoss,
                   sketch=None) -> PyTree:
     """Approximate dg/dφ at (params, hparams) via implicit differentiation.
 
-    ``sketch``: an optional pre-built ``NystromSketch`` — production trainers
-    amortize one sketch over several outer steps (see BilevelTrainer).
+    Compatibility wrapper: treats ``params`` as the (already-computed) inner
+    solution, wraps it in the ``implicit_root`` solution map, and
+    differentiates ``g(θ*(φ), φ)`` — new code should use
+    ``repro.core.implicit.implicit_root`` directly, which also composes with
+    ``jax.vmap`` over task batches.
+
+    ``sketch``: an optional pre-built solver state (e.g. a ``NystromSketch``)
+    — production trainers amortize one sketch over several outer steps (see
+    BilevelTrainer).
     """
-    indexer = indexer or PyTreeIndexer(params)
+    from repro.core.implicit import implicit_root
+    del indexer   # the implicit map rebuilds it from θ*; kept for API compat
 
-    # v = ∂g/∂θ
-    v = jax.grad(outer_loss, argnums=0)(params, hparams, outer_batch)
+    solve = implicit_root(lambda phi, batch: params, inner_loss, solver)
 
-    # u = (H + ρI)⁻¹ v
-    hvp = make_hvp(inner_loss, params, hparams, inner_batch)
-    if sketch is not None and hasattr(solver, 'apply'):
-        u = solver.apply(sketch, v)
-    else:
-        u = solver.solve(hvp, indexer, v, rng)
-    u = jax.lax.stop_gradient(u)
+    def outer_obj(phi):
+        theta = solve(phi, inner_batch, rng=rng, state=sketch)
+        return outer_loss(theta, phi, outer_batch)
 
-    # mixed term: ∇_φ ⟨∇_θ f(θ, φ), u⟩  (= (∂²f/∂φ∂θ)ᵀ u)
-    def inner_grad_dot_u(phi):
-        g_theta = jax.grad(inner_loss, argnums=0)(params, phi, inner_batch)
-        leaves = jax.tree.leaves(jax.tree.map(
-            lambda a, b: jnp.vdot(a.astype(jnp.float32),
-                                  b.astype(jnp.float32)), g_theta, u))
-        return sum(leaves)
-
-    mixed = jax.grad(inner_grad_dot_u)(hparams)
-
-    # direct term: ∂g/∂φ (zero for e.g. regularization hyperparameters)
-    direct = jax.grad(outer_loss, argnums=1)(params, hparams, outer_batch)
-
-    return tree_sub(direct, mixed)
+    return jax.grad(outer_obj)(hparams)
 
 
 def unrolled_hypergradient(inner_loss: InnerLoss,
@@ -91,6 +86,54 @@ def unrolled_hypergradient(inner_loss: InnerLoss,
         return outer_loss(final, phi, outer_batch)
 
     return jax.grad(inner_sgd)(hparams)
+
+
+def config_from_cli(solver: str, flags: dict, defaults: dict,
+                    **consumed_extras) -> 'HypergradConfig':
+    """Build a HypergradConfig from CLI flags, registry-driven (shared by
+    ``launch/train.py`` and ``examples/quickstart.py``).
+
+    ``flags`` maps field → parsed value with ``None`` meaning "flag not
+    passed" (use argparse ``default=None`` sentinels). An explicitly passed
+    flag the chosen solver does not consume raises here — never a silent
+    drop, even when the value coincides with the config default (which
+    ``build()``'s own strictness check could not distinguish). Unpassed
+    flags fall back to ``defaults`` when (and only when) the solver consumes
+    them. ``consumed_extras`` are script-level tunings (e.g.
+    ``column_chunk``) forwarded only to solvers that consume them.
+    """
+    from repro.core.solvers import SOLVERS
+    if solver not in SOLVERS:
+        raise ValueError(f'unknown solver {solver!r}; registered: '
+                         f'{sorted(SOLVERS)}')
+    spec = SOLVERS[solver]
+    kwargs = {'solver': solver}
+    for name, value in flags.items():
+        if value is not None:
+            if name not in spec.fields:
+                raise ValueError(
+                    f'--{name}={value} is not consumed by solver='
+                    f'{solver!r} (it consumes: '
+                    f'{", ".join(sorted(spec.fields))})')
+            kwargs[name] = value
+        elif name in spec.fields and name in defaults:
+            kwargs[name] = defaults[name]
+    for name, value in consumed_extras.items():
+        if name in spec.fields:
+            kwargs[name] = value
+    return HypergradConfig(**kwargs)
+
+
+# Config fields consumed outside solver construction: ``solver`` selects the
+# registry entry. ``sketch_refresh_every`` is the amortization cadence for
+# the user-driven build_sketch / outer_step_with_sketch path; no trainer
+# reads it automatically yet (wiring it into BilevelTrainer.run is a ROADMAP
+# follow-up), but it is trainer-level by design, so it stays exempt from the
+# solver-field strictness rather than erroring for every solver.
+_TRAINER_FIELDS = ('solver', 'sketch_refresh_every')
+# Backend-selection fields, consumed via _build_backend() by solvers whose
+# SolverSpec sets builds_backend (today: nystrom).
+_BACKEND_FIELDS = ('backend', 'mesh', 'param_specs', 'sketch_dtype')
 
 
 @dataclasses.dataclass
@@ -165,18 +208,37 @@ class HypergradConfig:
         return get_backend(self.backend, **kwargs) if kwargs else self.backend
 
     def build(self):
-        from repro.core.solvers import (CGIHVP, ExactIHVP, NeumannIHVP,
-                                        NystromIHVP)
-        if self.solver == 'nystrom':
-            return NystromIHVP(k=self.k, rho=self.rho, kappa=self.kappa,
-                               column_chunk=self.column_chunk,
-                               importance_sampling=self.importance_sampling,
-                               backend=self._build_backend(),
-                               refine=self.refine)
-        if self.solver == 'cg':
-            return CGIHVP(iters=self.k, rho=self.rho)
-        if self.solver == 'neumann':
-            return NeumannIHVP(iters=self.k, alpha=self.alpha)
-        if self.solver == 'exact':
-            return ExactIHVP(rho=self.rho)
-        raise ValueError(f'unknown solver {self.solver!r}')
+        """Construct the configured solver via the ``SOLVERS`` registry.
+
+        Each registry entry records which config fields its solver consumes;
+        a field set to a non-default value that the chosen solver ignores is
+        an error here — matching the backend-field strictness — instead of a
+        silently dead knob:
+
+        >>> HypergradConfig(solver='cg', alpha=0.5).build()
+        Traceback (most recent call last):
+            ...
+        ValueError: HypergradConfig.alpha=0.5 is not consumed by \
+solver='cg' (it consumes: k, rho) — it would be silently ignored
+        """
+        from repro.core.solvers import SOLVERS
+        spec = SOLVERS.get(self.solver)
+        if spec is None:
+            raise ValueError(f'unknown solver {self.solver!r}; registered: '
+                             f'{sorted(SOLVERS)}')
+        consumed = set(spec.fields) | set(_TRAINER_FIELDS)
+        if spec.builds_backend:
+            consumed |= set(_BACKEND_FIELDS)
+        for f in dataclasses.fields(self):
+            if f.name in consumed:
+                continue
+            if getattr(self, f.name) != f.default:
+                raise ValueError(
+                    f'HypergradConfig.{f.name}={getattr(self, f.name)!r} is '
+                    f'not consumed by solver={self.solver!r} (it consumes: '
+                    f'{", ".join(sorted(spec.fields))}) — it would be '
+                    'silently ignored')
+        kwargs = {kw: getattr(self, name) for name, kw in spec.fields.items()}
+        if spec.builds_backend:
+            kwargs['backend'] = self._build_backend()
+        return spec.cls(**kwargs)

@@ -1,0 +1,196 @@
+"""First-class differentiable implicit solutions (the repo's public API).
+
+The paper's estimator is an *inverse-Hessian-vector product*; what users
+actually want to write is the natural JAX thing
+
+    theta_star = solve(phi, batch)                  # inner optimization
+    jax.grad(lambda phi: g(solve(phi, batch), phi)) # hypergradient, Eq. 3
+
+``implicit_root`` makes that work: it wraps an inner solver in a
+``jax.custom_vjp`` whose backward pass runs the Nyström (or CG / Neumann /
+exact) IHVP plus the mixed-term VJP — the approximate implicit
+differentiation of Grazzi et al. 2020, with the paper's sketch as the linear
+solve. Because the solution map is a plain JAX primitive-like function, it
+composes for free:
+
+  * ``jax.grad``  → Eq. 3 hypergradients (direct term included, since φ also
+    flows into the outer loss directly);
+  * ``jax.vmap``  → batched per-task hypergradients (iMAML meta-batches: the
+    k sketch HVPs of every task run as one batched program instead of a
+    per-task Python loop — see benchmarks/tab3_imaml.py);
+  * ``jax.jit`` / pjit → compiles once; fresh ``rng`` / batch values do not
+    retrace (index sampling is traced, not staged out).
+
+Backward-pass cost is exactly the solver's ``prepare`` + ``apply`` + one VJP
+through the inner gradient; the forward pass is whatever ``inner_solver_fn``
+does (typically T optimizer steps, run *without* differentiation through the
+unroll — that is the point of implicit differentiation).
+
+Example — a quadratic inner problem with an analytic solution map
+(``f = ½·Σ d·θ² − θ·φ`` has ``θ*(φ) = φ/d``, so ``dθ*/dφ = 1/d``):
+
+>>> import jax, jax.numpy as jnp
+>>> from repro.core.implicit import implicit_root
+>>> from repro.core.hypergrad import HypergradConfig
+>>> d = jnp.array([1.0, 2.0, 4.0])
+>>> def inner(theta, phi, batch):
+...     return 0.5 * jnp.sum(d * theta ** 2) - jnp.sum(theta * phi)
+>>> solve = implicit_root(lambda phi, batch: phi / d, inner,
+...                       HypergradConfig(solver='exact', rho=0.0))
+>>> g = jax.grad(lambda phi: jnp.sum(solve(phi, None)))(jnp.ones(3))
+>>> bool(jnp.allclose(g, 1.0 / d, atol=1e-5))
+True
+
+``jax.vmap`` over a task axis gives per-task hypergradients in one program:
+
+>>> phis = jnp.stack([jnp.ones(3), 2.0 * jnp.ones(3)])
+>>> per_task = jax.vmap(
+...     jax.grad(lambda phi: jnp.sum(solve(phi, None))))(phis)
+>>> per_task.shape
+(2, 3)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hvp import make_hvp
+from repro.core.tree_util import PyTree, PyTreeIndexer, tree_scale
+
+InnerSolver = Callable[[PyTree, Any], PyTree]   # (phi, batch) -> theta*
+InnerLoss = Callable[..., jax.Array]            # f(theta, phi, batch) -> scalar
+
+
+def _zeros_cotangent(tree: PyTree) -> PyTree:
+    """Zero cotangents for a non-differentiated argument pytree.
+
+    Inexact leaves get ordinary zeros; integer / PRNG-key leaves get the
+    ``float0`` zeros JAX expects as their tangent type (a plain ``jnp.zeros``
+    there would fail custom_vjp's output-type check)."""
+    def z(x):
+        aval = jax.core.get_aval(x)
+        if jnp.issubdtype(aval.dtype, jnp.inexact):
+            return jnp.zeros(aval.shape, aval.dtype)
+        return np.zeros(aval.shape, jax.dtypes.float0)
+    return jax.tree.map(z, tree)
+
+
+def _implicit_phi_vjp(solver, inner_loss: InnerLoss, theta: PyTree,
+                      phi: PyTree, batch: Any, v: PyTree,
+                      rng: jax.Array, state) -> PyTree:
+    """The φ-cotangent of the solution map θ*(φ): −(∂²f/∂φ∂θ)ᵀ (H+ρI)⁻¹ v.
+
+    ``state`` is an optional pre-built solver state (e.g. an amortized
+    ``NystromSketch``); when absent the solver's ``prepare`` runs here —
+    inside the backward pass, so under ``jax.vmap`` the per-task sketch HVPs
+    batch across tasks."""
+    if state is None:
+        hvp = make_hvp(inner_loss, theta, phi, batch)
+        state = solver.prepare(hvp, PyTreeIndexer(theta), rng)
+    u = jax.lax.stop_gradient(solver.apply(state, v))
+
+    # mixed term: ∇_φ ⟨∇_θ f(θ*, φ), u⟩  (= (∂²f/∂φ∂θ)ᵀ u); f32 accumulation
+    def inner_grad_dot_u(p):
+        g_theta = jax.grad(inner_loss, argnums=0)(theta, p, batch)
+        leaves = jax.tree.leaves(jax.tree.map(
+            lambda a, b: jnp.vdot(a.astype(jnp.float32),
+                                  b.astype(jnp.float32)), g_theta, u))
+        return sum(leaves)
+
+    return tree_scale(jax.grad(inner_grad_dot_u)(phi), -1.0)
+
+
+def implicit_root(inner_solver_fn: InnerSolver, inner_loss: InnerLoss,
+                  hypergrad=None) -> Callable:
+    """Wrap an inner solver into a differentiable solution map ``φ, batch → θ*``.
+
+    Args:
+      inner_solver_fn: ``(phi, batch) -> theta_star`` — any approximate inner
+        optimization (T optimizer steps, a warm-started closure over the
+        current parameters, or an analytic solve). It is *not* differentiated
+        through; the returned map's VJP comes from the implicit function
+        theorem at the point it returns.
+      inner_loss: ``f(theta, phi, batch) -> scalar`` — the inner objective
+        whose stationarity defines θ*. Its Hessian (through HVPs only) and
+        mixed partial drive the backward pass.
+      hypergrad: a ``HypergradConfig`` (built once here), a solver instance
+        implementing the uniform protocol (``prepare``/``apply``), or None
+        for the default Nyström configuration.
+
+    Returns:
+      ``solve(phi, batch=None, rng=None, state=None)`` — a function returning
+      θ*, differentiable in ``phi`` via ``jax.custom_vjp``:
+
+      * ``rng`` seeds the backward pass's sketch-column sampling (Nyström);
+        pass a fresh key per outer step for fresh columns, or reuse one to
+        pin them. Defaults to ``PRNGKey(0)``.
+      * ``state`` optionally injects a pre-built solver state (an amortized
+        ``NystromSketch`` / ``DenseFactor``) so the backward pass skips
+        ``prepare`` — the sketch-amortization story of BilevelTrainer.
+      * ``batch`` and ``rng`` receive zero cotangents: the map is treated as
+        non-differentiable in the data (see docs/implicit-api.md for the
+        residual caveats). θ* carries no residual connection to the forward
+        unroll — gradients flow *only* through the implicit VJP.
+    """
+    from repro.core.hypergrad import HypergradConfig
+    if hypergrad is None:
+        hypergrad = HypergradConfig()
+    solver = (hypergrad.build() if isinstance(hypergrad, HypergradConfig)
+              else hypergrad)
+
+    # ``state`` is an ordinary pytree argument: None (the fresh-prepare path)
+    # flattens to an empty subtree, a NystromSketch/DenseFactor flattens to
+    # arrays — switching between them retraces once, as any structure change
+    # does.
+    @jax.custom_vjp
+    def _solve(phi, batch, rng, state):
+        return inner_solver_fn(phi, batch)
+
+    def _solve_fwd(phi, batch, rng, state):
+        theta = inner_solver_fn(phi, batch)
+        return theta, (theta, phi, batch, rng, state)
+
+    def _solve_bwd(res, v):
+        theta, phi, batch, rng, state = res
+        phi_bar = _implicit_phi_vjp(solver, inner_loss, theta, phi, batch,
+                                    v, rng, state)
+        return (phi_bar, _zeros_cotangent(batch), _zeros_cotangent(rng),
+                _zeros_cotangent(state))
+
+    _solve.defvjp(_solve_fwd, _solve_bwd)
+
+    def solve(phi: PyTree, batch: Any = None, rng: jax.Array | None = None,
+              state=None) -> PyTree:
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        return _solve(phi, batch, rng, state)
+
+    return solve
+
+
+def sgd_solver(inner_loss: InnerLoss, steps: int, lr: float,
+               init: Callable[[PyTree, Any], PyTree] | None = None
+               ) -> InnerSolver:
+    """Canonical ``inner_solver_fn``: ``steps`` plain-SGD steps on
+    ``inner_loss``, unrolled with ``lax.scan`` (no differentiation through
+    the unroll — that is ``implicit_root``'s job).
+
+    ``init``: ``(phi, batch) → θ0``. The default starts from φ itself — the
+    iMAML pattern, where φ is the meta-initialization (and typically also
+    the proximal anchor inside ``inner_loss``). Pass an explicit ``init``
+    when θ and φ live in different spaces (e.g. §5.1 weight-decay HPO).
+    """
+    def solve(phi: PyTree, batch: Any) -> PyTree:
+        theta0 = phi if init is None else init(phi, batch)
+
+        def step(p, _):
+            g = jax.grad(inner_loss)(p, phi, batch)
+            return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+        theta, _ = jax.lax.scan(step, theta0, None, length=steps)
+        return theta
+
+    return solve

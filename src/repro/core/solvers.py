@@ -3,6 +3,22 @@
 Every solver approximates  u ≈ (H + ρI)⁻¹ v  where H = ∇²_θ f is accessed only
 through Hessian-vector products (HVPs).
 
+Uniform solver protocol: every solver implements
+
+    prepare(hvp, indexer, rng) -> state     # touches the model (HVPs)
+    apply(state, v)            -> u         # touches only the state
+    solve(hvp, indexer, v, rng) == apply(prepare(hvp, indexer, rng), v)
+
+``prepare`` does all the work that can be amortized across right-hand sides
+(and, for the Nyström sketch / dense factor, across outer steps); ``apply``
+is the per-v cost. For the iterative baselines (CG/Neumann) there is nothing
+to amortize — their ``prepare`` returns a thin :class:`IterativeOperator`
+that closes over the traced hvp, so it is valid only inside the enclosing
+trace and cannot be shipped across a jit boundary the way a
+:class:`NystromSketch` (pure pytree-of-arrays) can. The protocol is what
+``repro.core.implicit.implicit_root`` drives in its custom_vjp backward
+pass; it replaces the previous ``hasattr(solver, 'apply')`` duck-typing.
+
 * ``NystromIHVP`` — the paper's contribution (Eq. 4/6, Alg. 1). Non-iterative:
   k parallel HVPs build the sketch once, then every apply is two tall-skinny
   contractions and one k×k solve. The κ dial selects the time/space tradeoff
@@ -333,6 +349,30 @@ def nystrom_inverse_dense(H: jax.Array, k: int, rho: float,
 # Iterative baselines
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
+class IterativeOperator:
+    """Prepared state of an iterative solver: a thin operator handle.
+
+    Iterative methods have no sketch to amortize — ``prepare`` just closes
+    over the hvp so that ``apply`` fits the uniform protocol. Because the
+    handle holds a *callable over traced values*, it lives only within the
+    trace that built it: it cannot be checkpointed, donated, or reused after
+    the parameters change (unlike a :class:`NystromSketch` or
+    :class:`DenseFactor`, which are pytrees of arrays)."""
+    hvp: HVP
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DenseFactor:
+    """ExactIHVP's prepared state: the materialized, symmetrized Hessian.
+
+    ρ-free like the Nyström sketch — ``apply`` adds the *applying* solver's
+    ρI, so one factor serves a whole damping sweep (tests / Fig. 1 oracles).
+    """
+    H: jax.Array    # (p, p)
+
+
+@dataclasses.dataclass(frozen=True)
 class CGIHVP:
     """Truncated conjugate gradient on (H + ρI) x = v.
 
@@ -341,9 +381,13 @@ class CGIHVP:
     iters: int = 5
     rho: float = 0.0
 
-    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
-              rng: jax.Array | None = None) -> PyTree:
+    def prepare(self, hvp: HVP, indexer: PyTreeIndexer,
+                rng: jax.Array | None = None) -> IterativeOperator:
         del indexer, rng
+        return IterativeOperator(hvp=hvp)
+
+    def apply(self, state: IterativeOperator, v: PyTree) -> PyTree:
+        hvp = state.hvp
 
         def matvec(x: PyTree) -> PyTree:
             return tree_axpy(self.rho, x, hvp(x))
@@ -368,6 +412,10 @@ class CGIHVP:
         x, _, _, _ = jax.lax.fori_loop(0, self.iters, body, (x, r, p, rs))
         return x
 
+    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
+              rng: jax.Array | None = None) -> PyTree:
+        return self.apply(self.prepare(hvp, indexer, rng), v)
+
 
 @dataclasses.dataclass(frozen=True)
 class NeumannIHVP:
@@ -376,9 +424,13 @@ class NeumannIHVP:
     iters: int = 5
     alpha: float = 1e-2
 
-    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
-              rng: jax.Array | None = None) -> PyTree:
+    def prepare(self, hvp: HVP, indexer: PyTreeIndexer,
+                rng: jax.Array | None = None) -> IterativeOperator:
         del indexer, rng
+        return IterativeOperator(hvp=hvp)
+
+    def apply(self, state: IterativeOperator, v: PyTree) -> PyTree:
+        hvp = state.hvp
 
         def body(_, carry):
             p, acc = carry
@@ -389,35 +441,70 @@ class NeumannIHVP:
         p, acc = jax.lax.fori_loop(0, self.iters, body, (v, v))
         return tree_scale(acc, self.alpha)
 
+    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
+              rng: jax.Array | None = None) -> PyTree:
+        return self.apply(self.prepare(hvp, indexer, rng), v)
+
 
 @dataclasses.dataclass(frozen=True)
 class ExactIHVP:
     """Materialize H column-by-column and dense-solve (tests / tiny models)."""
     rho: float = 1e-2
 
-    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
-              rng: jax.Array | None = None) -> PyTree:
+    def prepare(self, hvp: HVP, indexer: PyTreeIndexer,
+                rng: jax.Array | None = None) -> DenseFactor:
         del rng
-        p = indexer.total
         idx = indexer.all_indices()                     # flat-order structured
         C = extract_columns(hvp, indexer, idx)          # full H, (p, ...) tree
         H = indexer.gather(C, idx)                      # (p, p)
-        H = 0.5 * (H + H.T)
+        return DenseFactor(H=0.5 * (H + H.T))
+
+    def apply(self, state: DenseFactor, v: PyTree) -> PyTree:
+        leaves, treedef = jax.tree.flatten(v)
         v_flat = jnp.concatenate([x.astype(jnp.float32).ravel()
-                                  for x in jax.tree.leaves(v)])
-        u_flat = jnp.linalg.solve(H + self.rho * jnp.eye(p), v_flat)
-        # unflatten back into the parameter structure
+                                  for x in leaves])
+        p = state.H.shape[0]
+        u_flat = jnp.linalg.solve(state.H + self.rho * jnp.eye(p), v_flat)
+        # unflatten back into v's structure (no indexer needed at apply time)
         outs, off = [], 0
-        for shape, dtype, size in zip(indexer.shapes, indexer.dtypes,
-                                      indexer.sizes):
-            outs.append(u_flat[off:off + size].reshape(shape).astype(dtype))
-            off += size
-        return indexer.treedef.unflatten(outs)
+        for leaf in leaves:
+            outs.append(u_flat[off:off + leaf.size].reshape(leaf.shape)
+                        .astype(leaf.dtype))
+            off += leaf.size
+        return treedef.unflatten(outs)
+
+    def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
+              rng: jax.Array | None = None) -> PyTree:
+        return self.apply(self.prepare(hvp, indexer, rng), v)
+
+
+# ---------------------------------------------------------------------------
+# Registry — drives HypergradConfig.build()
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Registry entry: constructor + which HypergradConfig fields it consumes.
+
+    ``fields`` maps config-field name → constructor kwarg (the paper reuses
+    ``k`` as the iteration count l for the iterative baselines, hence the
+    renames). ``builds_backend`` marks the solvers that additionally consume
+    the backend-selection fields (``backend`` / ``mesh`` / ``param_specs`` /
+    ``sketch_dtype``) via ``HypergradConfig._build_backend()``. Any config
+    field set to a non-default value that the chosen solver does not consume
+    is an error at ``build()`` — never silently ignored."""
+    cls: type
+    fields: dict[str, str]
+    builds_backend: bool = False
 
 
 SOLVERS = {
-    'nystrom': NystromIHVP,
-    'cg': CGIHVP,
-    'neumann': NeumannIHVP,
-    'exact': ExactIHVP,
+    'nystrom': SolverSpec(NystromIHVP,
+                          {'k': 'k', 'rho': 'rho', 'kappa': 'kappa',
+                           'column_chunk': 'column_chunk',
+                           'importance_sampling': 'importance_sampling',
+                           'refine': 'refine'},
+                          builds_backend=True),
+    'cg': SolverSpec(CGIHVP, {'k': 'iters', 'rho': 'rho'}),
+    'neumann': SolverSpec(NeumannIHVP, {'k': 'iters', 'alpha': 'alpha'}),
+    'exact': SolverSpec(ExactIHVP, {'rho': 'rho'}),
 }

@@ -19,7 +19,6 @@ Usage (CPU smoke):
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax
@@ -27,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core import (HypergradConfig, PyTreeIndexer, hypergradient)
+from repro.core import config_from_cli, implicit_root
 from repro.data.loader import Prefetcher, ShardedLoader
 from repro.data.synthetic import TokenStream
 from repro.distributed.ctx import activation_mesh
@@ -60,8 +59,10 @@ def main(argv=None):
     ap.add_argument('--seq', type=int, default=128)
     ap.add_argument('--outer-every', type=int, default=50,
                     help='inner steps between Nyström hypergradient updates')
-    ap.add_argument('--k', type=int, default=8)
-    ap.add_argument('--rho', type=float, default=1e-2)
+    ap.add_argument('--k', type=int, default=None,
+                    help='sketch rank / iterations (default 8)')
+    ap.add_argument('--rho', type=float, default=None,
+                    help='damping (default 1e-2)')
     ap.add_argument('--solver', default='nystrom')
     ap.add_argument('--ckpt-dir', default=None)
     ap.add_argument('--ckpt-every', type=int, default=100)
@@ -80,7 +81,11 @@ def main(argv=None):
 
     inner_loss, outer_loss = build_losses(cfg)
     optimizer = make_optimizer(cfg)
-    hg_cfg = HypergradConfig(solver=args.solver, k=args.k, rho=args.rho,
+    # registry-driven flag forwarding: explicitly-passed flags the solver
+    # does not consume are rejected loudly by build(), never silently dropped
+    hg_cfg = config_from_cli(args.solver,
+                             flags={'k': args.k, 'rho': args.rho},
+                             defaults={'k': 8, 'rho': 1e-2},
                              column_chunk=4)
 
     rng = jax.random.PRNGKey(0)
@@ -120,11 +125,15 @@ def main(argv=None):
 
     @jax.jit
     def outer_step(params, hparams, outer_state, step, inner_b, outer_b, key):
-        indexer = PyTreeIndexer(params)
-        hg = hypergradient(inner_loss, outer_loss, params, hparams,
-                           inner_b, outer_b, solver, key, indexer)
+        # the warm-started params are the implicit solution; grad through the
+        # implicit_root map assembles Eq. 3 in the custom_vjp backward pass
+        solve = implicit_root(lambda phi, b: params, inner_loss, solver)
+
+        def outer_obj(phi):
+            return outer_loss(solve(phi, inner_b, rng=key), phi, outer_b)
+
+        val, hg = jax.value_and_grad(outer_obj)(hparams)  # val: pre-update g
         hparams, outer_state = outer_opt.apply(hg, outer_state, hparams, step)
-        val = outer_loss(params, hparams, outer_b)
         return hparams, outer_state, val
 
     # ---------------- loop ----------------
@@ -146,7 +155,7 @@ def main(argv=None):
                     batch, outer_b, jax.random.PRNGKey(i))
                 w = jax.nn.softmax(hparams['domain_logits'])
                 noisy = float(w[jnp.array(stream.noisy_domains)].sum())
-                print(f'[outer] step {i+1} val={float(val):.4f} '
+                print(f'[outer] step {i+1} val(pre-update)={float(val):.4f} '
                       f'noisy-domain weight={noisy:.3f} '
                       f'(uniform={len(stream.noisy_domains)/stream.n_domains:.3f})',
                       flush=True)

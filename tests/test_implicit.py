@@ -1,0 +1,304 @@
+"""implicit_root tests: grad/vmap/jit composition, oracle + legacy parity,
+and the uniform solver protocol.
+
+The analytic quadratic bilevel problem (same as test_hypergrad) gives an
+*exact* solution map θ*(φ) = A⁻¹(Bφ + c), so ``jax.grad`` through
+``implicit_root`` can be checked against the closed-form hypergradient, the
+unrolled-SGD oracle, and the legacy ``hypergradient()`` wrapper.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CGIHVP, ExactIHVP, HypergradConfig, NeumannIHVP,
+                        NystromIHVP, PyTreeIndexer, SOLVERS, hypergradient,
+                        implicit_root, make_hvp, sgd_solver,
+                        tree_random_like, unrolled_hypergradient)
+
+
+def _quadratic_bilevel(seed=0, P=12, Hdim=5):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    Am = jax.random.normal(k1, (P, P))
+    Am = Am @ Am.T / P + jnp.eye(P)
+    Bm = jax.random.normal(k2, (P, Hdim))
+    c = jax.random.normal(k3, (P,))
+    t = jax.random.normal(k4, (P,))
+
+    def inner(prm, hp, batch):
+        th = prm['theta']
+        return 0.5 * th @ Am @ th - th @ (Bm @ hp['phi'] + c)
+
+    def outer(prm, hp, batch):
+        return 0.5 * jnp.sum((prm['theta'] - t) ** 2)
+
+    def solution_map(hp, batch):
+        return {'theta': jnp.linalg.solve(Am, Bm @ hp['phi'] + c)}
+
+    phi0 = {'phi': jnp.ones((Hdim,))}
+    return inner, outer, solution_map, phi0, Am, Bm, t
+
+
+def _analytic_hypergrad(Am, Bm, t, theta, rho):
+    P = Am.shape[0]
+    return Bm.T @ jnp.linalg.solve(Am + rho * jnp.eye(P), theta - t)
+
+
+class TestGradComposition:
+    @pytest.mark.parametrize('solver_name', ['exact', 'nystrom', 'cg'])
+    def test_grad_matches_analytic(self, solver_name):
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        P = Am.shape[0]
+        rho = 1e-3
+        cfg = {'exact': HypergradConfig(solver='exact', rho=rho),
+               'nystrom': HypergradConfig(solver='nystrom', k=P, rho=rho),
+               'cg': HypergradConfig(solver='cg', k=5 * P, rho=rho)}[solver_name]
+        solve = implicit_root(smap, inner, cfg)
+
+        def obj(hp):
+            theta = solve(hp, None, rng=jax.random.PRNGKey(1))
+            return outer(theta, hp, None)
+
+        hg = jax.grad(obj)(phi0)
+        analytic = _analytic_hypergrad(Am, Bm, t, smap(phi0, None)['theta'],
+                                       rho)
+        np.testing.assert_allclose(hg['phi'], analytic, rtol=2e-3, atol=2e-3)
+
+    def test_grad_matches_unrolled_oracle(self):
+        """Implicit grad ≈ differentiating through the inner unroll (ρ→0)."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        theta_star = smap(phi0, None)
+        solve = implicit_root(smap, inner,
+                              HypergradConfig(solver='exact', rho=0.0))
+        hg = jax.grad(lambda hp: outer(solve(hp, None), hp, None))(phi0)
+        oracle = unrolled_hypergradient(inner, outer, theta_star, phi0,
+                                        None, None, steps=800, lr=0.05)
+        np.testing.assert_allclose(hg['phi'], oracle['phi'], rtol=2e-3,
+                                   atol=2e-3)
+
+    def test_matches_legacy_hypergradient_path(self):
+        """Same solver + same rng ⇒ identical columns ⇒ same hypergradient."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        theta_star = smap(phi0, None)
+        solver = NystromIHVP(k=8, rho=1e-2)
+        rng = jax.random.PRNGKey(7)
+        legacy = hypergradient(inner, outer, theta_star, phi0, None, None,
+                               solver, rng)
+        solve = implicit_root(smap, inner, solver)
+        new = jax.grad(lambda hp: outer(solve(hp, None, rng=rng),
+                                        hp, None))(phi0)
+        np.testing.assert_allclose(new['phi'], legacy['phi'], rtol=1e-6,
+                                   atol=1e-6)
+
+    def test_direct_term_included(self):
+        """∂g/∂φ flows through plain autodiff alongside the implicit VJP."""
+        inner, outer0, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        solve = implicit_root(smap, inner,
+                              HypergradConfig(solver='exact', rho=1e-3))
+
+        def outer1(prm, hp, batch):
+            return outer0(prm, hp, batch) + 3.0 * jnp.sum(hp['phi'])
+
+        g0 = jax.grad(lambda hp: outer0(solve(hp, None), hp, None))(phi0)
+        g1 = jax.grad(lambda hp: outer1(solve(hp, None), hp, None))(phi0)
+        np.testing.assert_allclose(g1['phi'] - g0['phi'], 3.0, rtol=1e-5)
+
+    def test_logreg_task_parity(self):
+        """Real task (§5.1 logreg weight decay): implicit grad through a
+        100-step SGD solve agrees with the legacy path at the same point."""
+        from repro.tasks import build_logreg_weight_decay
+        task = build_logreg_weight_decay(D=20, n=100)
+        inner_solver = sgd_solver(task['inner'], steps=100, lr=0.1,
+                                  init=lambda phi, b: {'w': jnp.zeros((20,))})
+
+        phi = {'wd': jnp.full((20,), 0.5)}
+        rng = jax.random.PRNGKey(3)
+        solver = NystromIHVP(k=10, rho=1e-2)
+        solve = implicit_root(inner_solver, task['inner'], solver)
+        new = jax.grad(lambda p: task['outer'](
+            solve(p, task['train'], rng=rng), p, task['val']))(phi)
+        theta_star = inner_solver(phi, task['train'])
+        legacy = hypergradient(task['inner'], task['outer'], theta_star, phi,
+                               task['train'], task['val'], solver, rng)
+        np.testing.assert_allclose(new['wd'], legacy['wd'], rtol=1e-5,
+                                   atol=1e-6)
+
+
+class TestVmapComposition:
+    def test_vmap_matches_per_task_loop(self):
+        """Batched per-task hypergradients == per-task Python loop."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        solve = implicit_root(smap, inner,
+                              HypergradConfig(solver='nystrom', k=12,
+                                              rho=1e-3))
+
+        def task_grad(hp, rng):
+            return jax.grad(lambda h: outer(solve(h, None, rng=rng),
+                                            h, None))(hp)
+
+        B = 4
+        phis = {'phi': jnp.stack([(i + 1.0) * phi0['phi']
+                                  for i in range(B)])}
+        keys = jax.random.split(jax.random.PRNGKey(11), B)
+        batched = jax.vmap(task_grad)(phis, keys)
+        looped = [task_grad({'phi': phis['phi'][i]}, keys[i])['phi']
+                  for i in range(B)]
+        # same columns per task (same key) ⇒ same estimator; batched linalg
+        # kernels differ from looped ones only at ULP level
+        np.testing.assert_allclose(batched['phi'], jnp.stack(looped),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_vmap_imaml_style_shared_meta(self):
+        """vmap with a shared (unbatched) φ and batched task data — the
+        iMAML meta-batch pattern (benchmarks/tab3_imaml.py)."""
+        from repro.tasks import build_imaml
+        task = build_imaml()
+        sampler = task['sampler']
+        meta = task['init_params'](jax.random.PRNGKey(0))
+        solver = NystromIHVP(k=6, rho=1e-2)
+        adapt = sgd_solver(task['inner'], steps=5, lr=0.1)  # meta is θ0
+        solve = implicit_root(adapt, task['inner'], solver)
+
+        def task_grad(sx, sy, qx, qy, key):
+            def obj(m):
+                return task['outer'](solve(m, (sx, sy), rng=key), m, (qx, qy))
+            return jax.grad(obj)(meta)
+
+        eps = [sampler.episode(i) for i in range(3)]
+        SX, SY, QX, QY = (jnp.stack(z) for z in zip(*eps))
+        keys = jax.random.split(jax.random.PRNGKey(5), 3)
+        batched = jax.vmap(task_grad)(SX, SY, QX, QY, keys)
+        for i in range(3):
+            single = task_grad(SX[i], SY[i], QX[i], QY[i], keys[i])
+            for a, b in zip(jax.tree.leaves(batched), jax.tree.leaves(single)):
+                np.testing.assert_allclose(a[i], b, rtol=2e-4, atol=2e-5)
+
+
+class TestJitComposition:
+    def test_jit_of_grad_compiles_once(self):
+        """Fresh rng / batch *values* must not retrace the compiled step."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        solve = implicit_root(smap, inner,
+                              HypergradConfig(solver='nystrom', k=8,
+                                              rho=1e-2))
+
+        @jax.jit
+        def hg_fn(hp, rng):
+            return jax.grad(lambda h: outer(solve(h, None, rng=rng),
+                                            h, None))(hp)
+
+        hg_fn(phi0, jax.random.PRNGKey(0))
+        n0 = hg_fn._cache_size()
+        hg_fn(phi0, jax.random.PRNGKey(1))
+        hg_fn(jax.tree.map(lambda x: 2 * x, phi0), jax.random.PRNGKey(2))
+        assert hg_fn._cache_size() == n0
+
+    def test_amortized_state_path(self):
+        """Passing a pre-built sketch skips prepare and matches it."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        theta_star = smap(phi0, None)
+        solver = NystromIHVP(k=12, rho=1e-3)
+        hvp = make_hvp(inner, theta_star, phi0, None)
+        rng = jax.random.PRNGKey(2)
+        sketch = solver.prepare(hvp, PyTreeIndexer(theta_star), rng)
+        solve = implicit_root(smap, inner, solver)
+        g_state = jax.grad(lambda hp: outer(
+            solve(hp, None, state=sketch), hp, None))(phi0)
+        g_fresh = jax.grad(lambda hp: outer(
+            solve(hp, None, rng=rng), hp, None))(phi0)
+        np.testing.assert_allclose(g_state['phi'], g_fresh['phi'], rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestSolverProtocol:
+    def test_every_registered_solver_has_prepare_apply(self):
+        for name, spec in SOLVERS.items():
+            assert hasattr(spec.cls, 'prepare'), name
+            assert hasattr(spec.cls, 'apply'), name
+            assert hasattr(spec.cls, 'solve'), name
+
+    @pytest.mark.parametrize('solver', [
+        CGIHVP(iters=40, rho=1e-2),
+        NeumannIHVP(iters=100, alpha=0.2),
+        ExactIHVP(rho=1e-2),
+        NystromIHVP(k=8, rho=1e-2),
+    ])
+    def test_prepare_apply_equals_solve(self, solver):
+        params = {'w': jnp.zeros((6,)), 'b': jnp.zeros((2,))}
+        idxr = PyTreeIndexer(params)
+        p = idxr.total
+        B = jax.random.normal(jax.random.PRNGKey(0), (p, p))
+        Hm = B @ B.T / p + jnp.eye(p)
+
+        def loss(prm, hp, batch):
+            th = jnp.concatenate([x.ravel() for x in jax.tree.leaves(prm)])
+            return 0.5 * th @ Hm @ th
+
+        hvp = make_hvp(loss, params, None, None)
+        v = tree_random_like(jax.random.PRNGKey(1), params)
+        rng = jax.random.PRNGKey(2)
+        via_protocol = solver.apply(solver.prepare(hvp, idxr, rng), v)
+        via_solve = solver.solve(hvp, idxr, v, rng)
+        for a, b in zip(jax.tree.leaves(via_protocol),
+                        jax.tree.leaves(via_solve)):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+class TestBuildSketchGuard:
+    def test_iterative_solver_rejected_loudly(self):
+        """CG/Neumann states close over the trace's hvp — build_sketch must
+        reject them up front, not fail opaquely inside the next jitted
+        outer step."""
+        from repro.core import BilevelTrainer
+        from repro.optim import sgd
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        trainer = BilevelTrainer(
+            inner_loss=inner, outer_loss=outer,
+            inner_opt=sgd(0.01), outer_opt=sgd(0.1),
+            hypergrad=HypergradConfig(solver='cg', k=5))
+        state = trainer.init(jax.random.PRNGKey(0), smap(phi0, None), phi0)
+        with pytest.raises(TypeError, match='IterativeOperator'):
+            trainer.build_sketch(state, None)
+
+
+class TestConfigRegistry:
+    def test_unknown_solver_errors(self):
+        with pytest.raises(ValueError, match='unknown solver'):
+            HypergradConfig(solver='bfgs').build()
+
+    @pytest.mark.parametrize('cfg', [
+        HypergradConfig(solver='cg', alpha=0.5),           # cg has no alpha
+        HypergradConfig(solver='neumann', rho=0.5),        # neumann: no rho
+        HypergradConfig(solver='exact', k=3),              # exact: no k
+        HypergradConfig(solver='cg', backend='flat'),      # backend: nystrom
+        HypergradConfig(solver='exact', refine=2),         # refine: nystrom
+    ])
+    def test_ignored_fields_error_loudly(self, cfg):
+        with pytest.raises(ValueError, match='not consumed'):
+            cfg.build()
+
+    def test_config_from_cli_rejects_even_default_valued_flags(self):
+        """An explicitly passed CLI flag the solver ignores errors even when
+        its value coincides with the config default (which build()'s own
+        default-comparison cannot distinguish)."""
+        from repro.core import config_from_cli
+        with pytest.raises(ValueError, match='not consumed'):
+            config_from_cli('exact', flags={'k': 10, 'rho': None},
+                            defaults={'rho': 1e-2})
+        cfg = config_from_cli('exact', flags={'k': None, 'rho': None},
+                              defaults={'k': 8, 'rho': 0.5})
+        assert cfg.build() == ExactIHVP(rho=0.5)
+        cfg = config_from_cli('nystrom', flags={'k': 4, 'rho': None},
+                              defaults={'rho': 1e-2}, column_chunk=2)
+        assert (cfg.k, cfg.column_chunk) == (4, 2)
+
+    def test_consumed_fields_build(self):
+        assert HypergradConfig(solver='cg', k=7, rho=0.0).build() == \
+            CGIHVP(iters=7, rho=0.0)
+        assert HypergradConfig(solver='neumann', k=9, alpha=0.1).build() == \
+            NeumannIHVP(iters=9, alpha=0.1)
+        assert HypergradConfig(solver='exact', rho=0.5).build() == \
+            ExactIHVP(rho=0.5)
+        s = HypergradConfig(solver='nystrom', k=4, kappa=2, refine=0,
+                            backend='flat').build()
+        assert (s.k, s.kappa, s.refine) == (4, 2, 0)
