@@ -13,6 +13,16 @@ the beyond-paper throughput mode (mean-of-batch hypergradient, fewer outer
 updates). ``bench_batched_vs_loop`` times the vmapped program against the
 pre-redesign structure (per-task Python loop over the imperative
 ``hypergradient()``) and emits the speedup row.
+
+``shared_sketch=True`` turns on the shared-sketch meta-batch mode: one
+Nyström sketch is prepared at the meta-initialization on the meta-batch's
+pooled support data (``solve.prepare_state``) and broadcast to every task's
+backward pass as ``state=`` under the vmap — k HVPs per *meta-batch*
+instead of k per *task*. The curvature is then the meta-batch's average at
+the meta-init rather than each task's own at its adapted θ*; at iMAML's
+proximal regularization (H ≈ ∇²ce + reg·I) the two estimators stay closely
+aligned — ``bench_shared_sketch`` measures that alignment (hypergradient
+cosine similarity of the meta-updates) next to the HVP-count reduction.
 """
 import time
 
@@ -40,8 +50,23 @@ def _stack_episodes(eps):
     return tuple(map(jnp.stack, (sx, sy, qx, qy)))
 
 
+def _pool_support(SX, SY):
+    """Concatenate a meta-batch's support sets along the example axis: the
+    Hessian batch for the shared sketch (equal-sized tasks, so the pooled
+    cross-entropy mean is the mean of per-task means — the meta-batch's
+    average curvature)."""
+    return (SX.reshape((-1,) + SX.shape[2:]), SY.reshape(-1))
+
+
+def _cosine(a, b):
+    af = jnp.concatenate([x.ravel() for x in jax.tree.leaves(a)])
+    bf = jnp.concatenate([x.ravel() for x in jax.tree.leaves(b)])
+    return float(af @ bf /
+                 (jnp.linalg.norm(af) * jnp.linalg.norm(bf) + 1e-30))
+
+
 def run(n_episodes: int = 60, n_eval: int = 20, meta_batch: int = 1,
-        bench_tasks: int = 8):
+        bench_tasks: int = 8, shared_sketch: bool = False):
     task = build_imaml()
     sampler = task['sampler']
     rng = jax.random.PRNGKey(0)
@@ -53,15 +78,30 @@ def run(n_episodes: int = 60, n_eval: int = 20, meta_batch: int = 1,
         ost = opt.init(meta)
         solver = solver_cfg(method, k=10, rho=1e-2, alpha=1e-2).build()
         solve = implicit_root(adapt_fn, task['inner'], solver)
+        # shared-sketch mode needs an amortizable (pytree-of-arrays) state;
+        # the iterative baselines keep per-task backward-pass prepares
+        shared = shared_sketch and getattr(type(solver), 'amortizable', False)
         t0 = time.time()
 
         @jax.jit
         def meta_step(meta, ost, SX, SY, QX, QY, keys, step):
-            def task_grad(sx, sy, qx, qy, key):
-                def obj(m):
-                    theta = solve(m, (sx, sy), rng=key)
-                    return task['outer'](theta, m, (qx, qy))
-                return jax.grad(obj)(meta)
+            if shared:
+                # one sketch at the meta-init for the whole meta-batch:
+                # k HVPs total instead of k per task
+                sketch = solve.prepare_state(meta, meta,
+                                             _pool_support(SX, SY), keys[0])
+
+                def task_grad(sx, sy, qx, qy, key):
+                    def obj(m):
+                        theta = solve(m, (sx, sy), state=sketch)
+                        return task['outer'](theta, m, (qx, qy))
+                    return jax.grad(obj)(meta)
+            else:
+                def task_grad(sx, sy, qx, qy, key):
+                    def obj(m):
+                        theta = solve(m, (sx, sy), rng=key)
+                        return task['outer'](theta, m, (qx, qy))
+                    return jax.grad(obj)(meta)
 
             hg = jax.vmap(task_grad)(SX, SY, QX, QY, keys)   # per-task Eq. 3
             hg = jax.tree.map(lambda x: x.mean(0), hg)
@@ -91,9 +131,10 @@ def run(n_episodes: int = 60, n_eval: int = 20, meta_batch: int = 1,
         results[method] = sum(accs) / len(accs)
         emit('tab3_imaml', (time.time() - t0) * 1e6 / n_episodes,
              f'method={method} 1shot_test_acc={results[method]:.3f} '
-             f'meta_batch={meta_batch}')
+             f'meta_batch={meta_batch} shared_sketch={shared}')
     if bench_tasks:
         bench_batched_vs_loop(n_tasks=bench_tasks)
+        bench_shared_sketch(n_tasks=bench_tasks)
     return results
 
 
@@ -150,3 +191,66 @@ def bench_batched_vs_loop(n_tasks: int = 8, iters: int = 3,
          f'method={method} tasks={n_tasks} path=vmap_batched '
          f'speedup={t_loop / t_vmap:.2f}x')
     return t_loop, t_vmap
+
+
+def bench_shared_sketch(n_tasks: int = 8, iters: int = 3, k: int = 10,
+                        method: str = 'nystrom'):
+    """Shared-sketch meta-batch row: one sketch prepared at the meta-init
+    (``solve.prepare_state``, k HVPs per meta-batch) and broadcast as
+    ``state=`` under the vmap, vs the per-task backward-pass prepare
+    (n_tasks × k HVPs). Emits the HVP-count reduction, the wall-time
+    speedup, and the cosine similarity of the two meta-updates (the
+    staleness+pooling cost of sharing — acceptance floor 0.99)."""
+    task = build_imaml()
+    sampler = task['sampler']
+    meta = task['init_params'](jax.random.PRNGKey(0))
+    solver = solver_cfg(method, k=k).build()
+    adapt_fn = make_adapt(task)
+    solve = implicit_root(adapt_fn, task['inner'], solver)
+
+    SX, SY, QX, QY = _stack_episodes(
+        [sampler.episode(i) for i in range(n_tasks)])
+    keys = jax.random.split(jax.random.PRNGKey(1), n_tasks)
+
+    def mean_grad(task_grad, *extra):
+        hg = jax.vmap(task_grad)(SX, SY, QX, QY, *extra)
+        return jax.tree.map(lambda x: x.mean(0), hg)
+
+    @jax.jit
+    def per_task(meta, keys):
+        def task_grad(sx, sy, qx, qy, key):
+            def obj(m):
+                return task['outer'](solve(m, (sx, sy), rng=key), m, (qx, qy))
+            return jax.grad(obj)(meta)
+        return mean_grad(task_grad, keys)
+
+    @jax.jit
+    def shared(meta, key):
+        sketch = solve.prepare_state(meta, meta, _pool_support(SX, SY), key)
+
+        def task_grad(sx, sy, qx, qy):
+            def obj(m):
+                theta = solve(m, (sx, sy), state=sketch)
+                return task['outer'](theta, m, (qx, qy))
+            return jax.grad(obj)(meta)
+        return mean_grad(task_grad)
+
+    g_pt = jax.block_until_ready(per_task(meta, keys))
+    g_sh = jax.block_until_ready(shared(meta, keys[0]))
+    cos = _cosine(g_pt, g_sh)
+
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(per_task(meta, keys))
+    t_pt = (time.time() - t0) / iters
+
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(shared(meta, keys[0]))
+    t_sh = (time.time() - t0) / iters
+
+    emit('tab3_imaml_shared_sketch', t_sh * 1e6,
+         f'method={method} tasks={n_tasks} k={k} '
+         f'hvps_per_meta_batch={k} (per_task_prepare={n_tasks * k}) '
+         f'cosine_vs_per_task={cos:.4f} speedup={t_pt / t_sh:.2f}x')
+    return t_pt, t_sh, cos

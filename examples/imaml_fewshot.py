@@ -25,11 +25,16 @@ def main():
     ap.add_argument('--bench-tasks', type=int, default=8,
                     help='meta-batch size for the vmap-vs-loop speedup '
                          'benchmark (0 disables)')
+    ap.add_argument('--shared-sketch', action='store_true',
+                    help='share one Nyström sketch (built at the meta-init '
+                         'on pooled support data) across the meta-batch: '
+                         'k HVPs per meta-batch instead of per task')
     args = ap.parse_args()
     from benchmarks import tab3_imaml
     accs = tab3_imaml.run(n_episodes=args.episodes, n_eval=20,
                           meta_batch=args.meta_batch,
-                          bench_tasks=args.bench_tasks)
+                          bench_tasks=args.bench_tasks,
+                          shared_sketch=args.shared_sketch)
     for method, acc in accs.items():
         print(f'{method}: 1-shot test accuracy {acc:.3f}')
 

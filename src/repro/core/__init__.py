@@ -5,6 +5,7 @@ Public API:
   NystromIHVP / CGIHVP / NeumannIHVP / ExactIHVP  — IHVP solvers
   hypergradient / unrolled_hypergradient          — Eq. 3 assembly (legacy)
   BilevelTrainer / BilevelState                   — warm-start bilevel loop
+  SketchPolicy / SketchState                      — sketch lifecycle (amortization)
   make_hvp / extract_columns / PyTreeIndexer      — HVP substrate
 """
 from repro.core.backend import (BACKENDS, FlatBackend, FlatShardedBackend,
@@ -18,8 +19,8 @@ from repro.core.hypergrad import (HypergradConfig, config_from_cli,
 from repro.core.implicit import implicit_root, sgd_solver
 from repro.core.solvers import (SOLVERS, CGIHVP, DenseFactor, ExactIHVP,
                                 IterativeOperator, NeumannIHVP, NystromIHVP,
-                                NystromSketch, SolverSpec,
-                                nystrom_inverse_dense)
+                                NystromSketch, SketchPolicy, SketchState,
+                                SolverSpec, nystrom_inverse_dense)
 from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_cast, tree_norm, tree_random_like,
                                   tree_scale, tree_size, tree_sub, tree_vdot,
@@ -29,7 +30,7 @@ __all__ = [
     'BACKENDS', 'BilevelState', 'BilevelTrainer', 'DenseFactor',
     'FlatBackend', 'FlatShardedBackend', 'HypergradConfig',
     'IterativeOperator', 'PallasBackend', 'ShardedOperand', 'SOLVERS',
-    'SolverSpec', 'TreeBackend',
+    'SketchPolicy', 'SketchState', 'SolverSpec', 'TreeBackend',
     'CGIHVP', 'ExactIHVP', 'NeumannIHVP', 'NystromIHVP', 'NystromSketch',
     'PyTreeIndexer', 'extract_columns', 'flatten_sketch', 'flatten_vec',
     'config_from_cli', 'get_backend', 'hypergradient', 'implicit_root',

@@ -14,6 +14,14 @@ hypergradient is literally ``jax.grad`` of ``g(θ*(φ), φ)``. Two RNG streams
 live in the state: ``rng`` drives everything user-visible (inner resets),
 ``vjp_rng`` exclusively seeds the backward pass's Nyström column sampling —
 keeping sketch randomness reproducible independent of the training stream.
+
+Sketch lifecycle: the amortizable solvers (Nyström/exact) prepare a
+pytree-of-arrays state that can serve several outer steps. ``run`` drives
+that automatically — a :class:`~repro.core.solvers.SketchPolicy` rebuilds
+the sketch every ``sketch_refresh_every`` outer steps (the
+``HypergradConfig`` knob) under ``lax.cond``-friendly staleness tracking;
+``build_sketch`` / ``outer_step_with_sketch`` remain as the manual
+hand-driven pair and share the same policy code path.
 """
 from __future__ import annotations
 
@@ -23,11 +31,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.hvp import make_hvp
 from repro.core.hypergrad import HypergradConfig
 from repro.core.implicit import implicit_root
-from repro.core.solvers import IterativeOperator
-from repro.core.tree_util import PyTree, PyTreeIndexer
+from repro.core.solvers import SketchPolicy, SketchState
+from repro.core.tree_util import PyTree
 from repro.optim.optimizers import Optimizer
 
 
@@ -93,27 +100,25 @@ class BilevelTrainer:
         return implicit_root(lambda phi, batch: params, self.inner_loss,
                              self.hypergrad)
 
-    def outer_step_fn(self, state: BilevelState, inner_batch: Any,
-                      outer_batch: Any) -> tuple[BilevelState, jax.Array]:
-        """One hypergradient update on φ.
-
-        Returns the *pre-update* outer loss g(θ, φ_t) — the value the
-        hypergradient was computed at (it falls out of value_and_grad for
-        free), not the loss after the φ update."""
-        vjp_rng, sub = jax.random.split(state.vjp_rng)
+    def _outer_update(self, state: BilevelState, inner_batch: Any,
+                      outer_batch: Any, rng: jax.Array | None = None,
+                      sketch=None) -> tuple[BilevelState, jax.Array]:
+        """Shared core of every outer step: one hypergradient update on φ,
+        with the backward pass either preparing fresh (``rng`` seeds the
+        column sampling) or reusing a pre-built ``sketch``. Handles the
+        ``reset_inner`` protocol uniformly across both paths."""
         solve = self._solution_map(state.params)
 
         def outer_obj(phi):
-            theta = solve(phi, inner_batch, rng=sub)
+            theta = solve(phi, inner_batch, rng=rng, state=sketch)
             return self.outer_loss(theta, phi, outer_batch)
 
         outer_loss_pre, hgrad = jax.value_and_grad(outer_obj)(state.hparams)
         hparams, outer_opt_state = self.outer_opt.apply(
             hgrad, state.outer_opt_state, state.hparams, state.outer_step)
-
         state = dataclasses.replace(
             state, hparams=hparams, outer_opt_state=outer_opt_state,
-            outer_step=state.outer_step + 1, vjp_rng=vjp_rng)
+            outer_step=state.outer_step + 1)
 
         if self.reset_inner:
             assert self.init_params is not None, 'reset_inner needs init_params'
@@ -125,60 +130,136 @@ class BilevelTrainer:
                 inner_step=jnp.int32(0), rng=rng)
         return state, outer_loss_pre
 
-    # ------------------------------------------- amortized-sketch outer step
-    def build_sketch(self, state: BilevelState, inner_batch: Any):
-        """Prepare the solver state once; reuse for ``sketch_refresh_every``
-        outer steps (beyond-paper amortization — see EXPERIMENTS.md §Perf).
+    def outer_step_fn(self, state: BilevelState, inner_batch: Any,
+                      outer_batch: Any) -> tuple[BilevelState, jax.Array]:
+        """One hypergradient update on φ with a fresh backward-pass prepare.
 
-        Only amortizable (pytree-of-arrays) states survive across steps —
-        NystromSketch, DenseFactor. Iterative solvers return a trace-local
-        ``IterativeOperator`` (it closes over this step's hvp), which would
-        only fail later and opaquely inside the next jitted outer step, so
-        it is rejected here instead."""
-        solver = self.hypergrad.build()
-        indexer = PyTreeIndexer(state.params)
-        hvp = make_hvp(self.inner_loss, state.params, state.hparams, inner_batch)
+        Returns the *pre-update* outer loss g(θ, φ_t) — the value the
+        hypergradient was computed at (it falls out of value_and_grad for
+        free), not the loss after the φ update."""
         vjp_rng, sub = jax.random.split(state.vjp_rng)
-        prepared = solver.prepare(hvp, indexer, sub)
-        if isinstance(prepared, IterativeOperator):
-            raise TypeError(
-                f'{type(solver).__name__}.prepare returns a trace-local '
-                'IterativeOperator — iterative solvers have nothing to '
-                'amortize across outer steps; use outer_step_fn instead of '
-                'the sketch path')
+        state = dataclasses.replace(state, vjp_rng=vjp_rng)
+        return self._outer_update(state, inner_batch, outer_batch, rng=sub)
+
+    # ------------------------------------------- amortized-sketch outer step
+    def _built_solver(self):
+        """The configured solver instance (built from the HypergradConfig,
+        or the bare instance the trainer was handed)."""
+        return (self.hypergrad.build()
+                if isinstance(self.hypergrad, HypergradConfig)
+                else self.hypergrad)
+
+    def _default_refresh_every(self) -> int:
+        return (self.hypergrad.sketch_refresh_every
+                if isinstance(self.hypergrad, HypergradConfig) else 1)
+
+    def sketch_policy(self, refresh_every: int | None = None) -> SketchPolicy:
+        """The trainer's sketch lifecycle policy. ``refresh_every`` defaults
+        to the config's ``sketch_refresh_every`` (1 when ``hypergrad`` is a
+        bare solver instance). Raises TypeError for iterative solvers, whose
+        prepared state is trace-local (nothing to amortize)."""
+        if refresh_every is None:
+            refresh_every = self._default_refresh_every()
+        return SketchPolicy(solver=self._built_solver(),
+                            inner_loss=self.inner_loss,
+                            refresh_every=refresh_every)
+
+    def build_sketch(self, state: BilevelState, inner_batch: Any):
+        """Manually prepare the solver state once (k HVPs); reuse via
+        ``outer_step_with_sketch``. ``run`` does this automatically — this
+        pair stays for callers that drive their own loop. Delegates to
+        :class:`SketchPolicy`, which rejects iterative solvers up front
+        (their trace-local state would only fail later, opaquely, inside the
+        next jitted outer step)."""
+        policy = self.sketch_policy()
+        vjp_rng, sub = jax.random.split(state.vjp_rng)
+        prepared = policy.build(state.params, state.hparams, inner_batch, sub)
         return prepared, dataclasses.replace(state, vjp_rng=vjp_rng)
 
     def outer_step_with_sketch(self, state: BilevelState, sketch,
                                inner_batch: Any, outer_batch: Any):
         """``outer_step_fn`` with the backward pass's ``prepare`` replaced by
         a pre-built sketch. Returns the pre-update outer loss, like
-        ``outer_step_fn``."""
-        solve = self._solution_map(state.params)
+        ``outer_step_fn`` (and, like it, honors ``reset_inner``)."""
+        return self._outer_update(state, inner_batch, outer_batch,
+                                  sketch=sketch)
 
-        def outer_obj(phi):
-            theta = solve(phi, inner_batch, state=sketch)
-            return self.outer_loss(theta, phi, outer_batch)
+    def outer_step_with_policy(self, state: BilevelState,
+                               sketch_state: SketchState, inner_batch: Any,
+                               outer_batch: Any,
+                               policy: SketchPolicy | None = None):
+        """One outer step under the automatic sketch lifecycle: refresh the
+        sketch if it has gone stale (a ``lax.cond`` — k HVPs only on refresh
+        steps), then update φ against it. jit-friendly: ``sketch_state`` is
+        a pytree carried across steps; its structure never changes.
 
-        outer_loss_pre, hgrad = jax.value_and_grad(outer_obj)(state.hparams)
-        hparams, outer_opt_state = self.outer_opt.apply(
-            hgrad, state.outer_opt_state, state.hparams, state.outer_step)
-        return dataclasses.replace(
-            state, hparams=hparams, outer_opt_state=outer_opt_state,
-            outer_step=state.outer_step + 1), outer_loss_pre
+        The vjp_rng stream is split every step but *consumed* only when the
+        refresh fires, so at ``refresh_every=1`` the stream — and hence the
+        sampled sketch columns and the whole trajectory — matches
+        ``outer_step_fn`` exactly (asserted in
+        tests/test_sketch_lifecycle.py)."""
+        if policy is None:
+            policy = self.sketch_policy()
+        vjp_rng, sub = jax.random.split(state.vjp_rng)
+        sketch_state, rebuilt = policy.refresh(
+            sketch_state, state.params, state.hparams, inner_batch, sub)
+        state = dataclasses.replace(
+            state, vjp_rng=jnp.where(rebuilt, vjp_rng, state.vjp_rng))
+        state, outer_loss_pre = self._outer_update(
+            state, inner_batch, outer_batch, sketch=sketch_state.sketch)
+        if self.reset_inner:
+            # θ just jumped to a fresh init: the sketch's curvature is void
+            sketch_state = policy.invalidate(sketch_state)
+        return state, sketch_state, outer_loss_pre
 
     # ------------------------------------------------------------------ loop
     def run(self, state: BilevelState, inner_batches, outer_batches,
             steps_per_outer: int, n_outer: int, log_every: int = 0,
-            jit: bool = True):
+            jit: bool = True, sketch_refresh_every: int | None = None,
+            fresh_inner_batch: bool = False):
         """Host-side loop (examples / tests). Production loop lives in
         launch/train.py with pjit + checkpointing.
+
+        Sketch lifecycle: for amortizable solvers (Nyström/exact) the loop
+        drives ``outer_step_with_policy`` — the sketch is rebuilt every
+        ``sketch_refresh_every`` outer steps (argument overrides the
+        ``HypergradConfig`` field; both default to 1 = fresh every step,
+        which reproduces the ``outer_step_fn`` trajectory exactly) and
+        reused in between, saving k HVPs per reuse step at the cost of
+        linearizing the backward pass at a stale θ. Iterative solvers
+        (CG/Neumann) have nothing to amortize and always prepare fresh;
+        asking them for ``sketch_refresh_every > 1`` raises.
+
+        Batch alignment: the outer step's Hessian is evaluated on the batch
+        the inner unroll *ended* on — reusing it keeps the curvature aligned
+        with the final θ. ``fresh_inner_batch=True`` opts into drawing one
+        extra inner batch per outer step instead (the pre-fix behavior;
+        decorrelates the Hessian estimate from the last inner step at the
+        cost of k extra-batch HVPs off the optimization path).
 
         Losses are buffered as device arrays and materialized (one host
         sync for the whole buffer) only at ``log_every`` boundaries and at
         the end — a ``float()`` per inner step would force a device sync
         per step and serialize the async dispatch pipeline."""
+        if sketch_refresh_every is None:
+            sketch_refresh_every = self._default_refresh_every()
+        solver = self._built_solver()
+        if getattr(type(solver), 'amortizable', False):
+            policy = SketchPolicy(solver=solver, inner_loss=self.inner_loss,
+                                  refresh_every=sketch_refresh_every)
+            step_fn = lambda st, ss, ib, ob: self.outer_step_with_policy(
+                st, ss, ib, ob, policy)   # noqa: E731
+            outer = jax.jit(step_fn) if jit else step_fn
+        else:
+            if sketch_refresh_every > 1:
+                raise TypeError(
+                    f'sketch_refresh_every={sketch_refresh_every} needs an '
+                    f'amortizable solver; {type(solver).__name__} prepares a '
+                    'trace-local state with nothing to reuse across steps')
+            policy = None
+            outer = jax.jit(self.outer_step_fn) if jit else self.outer_step_fn
+
         inner = jax.jit(self.inner_step_fn) if jit else self.inner_step_fn
-        outer = jax.jit(self.outer_step_fn) if jit else self.outer_step_fn
         history = {'inner_loss': [], 'outer_loss': []}
         pending_inner: list[jax.Array] = []
         pending_outer: list[jax.Array] = []
@@ -190,17 +271,31 @@ class BilevelTrainer:
             pending_outer.clear()
 
         it_in, it_out = iter(inner_batches), iter(outer_batches)
+        sketch_state = None
+        no_batch = object()     # sentinel: None is a legitimate batch value
         for o in range(n_outer):
+            ib = no_batch
             for _ in range(steps_per_outer):
-                state, li = inner(state, next(it_in))
+                ib = next(it_in)
+                state, li = inner(state, ib)
                 pending_inner.append(li)
-            ib, ob = next(it_in), next(it_out)
-            state, lo = outer(state, ib, ob)
+            if fresh_inner_batch or ib is no_batch:
+                ib = next(it_in)
+            ob = next(it_out)
+            if policy is not None:
+                if sketch_state is None:   # structural init: no HVPs
+                    sketch_state = policy.init_state(
+                        state.params, state.hparams, ib, state.vjp_rng)
+                state, sketch_state, lo = outer(state, sketch_state, ib, ob)
+            else:
+                state, lo = outer(state, ib, ob)
             pending_outer.append(lo)
             if log_every and (o + 1) % log_every == 0:
                 flush()
+                f_last = (f'f={history["inner_loss"][-1]:.4f}'
+                          if history['inner_loss'] else 'f=n/a')
                 print(f'[bilevel] outer {o + 1}/{n_outer} '
                       f'g={history["outer_loss"][-1]:.4f} '
-                      f'(pre-update) f={history["inner_loss"][-1]:.4f}')
+                      f'(pre-update) {f_last}')
         flush()
         return state, history

@@ -100,36 +100,57 @@ def config_from_cli(solver: str, flags: dict, defaults: dict,
     ``build()``'s own strictness check could not distinguish). Unpassed
     flags fall back to ``defaults`` when (and only when) the solver consumes
     them. ``consumed_extras`` are script-level tunings (e.g.
-    ``column_chunk``) forwarded only to solvers that consume them.
+    ``column_chunk``) forwarded only to solvers that consume them and
+    *silently dropped* otherwise — they are the solver-agnostic channel; put
+    anything the user typed in ``flags`` so it gets the strictness check.
+
+    "Consumes" is the same notion ``build()`` enforces: the solver's
+    ``SolverSpec.fields``, plus the backend-selection family (``backend``,
+    ``sketch_dtype``, ``mesh``, ``param_specs``) for solvers that build a
+    backend, plus the trainer-level fields (``sketch_refresh_every``) which
+    every solver's config carries:
+
+    >>> config_from_cli('nystrom', flags={'backend': 'flat'},
+    ...                 defaults={}).backend
+    'flat'
+    >>> config_from_cli('cg', flags={'backend': 'flat'}, defaults={})
+    Traceback (most recent call last):
+        ...
+    ValueError: --backend=flat is not consumed by solver='cg' (it consumes: \
+k, rho, sketch_refresh_every)
     """
     from repro.core.solvers import SOLVERS
     if solver not in SOLVERS:
         raise ValueError(f'unknown solver {solver!r}; registered: '
                          f'{sorted(SOLVERS)}')
     spec = SOLVERS[solver]
+    consumed = set(spec.fields) | (set(_TRAINER_FIELDS) - {'solver'})
+    if spec.builds_backend:
+        consumed |= set(_BACKEND_FIELDS)
     kwargs = {'solver': solver}
     for name, value in flags.items():
         if value is not None:
-            if name not in spec.fields:
+            if name not in consumed:
                 raise ValueError(
                     f'--{name}={value} is not consumed by solver='
                     f'{solver!r} (it consumes: '
-                    f'{", ".join(sorted(spec.fields))})')
+                    f'{", ".join(sorted(consumed))})')
             kwargs[name] = value
-        elif name in spec.fields and name in defaults:
+        elif name in consumed and name in defaults:
             kwargs[name] = defaults[name]
     for name, value in consumed_extras.items():
-        if name in spec.fields:
+        if name in consumed:
             kwargs[name] = value
     return HypergradConfig(**kwargs)
 
 
 # Config fields consumed outside solver construction: ``solver`` selects the
-# registry entry. ``sketch_refresh_every`` is the amortization cadence for
-# the user-driven build_sketch / outer_step_with_sketch path; no trainer
-# reads it automatically yet (wiring it into BilevelTrainer.run is a ROADMAP
-# follow-up), but it is trainer-level by design, so it stays exempt from the
-# solver-field strictness rather than erroring for every solver.
+# registry entry. ``sketch_refresh_every`` is the sketch-lifecycle cadence
+# consumed by the trainer layer — BilevelTrainer.run and launch/train.py
+# rebuild the amortized sketch every that-many outer steps (SketchPolicy);
+# it is trainer-level by design, so it stays exempt from the solver-field
+# strictness rather than erroring for every solver (run() itself raises when
+# asked to amortize an iterative solver).
 _TRAINER_FIELDS = ('solver', 'sketch_refresh_every')
 # Backend-selection fields, consumed via _build_backend() by solvers whose
 # SolverSpec sets builds_backend (today: nystrom).

@@ -48,6 +48,21 @@ True
 ...     jax.grad(lambda phi: jnp.sum(solve(phi, None))))(phis)
 >>> per_task.shape
 (2, 3)
+
+Shared-sketch meta-batches: by default every task in a vmapped meta-batch
+re-prepares its own sketch in the backward pass (tasks × k HVPs per
+meta-batch). ``solve.prepare_state`` builds one amortizable state at a
+single linearization point (e.g. the meta-initialization); closing the
+vmapped function over it broadcasts the state across tasks, cutting the
+meta-batch cost to k HVPs total (see benchmarks/tab3_imaml.py and the
+sketch-lifecycle section of docs/implicit-api.md):
+
+>>> shared = solve.prepare_state(jnp.ones(3), jnp.ones(3), None,
+...                              jax.random.PRNGKey(0))
+>>> shared_task = jax.vmap(jax.grad(
+...     lambda phi: jnp.sum(solve(phi, None, state=shared))))(phis)
+>>> bool(jnp.allclose(shared_task, per_task, atol=1e-5))
+True
 """
 from __future__ import annotations
 
@@ -129,11 +144,20 @@ def implicit_root(inner_solver_fn: InnerSolver, inner_loss: InnerLoss,
         pin them. Defaults to ``PRNGKey(0)``.
       * ``state`` optionally injects a pre-built solver state (an amortized
         ``NystromSketch`` / ``DenseFactor``) so the backward pass skips
-        ``prepare`` — the sketch-amortization story of BilevelTrainer.
+        ``prepare`` — the sketch-amortization story of BilevelTrainer, and
+        the shared-sketch meta-batch mode under ``jax.vmap`` (an unbatched
+        state closed over by the vmapped function broadcasts across tasks:
+        k HVPs per meta-batch instead of per task).
       * ``batch`` and ``rng`` receive zero cotangents: the map is treated as
         non-differentiable in the data (see docs/implicit-api.md for the
         residual caveats). θ* carries no residual connection to the forward
         unroll — gradients flow *only* through the implicit VJP.
+
+      The returned function also carries
+      ``solve.prepare_state(theta, phi, batch=None, rng=None)`` — it builds
+      such a state at an explicit linearization point via the shared
+      :class:`~repro.core.solvers.SketchPolicy` code path (k HVPs; raises
+      TypeError for iterative solvers, whose state is trace-local).
     """
     from repro.core.hypergrad import HypergradConfig
     if hypergrad is None:
@@ -168,6 +192,19 @@ def implicit_root(inner_solver_fn: InnerSolver, inner_loss: InnerLoss,
             rng = jax.random.PRNGKey(0)
         return _solve(phi, batch, rng, state)
 
+    def prepare_state(theta: PyTree, phi: PyTree, batch: Any = None,
+                      rng: jax.Array | None = None):
+        """Build an amortizable solver state at (theta, phi, batch), for the
+        ``state=`` argument — one sketch shared across a vmapped meta-batch
+        or across outer steps. theta is the linearization point (e.g. the
+        meta-initialization); the k sketch HVPs run here, once."""
+        from repro.core.solvers import SketchPolicy
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        return SketchPolicy(solver=solver, inner_loss=inner_loss).build(
+            theta, phi, batch, rng)
+
+    solve.prepare_state = prepare_state
     return solve
 
 

@@ -15,9 +15,20 @@ is the per-v cost. For the iterative baselines (CG/Neumann) there is nothing
 to amortize — their ``prepare`` returns a thin :class:`IterativeOperator`
 that closes over the traced hvp, so it is valid only inside the enclosing
 trace and cannot be shipped across a jit boundary the way a
-:class:`NystromSketch` (pure pytree-of-arrays) can. The protocol is what
-``repro.core.implicit.implicit_root`` drives in its custom_vjp backward
-pass; it replaces the previous ``hasattr(solver, 'apply')`` duck-typing.
+:class:`NystromSketch` (pure pytree-of-arrays) can. The class attribute
+``amortizable`` declares which kind a solver is: True means ``prepare``
+returns a pytree-of-arrays state that survives jit boundaries and outer
+steps (Nyström, exact); False means the state is trace-local (CG, Neumann).
+The protocol is what ``repro.core.implicit.implicit_root`` drives in its
+custom_vjp backward pass; it replaces the previous
+``hasattr(solver, 'apply')`` duck-typing.
+
+The *lifecycle* of an amortizable state — build it at a linearization point,
+reuse it for a few outer steps, rebuild when stale — is owned by
+:class:`SketchPolicy` (bottom of this module): ``BilevelTrainer``'s loop,
+the manual ``build_sketch``/``outer_step_with_sketch`` pair, and the
+shared-sketch meta-batch path of ``implicit_root`` all drive the same
+policy object instead of hand-rolling refresh logic.
 
 * ``NystromIHVP`` — the paper's contribution (Eq. 4/6, Alg. 1). Non-iterative:
   k parallel HVPs build the sketch once, then every apply is two tall-skinny
@@ -57,13 +68,13 @@ measured numbers). No solver holds any p×p object.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, ClassVar
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.backend import get_backend
-from repro.core.hvp import extract_columns
+from repro.core.hvp import extract_columns, make_hvp
 from repro.core.tree_util import (PyTree, PyTreeIndexer, tree_axpy, tree_scale,
                                   tree_vdot, tree_zeros_like)
 
@@ -111,10 +122,12 @@ class NystromSketch:
 
     ``B``/``gram_B`` is the numerically-stable whitened form of H_k
     (H_k = B Bᵀ with B = C·U diag(λ†^(1/2)); gram_B = BᵀB): present when the
-    solver was built with ``stabilized=True``. ``B`` uses the same
+    solver was built with ``stabilized=True`` and the whitened apply is
+    reachable (``kappa`` unset or ≥ k — the Alg. 1 chunked apply never
+    consults it, so those sketches skip it). ``B`` uses the same
     backend-native representation as ``C``; ``gram_C`` = CᵀC is cached
-    instead when ``stabilized=False`` (the Eq. 6 apply's k×k system needs
-    it, and it is ρ-independent).
+    instead otherwise (the Eq. 6 apply's k×k system needs it, and it is
+    ρ-independent).
 
     The sketch is ρ-free: every apply path solves against the *applying*
     solver's rho (the k×k system (gram + ρI-ish) w = t is re-solved per
@@ -153,12 +166,22 @@ class NystromIHVP:
     instance or go through ``HypergradConfig``). A sketch prepared under
     one backend must be applied under the same backend.
 
-    ``refine``: iterative-refinement sweeps on the stabilized apply. An f32
-    Woodbury apply bottoms out at ~eps·λmax/ρ absolute error (the v/ρ-scale
+    ``refine``: iterative-refinement sweeps on the apply. An f32 Woodbury
+    apply bottoms out at ~eps·λmax/ρ absolute error (the v/ρ-scale
     cancellation); each sweep re-applies the inverse to the residual
     v − (H_k + ρI)u — four extra C-passes, still zero HVPs — and drives the
     error to f32 roundoff (measured: 3e-3 → 5e-6 at ρ=1e-3 on the analytic
     quadratic). refine=0 restores the literal two-pass apply.
+
+    Precedence when ``kappa < k`` (Alg. 1 requested): the chunked apply is
+    the *literal* recursive-Woodbury path and takes precedence over
+    ``stabilized`` — it carries its own deactivated-eigenvalue handling (the
+    ``_SAFE_BIG`` truncation), so the whitened factor is never consulted and
+    ``prepare`` does not build it (it caches ``gram_C`` instead, keeping the
+    Eq. 6 fallback two-pass). ``refine`` *is* honored on the chunked path:
+    the residual sweeps only need C-passes against the eigen-factor, not the
+    whitened form. Asserted in
+    tests/test_solvers.py::TestNystrom::test_kappa_precedence_over_stabilized.
 
     At full rank (k = p) the Nyström inverse is exact — the quickest
     end-to-end check:
@@ -176,6 +199,8 @@ class NystromIHVP:
     >>> bool(jnp.allclose(u['w'], 1.0 / (d + 1e-3), rtol=1e-3))
     True
     """
+    amortizable: ClassVar[bool] = True   # NystromSketch is pytree-of-arrays
+
     k: int
     rho: float = 1e-2
     kappa: int | None = None
@@ -201,7 +226,10 @@ class NystromIHVP:
         H_KK = 0.5 * (H_KK + H_KK.T)
         C_op = be.prepare_operand(C_tree)
         B, gram_B, gram_C = (None, None, None)
-        if self.stabilized:
+        # kappa<k selects the Alg. 1 chunked apply, which never consults the
+        # whitened factor (precedence — see class docstring): skip building it.
+        if self.stabilized and not (self.kappa is not None
+                                    and self.kappa < self.k):
             B, gram_B = _whitened_form(be, C_op, H_KK)
         else:
             # ρ-independent, so cached here: the Eq. 6 apply stays 2-pass.
@@ -215,7 +243,7 @@ class NystromIHVP:
         be = self._be()
         if self.kappa is not None and self.kappa < self.k:
             return _apply_woodbury_chunked(be, sketch, v, self.kappa,
-                                           self.rho)
+                                           self.rho, self.refine)
         if self.stabilized and sketch.B is not None:
             return _apply_whitened(be, sketch, v, self.rho, self.refine)
         return _apply_woodbury_direct(be, sketch, v, self.rho)
@@ -295,13 +323,18 @@ def _eig_factors(be, s: NystromSketch):
 
 
 def _apply_woodbury_chunked(be, s: NystromSketch, v: PyTree, kappa: int,
-                            rho: float) -> PyTree:
+                            rho: float, refine: int = 0) -> PyTree:
     """Alg. 1: recursive rank-κ Woodbury updates, applied in operator form.
 
     State after chunk m: Ĥ_m x = x/ρ − Σ_{j≤m} G_j R_j (G_jᵀ x), held as the
     factor list {(G_j, R_j)}. Per chunk: apply Ĥ_m to the κ new columns
     (one block of backend contractions — no vmap), solve a κ×κ system,
     append a factor. Bit-equivalent to Eq. 6 for every κ.
+
+    ``refine`` residual sweeps correct u against H_k + ρI exactly as on the
+    whitened path, with H_k u = L diag(λ_safe⁻¹) (Lᵀ u) — deactivated
+    eigenvalues were sent to _SAFE_BIG, so their reciprocal contribution
+    vanishes, matching the truncated-pseudo-inverse semantics.
     """
     k = s.indices['leaf'].shape[0]
     L, lam = _eig_factors(be, s)
@@ -325,11 +358,19 @@ def _apply_woodbury_chunked(be, s: NystromSketch, v: PyTree, kappa: int,
         R = jnp.linalg.inv(S + jitter * jnp.eye(width, dtype=S.dtype))
         factors.append((HmL, 0.5 * (R + R.T)))
 
+    def apply_factors(x):
+        out = be.scale(x, 1.0 / rho)
+        for G, R in factors:
+            out = be.sub(out, be.cv(G, R @ be.ctv(G, x)))
+        return out
+
     vf = be.vec(v)
-    out = be.scale(vf, 1.0 / rho)
-    for G, R in factors:
-        out = be.sub(out, be.cv(G, R @ be.ctv(G, vf)))
-    return be.unvec(out, v)
+    u = apply_factors(vf)
+    for _ in range(refine):
+        h_u = be.cv(L, be.ctv(L, u) / lam)     # H_k u (λ_safe⁻¹ ≈ λ† trunc.)
+        r = be.sub(be.sub(vf, be.scale(u, rho)), h_u)
+        u = be.add(u, apply_factors(r))
+    return be.unvec(u, v)
 
 
 def nystrom_inverse_dense(H: jax.Array, k: int, rho: float,
@@ -378,6 +419,8 @@ class CGIHVP:
 
     ρ=0 reproduces the paper's baseline exactly; ρ>0 is Tikhonov damping.
     """
+    amortizable: ClassVar[bool] = False  # IterativeOperator is trace-local
+
     iters: int = 5
     rho: float = 0.0
 
@@ -421,6 +464,8 @@ class CGIHVP:
 class NeumannIHVP:
     """Truncated Neumann series (Lorraine et al. 2020):
     (H)⁻¹ ≈ α Σ_{j=0}^{l} (I − αH)^j, requires ‖αH‖ < 1 to converge."""
+    amortizable: ClassVar[bool] = False  # IterativeOperator is trace-local
+
     iters: int = 5
     alpha: float = 1e-2
 
@@ -449,6 +494,8 @@ class NeumannIHVP:
 @dataclasses.dataclass(frozen=True)
 class ExactIHVP:
     """Materialize H column-by-column and dense-solve (tests / tiny models)."""
+    amortizable: ClassVar[bool] = True   # DenseFactor is pytree-of-arrays
+
     rho: float = 1e-2
 
     def prepare(self, hvp: HVP, indexer: PyTreeIndexer,
@@ -476,6 +523,104 @@ class ExactIHVP:
     def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
               rng: jax.Array | None = None) -> PyTree:
         return self.apply(self.prepare(hvp, indexer, rng), v)
+
+
+# ---------------------------------------------------------------------------
+# Sketch lifecycle — build / refresh / invalidate of amortizable states
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SketchState:
+    """A prepared solver state plus its age, carried across outer steps.
+
+    ``sketch`` is whatever the solver's ``prepare`` returns (a
+    :class:`NystromSketch` / :class:`DenseFactor` — pytree-of-arrays, so the
+    whole SketchState crosses jit boundaries and can be checkpointed).
+    ``age`` counts outer steps served since the last rebuild (int32, traced),
+    which is what makes the refresh decision ``lax.cond``-friendly.
+    """
+    sketch: Any
+    age: jax.Array      # int32 scalar: steps served since last build
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchPolicy:
+    """Owns the lifecycle of an amortizable solver state.
+
+    One policy object serves every consumer of sketch amortization — the
+    ``BilevelTrainer`` loop (automatic ``sketch_refresh_every`` cadence), the
+    manual ``build_sketch``/``outer_step_with_sketch`` pair, and the
+    shared-sketch meta-batch path (``implicit_root``'s ``prepare_state``) —
+    so there is exactly one definition of "build", "stale", and "refresh".
+
+    ``refresh_every=N`` rebuilds the state every N uses: N=1 is the
+    always-fresh cadence (trajectory-identical to preparing inside the
+    backward pass), larger N trades hypergradient accuracy (the backward
+    linearizes at a stale θ — the approximation error analyzed by Grazzi et
+    al. 2020) for k fewer HVPs on N−1 of every N outer steps.
+
+    Construction rejects solvers whose prepared state is trace-local
+    (``amortizable = False``: CG/Neumann return an :class:`IterativeOperator`
+    closing over the step's hvp) — reusing one across steps would only fail
+    later, opaquely, inside the next jitted step.
+    """
+    solver: Any                      # built solver (uniform protocol)
+    inner_loss: Callable[..., jax.Array]   # f(theta, phi, batch) -> scalar
+    refresh_every: int = 1
+
+    def __post_init__(self):
+        if self.refresh_every < 1:
+            raise ValueError(
+                f'refresh_every must be >= 1, got {self.refresh_every}')
+        if not getattr(type(self.solver), 'amortizable', False):
+            raise TypeError(
+                f'{type(self.solver).__name__}.prepare returns a trace-local '
+                'IterativeOperator — iterative solvers have nothing to '
+                'amortize across outer steps; use the fresh-prepare path '
+                '(sketch_refresh_every=1 / outer_step_fn) instead')
+
+    # ------------------------------------------------------------- build
+    def build(self, params: PyTree, hparams: PyTree, batch: Any,
+              rng: jax.Array):
+        """Prepare the solver state at the linearization point
+        (params, hparams, batch) — the only lifecycle stage that runs HVPs."""
+        hvp = make_hvp(self.inner_loss, params, hparams, batch)
+        return self.solver.prepare(hvp, PyTreeIndexer(params), rng)
+
+    def init_state(self, params: PyTree, hparams: PyTree, batch: Any,
+                   rng: jax.Array) -> SketchState:
+        """A structurally-correct *stale* SketchState (zero arrays, age =
+        refresh_every) — the first ``refresh`` rebuilds it, so initialization
+        costs no HVPs and the refresh cadence stays uniform from step 0."""
+        shapes = jax.eval_shape(self.build, params, hparams, batch, rng)
+        sketch0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        return SketchState(sketch=sketch0,
+                           age=jnp.int32(self.refresh_every))
+
+    # ----------------------------------------------------------- refresh
+    def refresh(self, state: SketchState, params: PyTree, hparams: PyTree,
+                batch: Any, rng: jax.Array) -> tuple[SketchState, jax.Array]:
+        """Advance the lifecycle by one outer step: rebuild under
+        ``lax.cond`` when the state has served ``refresh_every`` steps, else
+        keep it and age it. Returns (state', rebuilt) where ``rebuilt`` is a
+        traced bool — callers that thread an rng stream consume their split
+        only when it fires (``jnp.where(rebuilt, new_rng, old_rng)``), so
+        cadence changes do not shift the stream on non-refresh steps."""
+        rebuilt = state.age >= self.refresh_every
+        sketch = jax.lax.cond(
+            rebuilt,
+            lambda: self.build(params, hparams, batch, rng),
+            lambda: state.sketch)
+        age = jnp.where(rebuilt, jnp.int32(1), state.age + 1)
+        return SketchState(sketch=sketch, age=age), rebuilt
+
+    # -------------------------------------------------------- invalidate
+    def invalidate(self, state: SketchState) -> SketchState:
+        """Mark the state stale (age = refresh_every) so the next
+        ``refresh`` rebuilds regardless of cadence — e.g. after
+        ``reset_inner`` re-initializes θ and the curvature jumps."""
+        return SketchState(sketch=state.sketch,
+                           age=jnp.int32(self.refresh_every))
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core import config_from_cli, implicit_root
+from repro.core import SketchPolicy, config_from_cli, implicit_root
 from repro.data.loader import Prefetcher, ShardedLoader
 from repro.data.synthetic import TokenStream
 from repro.distributed.ctx import activation_mesh
@@ -63,6 +63,10 @@ def main(argv=None):
                     help='sketch rank / iterations (default 8)')
     ap.add_argument('--rho', type=float, default=None,
                     help='damping (default 1e-2)')
+    ap.add_argument('--sketch-refresh-every', type=int, default=None,
+                    help='outer steps between sketch rebuilds (default 1 = '
+                         'fresh every outer step; N>1 reuses the sketch for '
+                         'N-1 steps, saving k HVPs each)')
     ap.add_argument('--solver', default='nystrom')
     ap.add_argument('--ckpt-dir', default=None)
     ap.add_argument('--ckpt-every', type=int, default=100)
@@ -83,10 +87,12 @@ def main(argv=None):
     optimizer = make_optimizer(cfg)
     # registry-driven flag forwarding: explicitly-passed flags the solver
     # does not consume are rejected loudly by build(), never silently dropped
-    hg_cfg = config_from_cli(args.solver,
-                             flags={'k': args.k, 'rho': args.rho},
-                             defaults={'k': 8, 'rho': 1e-2},
-                             column_chunk=4)
+    hg_cfg = config_from_cli(
+        args.solver,
+        flags={'k': args.k, 'rho': args.rho,
+               'sketch_refresh_every': args.sketch_refresh_every},
+        defaults={'k': 8, 'rho': 1e-2},
+        column_chunk=4)
 
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)
@@ -122,22 +128,45 @@ def main(argv=None):
         return params, opt_state, step + 1, loss
 
     solver = hg_cfg.build()
+    # sketch lifecycle: amortizable solvers (Nyström/exact) carry one sketch
+    # across outer steps, rebuilt every sketch_refresh_every of them by the
+    # policy's lax.cond inside the jitted step; iterative solvers prepare
+    # fresh inside the backward pass (nothing to amortize).
+    if getattr(type(solver), 'amortizable', False):
+        policy = SketchPolicy(solver=solver, inner_loss=inner_loss,
+                              refresh_every=hg_cfg.sketch_refresh_every)
+    elif hg_cfg.sketch_refresh_every > 1:
+        raise TypeError(
+            f'--sketch-refresh-every={hg_cfg.sketch_refresh_every} needs an '
+            f'amortizable solver; {type(solver).__name__} prepares a '
+            'trace-local state with nothing to reuse across outer steps')
+    else:
+        policy = None
 
     @jax.jit
-    def outer_step(params, hparams, outer_state, step, inner_b, outer_b, key):
+    def outer_step(params, hparams, outer_state, step, inner_b, outer_b, key,
+                   sketch_state):
         # the warm-started params are the implicit solution; grad through the
         # implicit_root map assembles Eq. 3 in the custom_vjp backward pass
         solve = implicit_root(lambda phi, b: params, inner_loss, solver)
+        if policy is not None:
+            sketch_state, _ = policy.refresh(
+                sketch_state, params, hparams, inner_b, key)
 
-        def outer_obj(phi):
-            return outer_loss(solve(phi, inner_b, rng=key), phi, outer_b)
+            def outer_obj(phi):
+                theta = solve(phi, inner_b, state=sketch_state.sketch)
+                return outer_loss(theta, phi, outer_b)
+        else:
+            def outer_obj(phi):
+                return outer_loss(solve(phi, inner_b, rng=key), phi, outer_b)
 
         val, hg = jax.value_and_grad(outer_obj)(hparams)  # val: pre-update g
         hparams, outer_state = outer_opt.apply(hg, outer_state, hparams, step)
-        return hparams, outer_state, val
+        return hparams, outer_state, val, sketch_state
 
     # ---------------- loop ----------------
     t0 = time.time()
+    sketch_state = None
     with activation_mesh(mesh):
         for i in range(start_step, args.steps):
             batch = next(loader)
@@ -150,9 +179,14 @@ def main(argv=None):
             if (i + 1) % args.outer_every == 0:
                 outer_b = stream.batch(10_000_000 + i, args.batch,
                                        clean_only=True)
-                hparams, outer_state, val = outer_step(
+                if policy is not None and sketch_state is None:
+                    # structural zeros at max staleness: the first outer
+                    # step's lax.cond rebuilds it; costs no HVPs here
+                    sketch_state = policy.init_state(
+                        params, hparams, batch, jax.random.PRNGKey(i))
+                hparams, outer_state, val, sketch_state = outer_step(
                     params, hparams, outer_state, jnp.int32(i),
-                    batch, outer_b, jax.random.PRNGKey(i))
+                    batch, outer_b, jax.random.PRNGKey(i), sketch_state)
                 w = jax.nn.softmax(hparams['domain_logits'])
                 noisy = float(w[jnp.array(stream.noisy_domains)].sum())
                 print(f'[outer] step {i+1} val(pre-update)={float(val):.4f} '

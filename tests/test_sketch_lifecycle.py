@@ -1,0 +1,344 @@
+"""Sketch lifecycle tests: SketchPolicy build/refresh/invalidate, the
+policy-driven ``BilevelTrainer.run`` cadence, shared-sketch meta-batches,
+and the batch-alignment / config-strictness bugfixes that ride along.
+
+The analytic quadratic bilevel problem (same as test_implicit) has a
+θ-independent Hessian, so at k = P (full rank) the sketch is an exact
+representation of H regardless of which columns were sampled — any
+trajectory difference between refresh cadences is then pure plumbing (or
+roundoff), which is what these tests pin down.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BilevelTrainer, HypergradConfig, NystromIHVP,
+                        SketchPolicy, SketchState, config_from_cli,
+                        implicit_root)
+from repro.optim import sgd
+
+
+def _quadratic_bilevel(seed=0, P=12, Hdim=5):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    Am = jax.random.normal(k1, (P, P))
+    Am = Am @ Am.T / P + jnp.eye(P)
+    Bm = jax.random.normal(k2, (P, Hdim))
+    c = jax.random.normal(k3, (P,))
+    t = jax.random.normal(k4, (P,))
+
+    def inner(prm, hp, batch):
+        th = prm['theta']
+        return 0.5 * th @ Am @ th - th @ (Bm @ hp['phi'] + c)
+
+    def outer(prm, hp, batch):
+        return 0.5 * jnp.sum((prm['theta'] - t) ** 2)
+
+    def solution_map(hp, batch):
+        return {'theta': jnp.linalg.solve(Am, Bm @ hp['phi'] + c)}
+
+    phi0 = {'phi': jnp.ones((Hdim,))}
+    return inner, outer, solution_map, phi0, Am, Bm, t
+
+
+def _trainer(inner, outer, k, rho=1e-3, **cfg):
+    return BilevelTrainer(
+        inner_loss=inner, outer_loss=outer,
+        inner_opt=sgd(0.01), outer_opt=sgd(0.1),
+        hypergrad=HypergradConfig(solver='nystrom', k=k, rho=rho, **cfg))
+
+
+class _CountingIter:
+    """Wraps an iterator, counting how many batches were drawn."""
+
+    def __init__(self, it):
+        self.it, self.count = iter(it), 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        self.count += 1
+        return next(self.it)
+
+
+class TestRunLifecycle:
+    def test_refresh_every_1_matches_outer_step_fn_trajectory(self):
+        """run(sketch_refresh_every=1) must reproduce the fresh-prepare
+        outer_step_fn trajectory bit-for-bit: the policy splits the same
+        vjp_rng stream and builds the same columns, just in the forward
+        pass instead of the backward."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        P = Am.shape[0]
+        trainer = _trainer(inner, outer, k=P)
+        params0 = smap(phi0, None)
+        state0 = trainer.init(jax.random.PRNGKey(0), params0, phi0)
+
+        state_a, hist_a = trainer.run(
+            state0, itertools.repeat(None), itertools.repeat(None),
+            steps_per_outer=2, n_outer=4, sketch_refresh_every=1)
+
+        inner_j = jax.jit(trainer.inner_step_fn)
+        outer_j = jax.jit(trainer.outer_step_fn)
+        state = state0
+        manual_outer = []
+        for _ in range(4):
+            for _ in range(2):
+                state, _ = inner_j(state, None)
+            state, lo = outer_j(state, None, None)
+            manual_outer.append(float(lo))
+
+        np.testing.assert_array_equal(np.asarray(state_a.hparams['phi']),
+                                      np.asarray(state.hparams['phi']))
+        np.testing.assert_array_equal(np.asarray(state_a.params['theta']),
+                                      np.asarray(state.params['theta']))
+        np.testing.assert_array_equal(np.asarray(state_a.vjp_rng),
+                                      np.asarray(state.vjp_rng))
+        np.testing.assert_allclose(hist_a['outer_loss'], manual_outer,
+                                   rtol=0, atol=0)
+
+    def test_stale_sketch_trajectory_within_tolerance(self):
+        """refresh_every > 1 linearizes at a stale θ. On the quadratic the
+        Hessian is θ-independent and k=P makes the sketch exact, so every
+        cadence must land on the same trajectory up to roundoff (the
+        different column *order* sampled by the shifted rng stream is the
+        only difference)."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        P = Am.shape[0]
+        trainer = _trainer(inner, outer, k=P)
+        params0 = smap(phi0, None)
+        state0 = trainer.init(jax.random.PRNGKey(1), params0, phi0)
+
+        finals = {}
+        for every in (1, 2, 5):
+            st, _ = trainer.run(
+                state0, itertools.repeat(None), itertools.repeat(None),
+                steps_per_outer=1, n_outer=6, sketch_refresh_every=every)
+            finals[every] = np.asarray(st.hparams['phi'])
+        np.testing.assert_allclose(finals[2], finals[1], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(finals[5], finals[1], rtol=1e-4, atol=1e-4)
+
+    def test_vjp_rng_consumed_only_on_refresh_steps(self):
+        """The lax.cond staleness tracking must not advance the sketch rng
+        stream on reuse steps — cadence changes shift *which* keys build
+        sketches, not the stream itself."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        trainer = _trainer(inner, outer, k=Am.shape[0])
+        state0 = trainer.init(jax.random.PRNGKey(2), smap(phi0, None), phi0)
+
+        st, _ = trainer.run(
+            state0, itertools.repeat(None), itertools.repeat(None),
+            steps_per_outer=1, n_outer=4, sketch_refresh_every=2)
+        # refreshes fire on outer steps 0 and 2 → exactly two splits
+        expected = state0.vjp_rng
+        for _ in range(2):
+            expected, _ = jax.random.split(expected)
+        np.testing.assert_array_equal(np.asarray(st.vjp_rng),
+                                      np.asarray(expected))
+
+    def test_iterative_solver_rejects_refresh_cadence(self):
+        inner, outer, smap, phi0, *_ = _quadratic_bilevel()
+        trainer = BilevelTrainer(
+            inner_loss=inner, outer_loss=outer,
+            inner_opt=sgd(0.01), outer_opt=sgd(0.1),
+            hypergrad=HypergradConfig(solver='cg', k=5))
+        state0 = trainer.init(jax.random.PRNGKey(3), smap(phi0, None), phi0)
+        with pytest.raises(TypeError, match='amortiz'):
+            trainer.run(state0, itertools.repeat(None), itertools.repeat(None),
+                        steps_per_outer=1, n_outer=1, sketch_refresh_every=2)
+        # the config-level knob must raise too, not be a silent dead knob
+        trainer_cfg = BilevelTrainer(
+            inner_loss=inner, outer_loss=outer,
+            inner_opt=sgd(0.01), outer_opt=sgd(0.1),
+            hypergrad=HypergradConfig(solver='cg', k=5,
+                                      sketch_refresh_every=2))
+        with pytest.raises(TypeError, match='amortiz'):
+            trainer_cfg.run(state0, itertools.repeat(None),
+                            itertools.repeat(None),
+                            steps_per_outer=1, n_outer=1)
+        # cadence 1 falls back to the fresh-prepare path and runs fine
+        trainer.run(state0, itertools.repeat(None), itertools.repeat(None),
+                    steps_per_outer=1, n_outer=1)
+
+
+class TestBatchAlignment:
+    def test_outer_step_reuses_last_inner_batch(self):
+        """Regression (src/repro/core/bilevel.py): run() used to draw an
+        *extra* inner batch per outer step for the Hessian, silently
+        shifting data alignment between the curvature and the final θ."""
+        inner, outer, smap, phi0, *_ = _quadratic_bilevel()
+        trainer = _trainer(inner, outer, k=4)
+        state0 = trainer.init(jax.random.PRNGKey(4), smap(phi0, None), phi0)
+
+        it_in = _CountingIter(itertools.repeat(None))
+        it_out = _CountingIter(itertools.repeat(None))
+        trainer.run(state0, it_in, it_out, steps_per_outer=3, n_outer=2)
+        assert it_in.count == 6          # 3 inner steps × 2 outers, no extras
+        assert it_out.count == 2
+
+    def test_fresh_inner_batch_opt_in(self):
+        inner, outer, smap, phi0, *_ = _quadratic_bilevel()
+        trainer = _trainer(inner, outer, k=4)
+        state0 = trainer.init(jax.random.PRNGKey(5), smap(phi0, None), phi0)
+
+        it_in = _CountingIter(itertools.repeat(None))
+        trainer.run(state0, it_in, itertools.repeat(None),
+                    steps_per_outer=3, n_outer=2, fresh_inner_batch=True)
+        assert it_in.count == 8          # the pre-fix behavior, now explicit
+
+    def test_zero_inner_steps_still_draws_a_batch(self):
+        inner, outer, smap, phi0, *_ = _quadratic_bilevel()
+        trainer = _trainer(inner, outer, k=4)
+        state0 = trainer.init(jax.random.PRNGKey(6), smap(phi0, None), phi0)
+        it_in = _CountingIter(itertools.repeat(None))
+        # log_every=1 covers the no-inner-losses log line (regression)
+        trainer.run(state0, it_in, itertools.repeat(None),
+                    steps_per_outer=0, n_outer=2, log_every=1)
+        assert it_in.count == 2          # nothing to reuse → one per outer
+
+
+class TestSketchPolicy:
+    def test_rejects_iterative_solver_at_construction(self):
+        from repro.core import CGIHVP
+        inner, *_ = _quadratic_bilevel()
+        with pytest.raises(TypeError, match='IterativeOperator'):
+            SketchPolicy(solver=CGIHVP(iters=5), inner_loss=inner)
+
+    def test_rejects_bad_cadence(self):
+        inner, *_ = _quadratic_bilevel()
+        with pytest.raises(ValueError, match='refresh_every'):
+            SketchPolicy(solver=NystromIHVP(k=4), inner_loss=inner,
+                         refresh_every=0)
+
+    def test_init_state_is_structural_and_stale(self):
+        """init_state costs no HVPs (eval_shape only) and starts at max
+        staleness so the first refresh rebuilds."""
+        inner, outer, smap, phi0, Am, *_ = _quadratic_bilevel()
+        theta = smap(phi0, None)
+        policy = SketchPolicy(solver=NystromIHVP(k=6, rho=1e-2),
+                              inner_loss=inner, refresh_every=3)
+        rng = jax.random.PRNGKey(7)
+        s0 = policy.init_state(theta, phi0, None, rng)
+        assert int(s0.age) == 3
+        assert all(not x.any() for x in jax.tree.leaves(s0.sketch))
+
+        s1, rebuilt = policy.refresh(s0, theta, phi0, None, rng)
+        assert bool(rebuilt) and int(s1.age) == 1
+        built = policy.build(theta, phi0, None, rng)
+        for a, b in zip(jax.tree.leaves(s1.sketch), jax.tree.leaves(built)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        s2, rebuilt = policy.refresh(s1, theta, phi0, None,
+                                     jax.random.PRNGKey(8))
+        assert not bool(rebuilt) and int(s2.age) == 2
+        for a, b in zip(jax.tree.leaves(s2.sketch),
+                        jax.tree.leaves(s1.sketch)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_invalidate_forces_rebuild(self):
+        inner, outer, smap, phi0, *_ = _quadratic_bilevel()
+        theta = smap(phi0, None)
+        policy = SketchPolicy(solver=NystromIHVP(k=6, rho=1e-2),
+                              inner_loss=inner, refresh_every=5)
+        s = SketchState(
+            sketch=policy.build(theta, phi0, None, jax.random.PRNGKey(9)),
+            age=jnp.int32(1))
+        _, rebuilt = policy.refresh(s, theta, phi0, None,
+                                    jax.random.PRNGKey(10))
+        assert not bool(rebuilt)
+        _, rebuilt = policy.refresh(policy.invalidate(s), theta, phi0, None,
+                                    jax.random.PRNGKey(10))
+        assert bool(rebuilt)
+
+
+class TestSharedSketchMetaBatch:
+    def test_vmap_broadcast_matches_per_task_loop(self):
+        """One prepare_state sketch closed over by the vmapped task-grad ==
+        a per-task Python loop applying the same sketch (broadcast
+        correctness of the state= path under vmap)."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        solve = implicit_root(smap, inner, NystromIHVP(k=8, rho=1e-3))
+        shared = solve.prepare_state(smap(phi0, None), phi0, None,
+                                     jax.random.PRNGKey(11))
+
+        def task_grad(hp):
+            return jax.grad(lambda h: outer(solve(h, None, state=shared),
+                                            h, None))(hp)
+
+        B = 4
+        phis = {'phi': jnp.stack([(i + 1.0) * phi0['phi']
+                                  for i in range(B)])}
+        batched = jax.vmap(task_grad)(phis)
+        looped = [task_grad({'phi': phis['phi'][i]})['phi'] for i in range(B)]
+        np.testing.assert_allclose(batched['phi'], jnp.stack(looped),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_shared_sketch_matches_per_task_prepare_at_full_rank(self):
+        """k = P makes both the shared sketch (built once at θ(φ₀)) and the
+        per-task fresh prepares exact representations of the (constant)
+        Hessian — the two meta-batch estimators must agree to solver
+        tolerance, the test-scale analogue of tab3's cosine row."""
+        inner, outer, smap, phi0, Am, Bm, t = _quadratic_bilevel()
+        P = Am.shape[0]
+        solve = implicit_root(smap, inner, NystromIHVP(k=P, rho=1e-3))
+        shared = solve.prepare_state(smap(phi0, None), phi0, None,
+                                     jax.random.PRNGKey(12))
+
+        B = 3
+        phis = {'phi': jnp.stack([(i + 1.0) * phi0['phi']
+                                  for i in range(B)])}
+        keys = jax.random.split(jax.random.PRNGKey(13), B)
+
+        hg_shared = jax.vmap(lambda hp: jax.grad(
+            lambda h: outer(solve(h, None, state=shared), h, None))(hp))(phis)
+        hg_fresh = jax.vmap(lambda hp, key: jax.grad(
+            lambda h: outer(solve(h, None, rng=key), h, None))(hp))(phis, keys)
+        np.testing.assert_allclose(hg_shared['phi'], hg_fresh['phi'],
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_prepare_state_rejects_iterative_solver(self):
+        inner, outer, smap, phi0, *_ = _quadratic_bilevel()
+        solve = implicit_root(smap, inner, HypergradConfig(solver='cg', k=5))
+        with pytest.raises(TypeError, match='IterativeOperator'):
+            solve.prepare_state(smap(phi0, None), phi0)
+
+
+class TestConfigStrictness:
+    def test_backend_family_flags_reach_consuming_solver(self):
+        """Regression (config_from_cli): backend-family fields were dropped
+        — or wrongly rejected — because they live outside SolverSpec.fields
+        even for solvers that consume them via builds_backend."""
+        cfg = config_from_cli('nystrom',
+                              flags={'backend': 'flat',
+                                     'sketch_dtype': 'bfloat16'},
+                              defaults={})
+        assert (cfg.backend, cfg.sketch_dtype) == ('flat', 'bfloat16')
+        solver = cfg.build()
+        assert solver.backend.name == 'flat'
+
+    def test_backend_family_flags_rejected_for_non_consumers(self):
+        with pytest.raises(ValueError, match='not consumed'):
+            config_from_cli('cg', flags={'backend': 'flat'}, defaults={})
+        with pytest.raises(ValueError, match='not consumed'):
+            config_from_cli('exact', flags={'sketch_dtype': 'bfloat16'},
+                            defaults={})
+
+    def test_backend_family_extras_forwarded_or_dropped(self):
+        """consumed_extras stay the soft solver-agnostic channel, but the
+        backend family now rides it to consuming solvers instead of being
+        discarded."""
+        cfg = config_from_cli('nystrom', flags={}, defaults={},
+                              backend='flat')
+        assert cfg.backend == 'flat'
+        cfg = config_from_cli('cg', flags={}, defaults={}, backend='flat')
+        assert cfg.backend == 'tree'      # dropped: cg builds no backend
+
+    def test_sketch_refresh_every_is_trainer_level(self):
+        for solver in ('nystrom', 'cg', 'exact'):
+            cfg = config_from_cli(solver,
+                                  flags={'sketch_refresh_every': 4},
+                                  defaults={})
+            assert cfg.sketch_refresh_every == 4
+            cfg.build()                   # trainer field: never a dead knob
