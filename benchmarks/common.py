@@ -1,13 +1,17 @@
-"""Shared benchmark machinery: solver configs and a generic bilevel runner."""
+"""Shared benchmark machinery: solver configs + the legacy runner shim.
+
+The benchmark modules now drive ``repro.core.problem.solve`` directly (one
+typed entry point from task definition to solved hypergradient, HVP-count
+accounting included). ``run_bilevel`` remains as a deprecated thin shim for
+unported callers.
+"""
 from __future__ import annotations
 
-import time
+import dataclasses
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import BilevelTrainer, HypergradConfig
-from repro.optim import adam, chain, clip_by_global_norm, momentum, sgd
+from repro.core import BilevelProblem, HypergradConfig, solve
+from repro.optim import momentum, sgd
 
 
 def solver_cfg(name: str, k: int = 10, rho: float = 1e-2,
@@ -26,51 +30,28 @@ def run_bilevel(task, method: str, *, n_outer: int, steps_per_outer: int,
                 reset_inner: bool = False, outer_opt: str = 'adam',
                 inner_momentum: float = 0.0, batch: int = 100,
                 seed: int = 0):
-    """Alternating bilevel run on a task dict from repro.tasks — returns
-    (final state, outer-loss history, wall seconds)."""
-    inner_opt = (momentum(inner_lr, inner_momentum) if inner_momentum
-                 else sgd(inner_lr))
-    # hypergradient clipping: standard outer-loop hygiene; uniform across
-    # methods so comparisons stay fair (Nyström's more-accurate IHVP takes
-    # larger raw steps than truncated CG/Neumann and diverges without it at
-    # the paper's outer lr=1.0+momentum)
-    base = adam(outer_lr) if outer_opt == 'adam' else momentum(outer_lr, 0.9)
-    outer = chain(clip_by_global_norm(10.0), base)
-    trainer = BilevelTrainer(
-        inner_loss=task['inner'], outer_loss=task['outer'],
-        inner_opt=inner_opt, outer_opt=outer,
-        hypergrad=solver_cfg(method, k=k, rho=rho, alpha=alpha),
-        init_params=task['init_params'], reset_inner=reset_inner)
-
-    rng = jax.random.PRNGKey(seed)
-    hp = task['init_hparams']
-    hp = hp(rng) if callable(hp) and hp.__code__.co_argcount else hp()
-    state = trainer.init(rng, task['init_params'](rng), hp)
-
-    Xt, yt = task['train']
-    Xv, yv = task['val']
-    nt = Xt.shape[0]
-
-    def train_batches():
-        i = 0
-        while True:
-            idx = jax.random.randint(jax.random.PRNGKey(i), (batch,), 0, nt)
-            yield (Xt[idx], yt[idx])
-            i += 1
-
-    def val_batches():
-        i = 1000
-        while True:
-            idx = jax.random.randint(jax.random.PRNGKey(i), (batch,), 0,
-                                     Xv.shape[0])
-            yield (Xv[idx], yv[idx])
-            i += 1
-
-    t0 = time.time()
-    state, hist = trainer.run(state, train_batches(), val_batches(),
-                              steps_per_outer=steps_per_outer,
-                              n_outer=n_outer)
-    return state, hist, time.time() - t0
+    """Deprecated shim over ``repro.core.problem.solve`` — returns the old
+    (final state, history, wall seconds) triple. ``task`` may be a
+    ``BilevelProblem`` or a legacy task dict."""
+    warnings.warn(
+        'benchmarks.common.run_bilevel is a legacy shim; call '
+        'repro.core.problem.solve(problem, config, ...) directly',
+        DeprecationWarning, stacklevel=2)
+    problem = (task if isinstance(task, BilevelProblem)
+               else BilevelProblem.from_legacy_dict(task))
+    inner = (momentum(inner_lr, inner_momentum) if inner_momentum
+             else sgd(inner_lr))
+    # outer optimizer (clipped) comes from the problem-level default
+    # construction; only the lr/kind knobs are forwarded
+    overrides = dict(problem.defaults)
+    overrides.update(outer_lr=outer_lr, outer_opt=(
+        'adam' if outer_opt == 'adam' else 'sgd_momentum'))
+    problem = dataclasses.replace(problem, defaults=overrides)
+    res = solve(problem, solver_cfg(method, k=k, rho=rho, alpha=alpha),
+                n_outer=n_outer, steps_per_outer=steps_per_outer,
+                batch_size=batch, inner_opt=inner, reset_inner=reset_inner,
+                seed=seed)
+    return res.state, res.history, res.seconds
 
 
 def emit(name: str, us_per_call: float, derived: str):

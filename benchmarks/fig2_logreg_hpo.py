@@ -6,25 +6,25 @@ EXPERIMENTS.md): outer lr 1.0 → 0.1 + hypergradient clipping — at lr 1.0 the
 *inner* SGD destabilizes once accumulated weight decay exceeds 2/inner_lr,
 and Nyström hits that first precisely because its IHVP is the most accurate
 (truncated CG/Neumann underestimate). Identical settings for all methods.
-"""
-import time
 
-from benchmarks.common import emit, run_bilevel
+Runs through the typed problem API (``repro.core.problem.solve``); the
+paper-protocol training hyperparameters live on the problem's ``defaults``.
+"""
+from benchmarks.common import emit, solver_cfg
+from repro.core import solve
 from repro.tasks import build_logreg_weight_decay
 
 
 def run(n_outer: int = 12):
-    task = build_logreg_weight_decay()
+    problem = build_logreg_weight_decay()
     results = {}
     for method in ('nystrom', 'cg', 'neumann'):
-        t0 = time.time()
-        _, hist, secs = run_bilevel(
-            task, method, n_outer=n_outer, steps_per_outer=100,
-            inner_lr=0.1, outer_lr=0.1, outer_opt='sgd_momentum',
-            k=5, rho=1e-2, alpha=1e-2, reset_inner=True, batch=500)
-        results[method] = hist['outer_loss'][-1]
-        emit('fig2_logreg_hpo', secs * 1e6 / n_outer,
-             f'method={method} final_val_loss={hist["outer_loss"][-1]:.4f}')
+        res = solve(problem, solver_cfg(method, k=5, rho=1e-2, alpha=1e-2),
+                    n_outer=n_outer)
+        results[method] = res.history['outer_loss'][-1]
+        emit('fig2_logreg_hpo', res.seconds * 1e6 / n_outer,
+             f'method={method} final_val_loss={results[method]:.4f} '
+             f'hvps={res.hvp_count}')
     # paper claim: Nyström optimizes at least as fast as baselines
     assert results['nystrom'] <= min(results.values()) + 0.05
     return results
@@ -32,16 +32,14 @@ def run(n_outer: int = 12):
 
 def run_rho_sweep(n_outer: int = 8):
     """Fig. 3 companion: robustness over ρ ∈ {0.01, 0.1, 1.0}."""
-    task = build_logreg_weight_decay()
+    problem = build_logreg_weight_decay()
     out = {}
     for rho in (0.01, 0.1, 1.0):
-        _, hist, secs = run_bilevel(
-            task, 'nystrom', n_outer=n_outer, steps_per_outer=100,
-            inner_lr=0.1, outer_lr=0.1, outer_opt='sgd_momentum',
-            k=5, rho=rho, reset_inner=True, batch=500)
-        out[rho] = hist['outer_loss'][-1]
-        emit('fig3_rho_sweep', secs * 1e6 / n_outer,
-             f'rho={rho} final_val_loss={hist["outer_loss"][-1]:.4f}')
+        res = solve(problem, solver_cfg('nystrom', k=5, rho=rho),
+                    n_outer=n_outer)
+        out[rho] = res.history['outer_loss'][-1]
+        emit('fig3_rho_sweep', res.seconds * 1e6 / n_outer,
+             f'rho={rho} final_val_loss={out[rho]:.4f}')
     spread = max(out.values()) - min(out.values())
     emit('fig3_rho_sweep', 0.0, f'spread={spread:.4f} (robustness claim)')
     return out

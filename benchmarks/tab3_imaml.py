@@ -42,7 +42,7 @@ INNER_LR = 0.1
 def make_adapt(task):
     """inner_solver_fn for implicit_root: INNER_STEPS proximal-SGD steps
     from the meta-initialization (which is also the proximal anchor)."""
-    return sgd_solver(task['inner'], INNER_STEPS, INNER_LR)
+    return sgd_solver(task.inner_loss, INNER_STEPS, INNER_LR)
 
 
 def _stack_episodes(eps):
@@ -68,16 +68,16 @@ def _cosine(a, b):
 def run(n_episodes: int = 60, n_eval: int = 20, meta_batch: int = 1,
         bench_tasks: int = 8, shared_sketch: bool = False):
     task = build_imaml()
-    sampler = task['sampler']
+    sampler = task.reference['sampler']
     rng = jax.random.PRNGKey(0)
     adapt_fn = make_adapt(task)
     results = {}
     for method in ('nystrom', 'cg', 'neumann'):
-        meta = task['init_params'](rng)
+        meta = task.init_params(rng)
         opt = adam(1e-3)
         ost = opt.init(meta)
         solver = solver_cfg(method, k=10, rho=1e-2, alpha=1e-2).build()
-        solve = implicit_root(adapt_fn, task['inner'], solver)
+        solve = implicit_root(adapt_fn, task.inner_loss, solver)
         # shared-sketch mode needs an amortizable (pytree-of-arrays) state;
         # the iterative baselines keep per-task backward-pass prepares
         shared = shared_sketch and getattr(type(solver), 'amortizable', False)
@@ -94,13 +94,13 @@ def run(n_episodes: int = 60, n_eval: int = 20, meta_batch: int = 1,
                 def task_grad(sx, sy, qx, qy, key):
                     def obj(m):
                         theta = solve(m, (sx, sy), state=sketch)
-                        return task['outer'](theta, m, (qx, qy))
+                        return task.outer_loss(theta, m, (qx, qy))
                     return jax.grad(obj)(meta)
             else:
                 def task_grad(sx, sy, qx, qy, key):
                     def obj(m):
                         theta = solve(m, (sx, sy), rng=key)
-                        return task['outer'](theta, m, (qx, qy))
+                        return task.outer_loss(theta, m, (qx, qy))
                     return jax.grad(obj)(meta)
 
             hg = jax.vmap(task_grad)(SX, SY, QX, QY, keys)   # per-task Eq. 3
@@ -146,11 +146,11 @@ def bench_batched_vs_loop(n_tasks: int = 8, iters: int = 3,
     adaptation + k sketch HVPs + apply + mixed VJP); the loop pays one
     dispatch per task where vmap runs one batched program."""
     task = build_imaml()
-    sampler = task['sampler']
-    meta = task['init_params'](jax.random.PRNGKey(0))
+    sampler = task.reference['sampler']
+    meta = task.init_params(jax.random.PRNGKey(0))
     solver = solver_cfg(method).build()
     adapt_fn = make_adapt(task)
-    solve = implicit_root(adapt_fn, task['inner'], solver)
+    solve = implicit_root(adapt_fn, task.inner_loss, solver)
 
     SX, SY, QX, QY = _stack_episodes(
         [sampler.episode(i) for i in range(n_tasks)])
@@ -160,14 +160,14 @@ def bench_batched_vs_loop(n_tasks: int = 8, iters: int = 3,
     def batched(meta, SX, SY, QX, QY, keys):
         def task_grad(sx, sy, qx, qy, key):
             def obj(m):
-                return task['outer'](solve(m, (sx, sy), rng=key), m, (qx, qy))
+                return task.outer_loss(solve(m, (sx, sy), rng=key), m, (qx, qy))
             return jax.grad(obj)(meta)
         return jax.vmap(task_grad)(SX, SY, QX, QY, keys)
 
     @jax.jit
     def single(meta, sx, sy, qx, qy, key):
         params = adapt_fn(meta, (sx, sy))
-        return hypergradient(task['inner'], task['outer'], params, meta,
+        return hypergradient(task.inner_loss, task.outer_loss, params, meta,
                              (sx, sy), (qx, qy), solver, key,
                              PyTreeIndexer(params))
 
@@ -202,11 +202,11 @@ def bench_shared_sketch(n_tasks: int = 8, iters: int = 3, k: int = 10,
     speedup, and the cosine similarity of the two meta-updates (the
     staleness+pooling cost of sharing — acceptance floor 0.99)."""
     task = build_imaml()
-    sampler = task['sampler']
-    meta = task['init_params'](jax.random.PRNGKey(0))
+    sampler = task.reference['sampler']
+    meta = task.init_params(jax.random.PRNGKey(0))
     solver = solver_cfg(method, k=k).build()
     adapt_fn = make_adapt(task)
-    solve = implicit_root(adapt_fn, task['inner'], solver)
+    solve = implicit_root(adapt_fn, task.inner_loss, solver)
 
     SX, SY, QX, QY = _stack_episodes(
         [sampler.episode(i) for i in range(n_tasks)])
@@ -220,7 +220,7 @@ def bench_shared_sketch(n_tasks: int = 8, iters: int = 3, k: int = 10,
     def per_task(meta, keys):
         def task_grad(sx, sy, qx, qy, key):
             def obj(m):
-                return task['outer'](solve(m, (sx, sy), rng=key), m, (qx, qy))
+                return task.outer_loss(solve(m, (sx, sy), rng=key), m, (qx, qy))
             return jax.grad(obj)(meta)
         return mean_grad(task_grad, keys)
 
@@ -231,7 +231,7 @@ def bench_shared_sketch(n_tasks: int = 8, iters: int = 3, k: int = 10,
         def task_grad(sx, sy, qx, qy):
             def obj(m):
                 theta = solve(m, (sx, sy), state=sketch)
-                return task['outer'](theta, m, (qx, qy))
+                return task.outer_loss(theta, m, (qx, qy))
             return jax.grad(obj)(meta)
         return mean_grad(task_grad)
 

@@ -4,53 +4,101 @@ Paper protocol: warm-start (no reset), inner SGD 0.1 momentum 0.9 wd 5e-4,
 outer Adam 1e-5 (we use 1e-3 at our 1000× smaller scale), l=k=10, α=ρ=0.01.
 Validated claim: reweighting ≥ no-reweighting baseline, Nyström matches or
 beats the iterative backends.
+
+Runs through the typed problem API (``repro.core.problem.solve``), which
+makes sketch amortization available here for free: the
+``sketch_refresh_every`` row reuses one Nyström sketch across N warm-start
+outer steps and emits the HVP-count + wall-time economics next to the
+fresh-prepare protocol rows (tab3's shared-sketch row, for the alternating
+workload).
+
+    python -m benchmarks.tab4_reweighting --n-outer 2 --shared-sketch
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
-import time
 
-from benchmarks.common import emit, run_bilevel
+from benchmarks.common import emit, solver_cfg
+from repro.core import solve
 from repro.optim import momentum
 from repro.tasks import build_reweighting
 
+SKETCH_REFRESH = 5          # default amortization cadence for the HVP row
 
-def _baseline(task, steps=600):
-    params = task['init_params'](jax.random.PRNGKey(0))
+
+def _baseline(problem, steps=600):
+    """Plain training on the imbalanced stream — no reweighting, no bilevel.
+    Uses the problem's own ``baseline_loss`` (the hparam-free training
+    objective) instead of re-importing model pieces."""
+    params = problem.init_params(jax.random.PRNGKey(0))
     opt = momentum(0.1, 0.9)
     st = opt.init(params)
-    hp = task['init_hparams'](jax.random.PRNGKey(1))
 
     @jax.jit
     def step(params, st, X, y, i):
-        def plain(p, b):
-            from repro.tasks.paper import mlp_apply, _xent
-            return _xent(mlp_apply(p, b[0]), b[1])
-        g = jax.grad(plain)(params, (X, y))
+        g = jax.grad(problem.baseline_loss)(params, (X, y))
         return opt.apply(g, st, params, i)
 
+    # the dataset's own np.RandomState stream, not the ArraySource stream:
+    # keeps this row's draws (and hence the baseline accuracy the table is
+    # compared against) identical to the seed benchmark
+    data = problem.reference['dataset']
     for i in range(steps):
-        X, y = task['data'].train_batch(i, 128)
+        X, y = data.train_batch(i, 128)
         params, st = step(params, st, X, y, jnp.int32(i))
-    return task['accuracy'](params)
+    return problem.metrics['accuracy'](params, None)
 
 
-def run(imbalances=(200, 100, 50), n_outer: int = 30):
+def run(imbalances=(200, 100, 50), n_outer: int = 30,
+        sketch_refresh_every: int | None = None, baseline_steps: int = 600):
     out = {}
     for imb in imbalances:
-        task = build_reweighting(imbalance=imb)
-        base = _baseline(task)
+        problem = build_reweighting(imbalance=imb)
+        base = _baseline(problem, steps=baseline_steps)
         emit('tab4_reweighting', 0.0, f'imb={imb} baseline acc={base:.3f}')
-        data = task['data']
-        task = dict(task, train=(data.X, data.y), val=(data.Xv, data.yv))
         for method in ('nystrom', 'cg', 'neumann'):
-            t0 = time.time()
-            state, hist, secs = run_bilevel(
-                task, method, n_outer=n_outer, steps_per_outer=20,
-                inner_lr=0.1, inner_momentum=0.9, outer_lr=1e-3,
-                k=10, rho=1e-2, alpha=1e-2, batch=128)
-            acc = task['accuracy'](state.params)
-            out[(imb, method)] = acc
-            emit('tab4_reweighting', secs * 1e6 / n_outer,
-                 f'imb={imb} method={method} acc={acc:.3f}')
+            res = solve(problem, solver_cfg(method, k=10, rho=1e-2,
+                                            alpha=1e-2), n_outer=n_outer)
+            out[(imb, method)] = res.metrics['accuracy']
+            emit('tab4_reweighting', res.seconds * 1e6 / n_outer,
+                 f'imb={imb} method={method} '
+                 f'acc={res.metrics["accuracy"]:.3f} hvps={res.hvp_count}')
+        # amortized-sketch row: the reweighting protocol is warm-start, so
+        # one sketch legitimately serves several outer steps — k HVPs per
+        # refresh instead of per step (the nystrom row above is the
+        # refresh_every=1 counterpart at identical settings)
+        refresh = sketch_refresh_every or SKETCH_REFRESH
+        res_am = solve(problem, solver_cfg('nystrom', k=10, rho=1e-2),
+                       n_outer=n_outer, sketch_refresh_every=refresh)
+        fresh_hvps = n_outer * 10
+        out[(imb, 'nystrom_amortized')] = res_am.metrics['accuracy']
+        emit('tab4_reweighting_sketch', res_am.seconds * 1e6 / n_outer,
+             f'imb={imb} method=nystrom refresh_every={refresh} '
+             f'hvps={res_am.hvp_count} (fresh_prepare={fresh_hvps}) '
+             f'wall_s={res_am.seconds:.2f} '
+             f'acc={res_am.metrics["accuracy"]:.3f}')
         out[(imb, 'baseline')] = base
     return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--imbalances', type=int, nargs='+',
+                    default=[200, 100, 50])
+    ap.add_argument('--n-outer', type=int, default=30)
+    ap.add_argument('--baseline-steps', type=int, default=600)
+    ap.add_argument('--shared-sketch', action='store_true',
+                    help='amortize one Nyström sketch across '
+                         '--sketch-refresh-every warm-start outer steps')
+    ap.add_argument('--sketch-refresh-every', type=int, default=None)
+    args = ap.parse_args(argv)
+    refresh = args.sketch_refresh_every
+    if args.shared_sketch and refresh is None:
+        refresh = min(SKETCH_REFRESH, max(2, args.n_outer))
+    run(imbalances=tuple(args.imbalances), n_outer=args.n_outer,
+        sketch_refresh_every=refresh, baseline_steps=args.baseline_steps)
+
+
+if __name__ == '__main__':
+    main()

@@ -37,11 +37,12 @@ from repro.tasks import build_reweighting
 
 def run(sizes=(5, 10, 20), reps: int = 3):
     task = build_reweighting(imbalance=50)
-    params = task['init_params'](jax.random.PRNGKey(0))
-    hp = task['init_hparams'](jax.random.PRNGKey(1))
+    params = task.init_params(jax.random.PRNGKey(0))
+    hp = task.init_hparams(jax.random.PRNGKey(1))
     p_count = sum(x.size for x in jax.tree.leaves(params))
-    batch = task['data'].train_batch(0, 128)
-    vbatch = task['data'].val_batch(0, 128)
+    data = task.reference['dataset']          # the raw seed-stream dataset
+    batch = data.train_batch(0, 128)
+    vbatch = data.val_batch(0, 128)
     idxr = PyTreeIndexer(params)
     out = {}
     for method in ('cg', 'neumann', 'nystrom'):
@@ -51,7 +52,7 @@ def run(sizes=(5, 10, 20), reps: int = 3):
 
             @jax.jit
             def hg(params, hp, key):
-                return hypergradient(task['inner'], task['outer'], params,
+                return hypergradient(task.inner_loss, task.outer_loss, params,
                                      hp, batch, vbatch, solver, key, idxr)
 
             hg(params, hp, jax.random.PRNGKey(2))  # warmup/compile
@@ -72,7 +73,7 @@ def run(sizes=(5, 10, 20), reps: int = 3):
 
         @jax.jit
         def hg2(params, hp, key):
-            return hypergradient(task['inner'], task['outer'], params, hp,
+            return hypergradient(task.inner_loss, task.outer_loss, params, hp,
                                  batch, vbatch, solver, key, idxr)
 
         hg2(params, hp, jax.random.PRNGKey(2))

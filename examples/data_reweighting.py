@@ -1,8 +1,12 @@
 """Data reweighting (paper §5.4): a weight-net learns to down-weight
 head-class examples on long-tailed data; outer loss is balanced validation.
 
-Uses the high-level ``BilevelTrainer`` (whose outer step differentiates
-through the ``implicit_root`` solution map — see docs/implicit-api.md).
+Uses the typed problem API: ``build_reweighting`` returns a
+``BilevelProblem`` and ``solve`` drives it end to end (the outer step
+differentiates through the ``implicit_root`` solution map — see
+docs/implicit-api.md). ``--sketch-refresh-every N`` amortizes one Nyström
+sketch across N warm-start outer steps (k HVPs per refresh instead of per
+step).
 
     python examples/data_reweighting.py --imbalance 100
 """
@@ -15,11 +19,8 @@ try:
 except ImportError:
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / 'src'))
 
-import jax                                               # noqa: E402
-
-from repro.core import BilevelTrainer, HypergradConfig   # noqa: E402
-from repro.optim import adam, momentum                   # noqa: E402
-from repro.tasks import build_reweighting                # noqa: E402
+from repro.core import HypergradConfig, solve                # noqa: E402
+from repro.tasks import build_reweighting                    # noqa: E402
 
 
 def main():
@@ -27,36 +28,19 @@ def main():
     ap.add_argument('--solver', default='nystrom')
     ap.add_argument('--imbalance', type=int, default=100)
     ap.add_argument('--outer-steps', type=int, default=40)
+    ap.add_argument('--sketch-refresh-every', type=int, default=None,
+                    help='outer steps between Nyström sketch rebuilds '
+                         '(default 1 = fresh every step)')
     args = ap.parse_args()
 
-    task = build_reweighting(imbalance=args.imbalance)
-    data = task['data']
-    trainer = BilevelTrainer(
-        inner_loss=task['inner'], outer_loss=task['outer'],
-        inner_opt=momentum(0.1, 0.9), outer_opt=adam(1e-3),
-        hypergrad=HypergradConfig(solver=args.solver, k=10, rho=1e-2))
-
-    rng = jax.random.PRNGKey(0)
-    state = trainer.init(rng, task['init_params'](rng),
-                         task['init_hparams'](jax.random.PRNGKey(1)))
-
-    def train_batches():
-        i = 0
-        while True:
-            yield data.train_batch(i, 128)
-            i += 1
-
-    def val_batches():
-        i = 0
-        while True:
-            yield data.val_batch(i, 128)
-            i += 1
-
-    state, hist = trainer.run(state, train_batches(), val_batches(),
-                              steps_per_outer=20, n_outer=args.outer_steps,
-                              log_every=10)
+    problem = build_reweighting(imbalance=args.imbalance)
+    result = solve(problem,
+                   HypergradConfig(solver=args.solver, k=10, rho=1e-2),
+                   n_outer=args.outer_steps, log_every=10,
+                   sketch_refresh_every=args.sketch_refresh_every)
     print(f'balanced test accuracy (imbalance={args.imbalance}, '
-          f'solver={args.solver}): {task["accuracy"](state.params):.3f}')
+          f'solver={args.solver}): {result.metrics["accuracy"]:.3f} '
+          f'[{result.hvp_count} HVPs, {result.seconds:.1f}s]')
 
 
 if __name__ == '__main__':

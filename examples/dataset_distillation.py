@@ -1,8 +1,10 @@
 """Dataset distillation (paper §5.2): learn 50 synthetic images whose
 training signal reproduces the full 10-class digit-GMM dataset.
 
-Uses the high-level ``BilevelTrainer`` (whose outer step differentiates
-through the ``implicit_root`` solution map — see docs/implicit-api.md).
+Uses the typed problem API: ``build_distillation`` returns a
+``BilevelProblem`` (paper-protocol defaults: inner reset every outer step)
+and ``solve`` drives it end to end; the ``distilled_accuracy`` metric trains
+a fresh model on the distilled images only.
 
     python examples/dataset_distillation.py
 """
@@ -15,12 +17,8 @@ try:
 except ImportError:
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / 'src'))
 
-import jax                                               # noqa: E402
-import jax.numpy as jnp                                  # noqa: E402
-
-from repro.core import BilevelTrainer, HypergradConfig   # noqa: E402
-from repro.optim import adam, sgd                        # noqa: E402
-from repro.tasks import build_distillation               # noqa: E402
+from repro.core import HypergradConfig, solve                # noqa: E402
+from repro.tasks import build_distillation                   # noqa: E402
 
 
 def main():
@@ -29,38 +27,13 @@ def main():
     ap.add_argument('--outer-steps', type=int, default=30)
     args = ap.parse_args()
 
-    task = build_distillation()
-    trainer = BilevelTrainer(
-        inner_loss=task['inner'], outer_loss=task['outer'],
-        inner_opt=sgd(0.01), outer_opt=adam(1e-3),
-        hypergrad=HypergradConfig(solver=args.solver, k=10, rho=1e-2),
-        init_params=task['init_params'], reset_inner=True)
-
-    rng = jax.random.PRNGKey(0)
-    state = trainer.init(rng, task['init_params'](rng), task['init_hparams']())
-    Xt, yt = task['train']
-
-    def batches(X, y, start):
-        i = start
-        while True:
-            idx = jax.random.randint(jax.random.PRNGKey(i), (256,), 0,
-                                     X.shape[0])
-            yield (X[idx], y[idx])
-            i += 1
-
-    state, hist = trainer.run(state, batches(Xt, yt, 0), batches(Xt, yt, 9000),
-                              steps_per_outer=100, n_outer=args.outer_steps,
-                              log_every=5)
-
-    # evaluate: train a fresh model on the distilled images only
-    params = task['init_params'](jax.random.PRNGKey(7))
-    opt = sgd(0.01)
-    st = opt.init(params)
-    for i in range(100):
-        g = jax.grad(task['inner'])(params, state.hparams, None)
-        params, st = opt.apply(g, st, params, jnp.int32(i))
+    problem = build_distillation()
+    result = solve(problem,
+                   HypergradConfig(solver=args.solver, k=10, rho=1e-2),
+                   n_outer=args.outer_steps, log_every=5)
     print(f'test accuracy from 50 distilled images: '
-          f'{task["accuracy"](params):.3f}')
+          f'{result.metrics["distilled_accuracy"]:.3f} '
+          f'[{result.hvp_count} HVPs, {result.seconds:.1f}s]')
 
 
 if __name__ == '__main__':

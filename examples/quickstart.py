@@ -41,7 +41,7 @@ def main():
                          'hypergradient() wrapper and print the deviation')
     args = ap.parse_args()
 
-    task = build_logreg_weight_decay()
+    problem = build_logreg_weight_decay()
     # registry-driven flag forwarding: explicitly-passed flags the solver
     # does not consume are rejected loudly by build(), never silently dropped
     hypergrad = config_from_cli(args.solver,
@@ -49,23 +49,23 @@ def main():
                                 defaults={'k': 5, 'rho': 1e-2})
 
     # INNER_STEPS SGD steps from zero init (§5.1 reset protocol)
-    inner_solver = sgd_solver(task['inner'], INNER_STEPS, INNER_LR,
+    inner_solver = sgd_solver(problem.inner_loss, INNER_STEPS, INNER_LR,
                               init=lambda phi, b: {'w': jnp.zeros_like(
                                   phi['wd'])})
 
-    solve = implicit_root(inner_solver, task['inner'], hypergrad)
+    solve = implicit_root(inner_solver, problem.inner_loss, hypergrad)
     opt = momentum(0.1, 0.9)
 
     @jax.jit
     def outer_step(phi, ost, step, rng):
         def obj(phi):
-            theta = solve(phi, task['train'], rng=rng)
-            return task['outer'](theta, phi, task['val'])
+            theta = solve(phi, problem.data.train, rng=rng)
+            return problem.outer_loss(theta, phi, problem.data.val)
         val, g = jax.value_and_grad(obj)(phi)
         phi, ost = opt.apply(g, ost, phi, step)
         return phi, ost, val
 
-    phi = task['init_hparams']()
+    phi = problem.init_hparams(jax.random.PRNGKey(0))
     ost = opt.init(phi)
     for i in range(args.outer_steps):
         phi, ost, val = outer_step(phi, ost, jnp.int32(i),
@@ -75,13 +75,13 @@ def main():
 
     if args.legacy_check:
         rng = jax.random.PRNGKey(0)
-        theta = inner_solver(phi, task['train'])
-        new = jax.grad(lambda p: task['outer'](
-            solve(p, task['train'], rng=rng), p, task['val']))(phi)
+        theta = inner_solver(phi, problem.data.train)
+        new = jax.grad(lambda p: problem.outer_loss(
+            solve(p, problem.data.train, rng=rng), p, problem.data.val))(phi)
         # API-compat: the legacy imperative entry point (now a wrapper over
         # implicit_root) still accepts its old signature and agrees exactly
-        legacy = hypergradient(task['inner'], task['outer'], theta, phi,
-                               task['train'], task['val'],
+        legacy = hypergradient(problem.inner_loss, problem.outer_loss, theta, phi,
+                               problem.data.train, problem.data.val,
                                hypergrad.build(), rng)
         dev = max(float(jnp.abs(a - b).max()) for a, b in
                   zip(jax.tree.leaves(legacy), jax.tree.leaves(new)))
@@ -91,15 +91,15 @@ def main():
         # no implicit_root code shared). The exact solver isolates the
         # plumbing: at k≪p the Nyström estimate legitimately differs from
         # the oracle by its rank-truncation error, which is not a bug.
-        exact_solve = implicit_root(inner_solver, task['inner'],
+        exact_solve = implicit_root(inner_solver, problem.inner_loss,
                                     config_from_cli('exact',
                                                     flags={'rho': args.rho},
                                                     defaults={'rho': 1e-2}))
-        via_exact = jax.grad(lambda p: task['outer'](
-            exact_solve(p, task['train']), p, task['val']))(phi)
+        via_exact = jax.grad(lambda p: problem.outer_loss(
+            exact_solve(p, problem.data.train), p, problem.data.val))(phi)
         oracle = unrolled_hypergradient(
-            task['inner'], task['outer'], theta, phi, task['train'],
-            task['val'], steps=INNER_STEPS, lr=INNER_LR)
+            problem.inner_loss, problem.outer_loss, theta, phi, problem.data.train,
+            problem.data.val, steps=INNER_STEPS, lr=INNER_LR)
         rel = (max(float(jnp.abs(a - b).max()) for a, b in
                    zip(jax.tree.leaves(oracle), jax.tree.leaves(via_exact)))
                / max(float(jnp.abs(x).max())
@@ -107,8 +107,8 @@ def main():
         print(f'[quickstart] custom_vjp (exact solver) vs unrolled oracle: '
               f'relative deviation {rel:.2e}')
 
-    theta = jax.jit(inner_solver)(phi, task['train'])
-    final = float(task['outer'](theta, phi, task['val']))
+    theta = jax.jit(inner_solver)(phi, problem.data.train)
+    final = float(problem.outer_loss(theta, phi, problem.data.val))
     print(f'final validation loss: {final:.4f} (solver={args.solver})')
 
 

@@ -1,6 +1,8 @@
 """repro.core — the paper's contribution: Nyström implicit differentiation.
 
 Public API:
+  BilevelProblem / solve / PROBLEMS               — typed problem API (one
+                                                    entry point task → result)
   implicit_root                                   — differentiable θ*(φ) map
   NystromIHVP / CGIHVP / NeumannIHVP / ExactIHVP  — IHVP solvers
   hypergradient / unrolled_hypergradient          — Eq. 3 assembly (legacy)
@@ -17,6 +19,9 @@ from repro.core.hvp import extract_columns, make_hvp, make_hvp_fn
 from repro.core.hypergrad import (HypergradConfig, config_from_cli,
                                   hypergradient, unrolled_hypergradient)
 from repro.core.implicit import implicit_root, sgd_solver
+from repro.core.problem import (BatchSource, BilevelProblem, BilevelResult,
+                                PROBLEMS, accounted_hvps, get_problem,
+                                register_problem, solve)
 from repro.core.solvers import (SOLVERS, CGIHVP, DenseFactor, ExactIHVP,
                                 IterativeOperator, NeumannIHVP, NystromIHVP,
                                 NystromSketch, SketchPolicy, SketchState,
@@ -27,7 +32,9 @@ from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_zeros_like)
 
 __all__ = [
-    'BACKENDS', 'BilevelState', 'BilevelTrainer', 'DenseFactor',
+    'BACKENDS', 'BatchSource', 'BilevelProblem', 'BilevelResult',
+    'BilevelState', 'BilevelTrainer', 'DenseFactor', 'PROBLEMS',
+    'accounted_hvps', 'get_problem', 'register_problem', 'solve',
     'FlatBackend', 'FlatShardedBackend', 'HypergradConfig',
     'IterativeOperator', 'PallasBackend', 'ShardedOperand', 'SOLVERS',
     'SketchPolicy', 'SketchState', 'SolverSpec', 'TreeBackend',

@@ -67,6 +67,30 @@ class BilevelTrainer:
     init_params: Callable[[jax.Array], PyTree] | None = None
     reset_inner: bool = False
 
+    @classmethod
+    def from_problem(cls, problem, hypergrad=None, *, inner_opt=None,
+                     outer_opt=None, reset_inner: bool | None = None
+                     ) -> 'BilevelTrainer':
+        """Construct a trainer from a :class:`~repro.core.problem.BilevelProblem`.
+
+        Optimizers default from the problem's ``defaults`` (via
+        ``repro.core.problem.default_optimizers``); ``reset_inner`` defaults
+        from the task's paper protocol. ``solve()`` is the higher-level entry
+        point that also drives the loop and accounts HVPs — this constructor
+        is for callers who want the trainer's step functions directly.
+        """
+        from repro.core.problem import default_optimizers, resolved_defaults
+        d = resolved_defaults(problem, reset_inner=reset_inner)
+        d_inner, d_outer = default_optimizers(problem, d)
+        return cls(inner_loss=problem.inner_loss,
+                   outer_loss=problem.outer_loss,
+                   inner_opt=inner_opt or d_inner,
+                   outer_opt=outer_opt or d_outer,
+                   hypergrad=(hypergrad if hypergrad is not None
+                              else HypergradConfig()),
+                   init_params=problem.init_params,
+                   reset_inner=bool(d['reset_inner']))
+
     def init(self, rng: jax.Array, params: PyTree, hparams: PyTree) -> BilevelState:
         rng, vjp_rng = jax.random.split(rng)
         return BilevelState(

@@ -1,0 +1,446 @@
+"""BilevelProblem: one typed problem API from task definition to hypergradient.
+
+The paper's claim is that the Nyström IHVP "works stably in various tasks"
+(HPO, reweighting, distillation, meta-learning). This module is where a
+*task* becomes a first-class object instead of a stringly-typed dict:
+
+    problem = build_reweighting(imbalance=100)        # a BilevelProblem
+    result  = solve(problem, HypergradConfig(solver='nystrom', k=10),
+                    n_outer=40, sketch_refresh_every=5)
+    result.metrics['accuracy'], result.hvp_count, result.seconds
+
+One specification — ``inner_loss``/``outer_loss``/``init_params``/
+``init_hparams``/``data`` (+ optional ``metrics``/``baseline_loss``/
+``reference``) — consumed by one entry point. ``solve`` internally builds
+the ``implicit_root`` solution map, the solver via the ``SOLVERS`` registry,
+and a ``SketchPolicy`` (through :class:`~repro.core.bilevel.BilevelTrainer`),
+so every workload gets the sketch-amortization knobs
+(``sketch_refresh_every``, shared meta-batch sketches) for free.
+
+Layers:
+
+    BilevelProblem (this module)        what the task *is*
+      └─ solve() / BilevelTrainer       how it is optimized (alternating or
+         (bilevel.py)                   vmapped meta-batches)
+           └─ implicit_root             how the hypergradient is assembled
+                └─ solver protocol      how the IHVP is computed
+
+``data`` is any :class:`BatchSource` (structural protocol below) — the
+concrete sources over the synthetic loaders live in ``repro.data.sources``.
+Meta-problems (iMAML) carry an episode source instead and are driven by
+``solve(..., vmap_tasks=N)``: per-task hypergradients under ``jax.vmap``,
+optionally sharing one sketch across the meta-batch
+(``shared_sketch=True`` — k HVPs per meta-batch instead of per task).
+
+Migration: builders in ``repro.tasks`` now return ``BilevelProblem``s. Old
+dict consumers keep working for one release through the deprecated adapter —
+``problem['inner']`` / ``problem.as_legacy_dict()`` emit a
+``DeprecationWarning`` and map the old keys onto the typed fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+import warnings
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import BilevelState, BilevelTrainer
+from repro.core.hypergrad import HypergradConfig
+from repro.core.implicit import implicit_root, sgd_solver
+from repro.core.tree_util import PyTree
+from repro.optim import adam, chain, clip_by_global_norm, momentum, sgd
+
+
+@runtime_checkable
+class BatchSource(Protocol):
+    """Deterministic step-indexed batch streams (see ``repro.data.sources``).
+
+    ``train_batch`` feeds the inner problem, ``val_batch`` the outer loss.
+    Meta-problem sources raise from these and expose
+    ``task_batch(step, n_tasks)`` instead (the ``vmap_tasks=`` path).
+    """
+
+    def train_batch(self, step: int, batch_size: int) -> Any: ...
+
+    def val_batch(self, step: int, batch_size: int) -> Any: ...
+
+
+# Training-hyperparameter defaults a problem may override via its
+# ``defaults`` dict; ``solve()`` kwargs override both.
+_TRAIN_DEFAULTS: dict[str, Any] = dict(
+    inner_lr=0.1, inner_momentum=0.0, outer_lr=1e-3, outer_opt='adam',
+    steps_per_outer=20, batch_size=128, reset_inner=False)
+
+@dataclasses.dataclass
+class BilevelProblem:
+    """A typed bilevel task specification.
+
+    ``inner_loss``/``outer_loss`` follow the repo-wide signature
+    ``f(params, hparams, batch) -> scalar``. ``init_params`` and
+    ``init_hparams`` both take an rng key (builders that used to take zero
+    args are normalized — they simply ignore it). ``metrics`` maps a name to
+    ``fn(params, hparams) -> float``, evaluated on the solved state by
+    ``solve``. ``baseline_loss`` is the task's plain (hparam-free) training
+    loss ``(params, batch) -> scalar`` where one exists — what a
+    no-bilevel baseline run minimizes (tab4's baseline row). ``reference``
+    holds task-specific extras (episode sampler, distilled labels, the
+    underlying dataset object). ``defaults`` overrides ``solve``'s training
+    hyperparameters (inner_lr, outer_opt, steps_per_outer, ...).
+    """
+    name: str
+    inner_loss: Callable[..., jax.Array]
+    outer_loss: Callable[..., jax.Array]
+    init_params: Callable[[jax.Array], PyTree]
+    init_hparams: Callable[[jax.Array], PyTree]
+    data: BatchSource | None = None
+    metrics: dict[str, Callable[..., float]] = dataclasses.field(
+        default_factory=dict)
+    baseline_loss: Callable[..., jax.Array] | None = None
+    reference: dict[str, Any] = dataclasses.field(default_factory=dict)
+    defaults: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------- legacy dict adapter
+    def _legacy_map(self) -> dict[str, Any]:
+        d = {'inner': self.inner_loss, 'outer': self.outer_loss,
+             'init_params': self.init_params,
+             'init_hparams': self.init_hparams,
+             # old dicts carried the raw dataset object under 'data'
+             # (task['data'].X / .train_batch with its np.RandomState
+             # stream) — keep that contract; the BatchSource is what *new*
+             # code reaches via problem.data
+             'data': self.reference.get('dataset', self.data)}
+        for key in ('train', 'val'):
+            if hasattr(self.data, key):
+                d[key] = getattr(self.data, key)
+        if 'accuracy' in self.metrics:
+            acc = self.metrics['accuracy']
+            d['accuracy'] = lambda params: acc(params, None)
+        d.update(self.reference)
+        return d
+
+    def as_legacy_dict(self) -> dict[str, Any]:
+        """The old ``repro.tasks`` dict shape, for unported call sites.
+
+        Deprecated: new code should use the typed fields (and ``solve``)
+        directly. Note ``init_hparams`` is the normalized rng-taking
+        callable even for tasks whose legacy builder took zero args.
+        """
+        warnings.warn(
+            f'as_legacy_dict() on problem {self.name!r} is deprecated; use '
+            'the typed BilevelProblem fields / solve() instead',
+            DeprecationWarning, stacklevel=2)
+        return self._legacy_map()
+
+    def __getitem__(self, key: str):
+        legacy = self._legacy_map()
+        if key not in legacy:
+            raise KeyError(key)
+        warnings.warn(
+            f'task[{key!r}] dict access on problem {self.name!r} is '
+            'deprecated; use the typed BilevelProblem fields / solve() '
+            'instead', DeprecationWarning, stacklevel=2)
+        return legacy[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._legacy_map()
+
+    @classmethod
+    def from_legacy_dict(cls, task: dict, name: str = 'legacy') -> \
+            'BilevelProblem':
+        """Adapt an old-style task dict (the pre-ISSUE-5 builder output)."""
+        from repro.data.sources import ArraySource
+        hp = task['init_hparams']
+        if callable(hp) and hp.__code__.co_argcount == 0:
+            init_hparams = lambda rng, _hp=hp: _hp()    # noqa: E731
+        else:
+            init_hparams = hp
+        data = task.get('data')
+        if data is None and 'train' in task:
+            data = ArraySource(train=task['train'],
+                               val=task.get('val', task['train']))
+        metrics = {}
+        if 'accuracy' in task:
+            acc = task['accuracy']
+            metrics['accuracy'] = lambda params, hparams: acc(params)
+        reference = {k: v for k, v in task.items()
+                     if k not in ('inner', 'outer', 'init_params',
+                                  'init_hparams', 'data', 'train', 'val',
+                                  'accuracy')}
+        return cls(name=name, inner_loss=task['inner'],
+                   outer_loss=task['outer'], init_params=task['init_params'],
+                   init_hparams=init_hparams, data=data, metrics=metrics,
+                   reference=reference)
+
+
+@dataclasses.dataclass
+class BilevelResult:
+    """What ``solve`` hands back.
+
+    ``hvp_count`` is the accounted number of Hessian-vector products the
+    hypergradient machinery ran (sketch builds × k for amortizable solvers —
+    honoring the refresh cadence and reset-invalidation — or outer steps ×
+    iterations for CG/Neumann; the mixed-term VJPs are not HVPs and are not
+    counted). ``seconds`` is measured wall time of the optimization loop.
+    ``params`` is None on the ``vmap_tasks`` meta path, where the outer
+    variable (``hparams``) is the meta-initialization and per-task adapted
+    parameters are transient.
+    """
+    problem: str
+    params: PyTree | None
+    hparams: PyTree
+    history: dict[str, list[float]]
+    metrics: dict[str, float]
+    hvp_count: int
+    seconds: float
+    state: BilevelState | None = None
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+PROBLEMS: dict[str, Callable[..., BilevelProblem]] = {}
+
+
+def register_problem(name: str):
+    """Decorator: register a ``(**kwargs) -> BilevelProblem`` builder."""
+    def deco(builder):
+        PROBLEMS[name] = builder
+        return builder
+    return deco
+
+
+def get_problem(name: str, **kwargs) -> BilevelProblem:
+    """Build a registered problem by name (``launch/train.py --problem``)."""
+    if name not in PROBLEMS:
+        import repro.tasks  # noqa: F401  (registers the paper's builders)
+    if name not in PROBLEMS:
+        raise ValueError(f'unknown problem {name!r}; registered: '
+                         f'{sorted(PROBLEMS)}')
+    return PROBLEMS[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer construction shared by solve() and BilevelTrainer.from_problem
+# ---------------------------------------------------------------------------
+def resolved_defaults(problem: BilevelProblem, **overrides) -> dict[str, Any]:
+    """_TRAIN_DEFAULTS ← problem.defaults ← non-None solve() kwargs."""
+    d = {**_TRAIN_DEFAULTS, **problem.defaults}
+    d.update({k: v for k, v in overrides.items() if v is not None})
+    return d
+
+
+def default_optimizers(problem: BilevelProblem, d: dict | None = None):
+    """(inner_opt, outer_opt) from the problem's resolved defaults.
+
+    Mirrors the benchmark runner's construction: momentum/plain SGD inner,
+    clipped Adam or SGD-momentum outer (hypergradient clipping is uniform
+    outer-loop hygiene — Nyström's more-accurate IHVP takes larger raw steps
+    than truncated CG/Neumann and needs the same guard rail).
+    """
+    d = resolved_defaults(problem) if d is None else d
+    inner = (momentum(d['inner_lr'], d['inner_momentum'])
+             if d['inner_momentum'] else sgd(d['inner_lr']))
+    base = (adam(d['outer_lr']) if d['outer_opt'] == 'adam'
+            else momentum(d['outer_lr'], 0.9))
+    return inner, chain(clip_by_global_norm(10.0), base)
+
+
+# ---------------------------------------------------------------------------
+# HVP accounting
+# ---------------------------------------------------------------------------
+def _params_size(problem: BilevelProblem) -> int:
+    shapes = jax.eval_shape(problem.init_params, jax.random.PRNGKey(0))
+    return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+def accounted_hvps(solver, problem: BilevelProblem, n_outer: int,
+                   refresh_every: int = 1, reset_inner: bool = False,
+                   vmap_tasks: int | None = None,
+                   shared_sketch: bool = False) -> int:
+    """HVPs the hypergradient machinery runs over ``n_outer`` outer steps.
+
+    Amortizable solvers pay per sketch *build*: ``k`` HVPs (Nyström) or
+    ``p`` (exact). Builds follow the lifecycle — every
+    ``refresh_every``-th step, every step under ``reset_inner`` (the policy
+    invalidates after each reset), per task per meta-step on the vmapped
+    path unless ``shared_sketch``. Iterative solvers pay their iteration
+    count in *sequential* HVPs on every apply. The same arithmetic tab3's
+    shared-sketch row quotes (k vs tasks × k per meta-batch), available
+    uniformly so every benchmark can emit an HVP-count column.
+    """
+    amortizable = getattr(type(solver), 'amortizable', False)
+    if amortizable:
+        per_build = getattr(solver, 'k', None)
+        if per_build is None:                    # ExactIHVP: full column scan
+            per_build = _params_size(problem)
+        if vmap_tasks:
+            per_step = per_build if shared_sketch else vmap_tasks * per_build
+            return n_outer * per_step
+        builds = (n_outer if reset_inner
+                  else math.ceil(n_outer / max(1, refresh_every)))
+        return builds * per_build
+    iters = getattr(solver, 'iters', 0)
+    return n_outer * iters * (vmap_tasks or 1)
+
+
+# ---------------------------------------------------------------------------
+# solve() — the single entry point
+# ---------------------------------------------------------------------------
+def solve(problem: BilevelProblem, config: HypergradConfig | Any = None, *,
+          n_outer: int, steps_per_outer: int | None = None,
+          batch_size: int | None = None, inner_opt=None, outer_opt=None,
+          reset_inner: bool | None = None, seed: int = 0,
+          sketch_refresh_every: int | None = None,
+          vmap_tasks: int | None = None, shared_sketch: bool = False,
+          log_every: int = 0, jit: bool = True) -> BilevelResult:
+    """Optimize a :class:`BilevelProblem` end to end → :class:`BilevelResult`.
+
+    Two drive modes:
+
+    * default — the alternating warm-start loop: ``steps_per_outer`` inner
+      optimizer steps per hypergradient update, batches drawn from
+      ``problem.data``'s train/val streams, the sketch lifecycle handled by
+      the trainer's :class:`~repro.core.solvers.SketchPolicy`
+      (``sketch_refresh_every`` overrides the config's cadence; N > 1
+      amortizes one sketch over N outer steps).
+    * ``vmap_tasks=N`` — meta-batched: each outer step draws N tasks from
+      ``problem.data.task_batch``, adapts each with ``steps_per_outer``
+      inner-SGD steps from the meta-init (φ), and averages the N per-task
+      hypergradients computed under one ``jax.vmap``.
+      ``shared_sketch=True`` prepares one sketch at the meta-init on the
+      pooled support data and broadcasts it to every task's backward pass —
+      k HVPs per meta-batch instead of per task.
+
+    ``config`` is a :class:`HypergradConfig` (or a built solver instance, or
+    None for the default Nyström configuration). Training hyperparameters
+    (``inner_opt``/``outer_opt``/``steps_per_outer``/``batch_size``/
+    ``reset_inner``) default from ``problem.defaults``.
+    """
+    if config is None:
+        config = HypergradConfig()
+    d = resolved_defaults(problem, steps_per_outer=steps_per_outer,
+                          batch_size=batch_size, reset_inner=reset_inner)
+    solver = (config.build() if isinstance(config, HypergradConfig)
+              else config)
+    if vmap_tasks:
+        if not hasattr(problem.data, 'task_batch'):
+            raise TypeError(
+                f'solve(vmap_tasks={vmap_tasks}) needs a meta-problem data '
+                'source exposing task_batch(step, n_tasks) (e.g. '
+                f'EpisodeSource); problem {problem.name!r} carries '
+                f'{type(problem.data).__name__}')
+        return _solve_meta(problem, solver, d, n_outer=n_outer,
+                           vmap_tasks=vmap_tasks, shared_sketch=shared_sketch,
+                           outer_opt=outer_opt, seed=seed,
+                           log_every=log_every, jit=jit)
+
+    d_inner, d_outer = default_optimizers(problem, d)
+    trainer = BilevelTrainer.from_problem(
+        problem, config, inner_opt=inner_opt or d_inner,
+        outer_opt=outer_opt or d_outer, reset_inner=d['reset_inner'])
+    rng = jax.random.PRNGKey(seed)
+    state = trainer.init(rng, problem.init_params(rng),
+                         problem.init_hparams(rng))
+
+    bs = d['batch_size']
+    train_it = (problem.data.train_batch(i, bs) for i in itertools.count())
+    val_it = (problem.data.val_batch(i, bs) for i in itertools.count())
+
+    t0 = time.time()
+    state, history = trainer.run(
+        state, train_it, val_it, steps_per_outer=d['steps_per_outer'],
+        n_outer=n_outer, log_every=log_every, jit=jit,
+        sketch_refresh_every=sketch_refresh_every)
+    seconds = time.time() - t0
+
+    refresh = (sketch_refresh_every if sketch_refresh_every is not None
+               else (config.sketch_refresh_every
+                     if isinstance(config, HypergradConfig) else 1))
+    hvps = accounted_hvps(solver, problem, n_outer, refresh_every=refresh,
+                          reset_inner=d['reset_inner'])
+    metrics = {name: float(fn(state.params, state.hparams))
+               for name, fn in problem.metrics.items()}
+    return BilevelResult(problem=problem.name, params=state.params,
+                         hparams=state.hparams, history=history,
+                         metrics=metrics, hvp_count=hvps, seconds=seconds,
+                         state=state)
+
+
+def _solve_meta(problem: BilevelProblem, solver, d: dict, *, n_outer: int,
+                vmap_tasks: int, shared_sketch: bool, outer_opt, seed: int,
+                log_every: int, jit: bool) -> BilevelResult:
+    """The ``vmap_tasks=`` meta-batch drive mode (iMAML-style problems)."""
+    adapt = sgd_solver(problem.inner_loss, d['steps_per_outer'],
+                       d['inner_lr'])
+    solution = implicit_root(adapt, problem.inner_loss, solver)
+    shared = shared_sketch and getattr(type(solver), 'amortizable', False)
+    if shared_sketch and not shared:
+        raise TypeError(
+            f'shared_sketch needs an amortizable solver; '
+            f'{type(solver).__name__} prepares a trace-local state that '
+            'cannot be broadcast across the meta-batch')
+    if outer_opt is None:
+        outer_opt = (adam(d['outer_lr']) if d['outer_opt'] == 'adam'
+                     else momentum(d['outer_lr'], 0.9))
+
+    def meta_step(meta, ost, inner_b, outer_b, keys, step):
+        if shared:
+            # one sketch at the meta-init on the pooled support data,
+            # broadcast to every task's backward pass: k HVPs per meta-batch
+            pooled = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                                  inner_b)
+            sketch = solution.prepare_state(meta, meta, pooled, keys[0])
+
+            def task_vg(ib, ob):
+                def obj(m):
+                    return problem.outer_loss(
+                        solution(m, ib, state=sketch), m, ob)
+                return jax.value_and_grad(obj)(meta)
+
+            losses, hg = jax.vmap(task_vg)(inner_b, outer_b)
+        else:
+            def task_vg(ib, ob, key):
+                def obj(m):
+                    return problem.outer_loss(
+                        solution(m, ib, rng=key), m, ob)
+                return jax.value_and_grad(obj)(meta)
+
+            losses, hg = jax.vmap(task_vg)(inner_b, outer_b, keys)
+        hg = jax.tree.map(lambda x: x.mean(0), hg)
+        meta, ost = outer_opt.apply(hg, ost, meta, step)
+        return meta, ost, losses.mean()
+
+    step_fn = jax.jit(meta_step) if jit else meta_step
+    rng = jax.random.PRNGKey(seed)
+    meta = problem.init_hparams(rng)
+    ost = outer_opt.init(meta)
+    history: dict[str, list[float]] = {'outer_loss': [], 'inner_loss': []}
+    pending = []
+    t0 = time.time()
+    for s in range(n_outer):
+        inner_b, outer_b = problem.data.task_batch(s, vmap_tasks)
+        keys = jax.random.split(jax.random.fold_in(rng, s), vmap_tasks)
+        meta, ost, loss = step_fn(meta, ost, inner_b, outer_b, keys,
+                                  jnp.int32(s))
+        pending.append(loss)
+        if log_every and (s + 1) % log_every == 0:
+            history['outer_loss'].extend(float(x) for x in pending)
+            pending.clear()
+            print(f'[solve:{problem.name}] meta-step {s + 1}/{n_outer} '
+                  f'g={history["outer_loss"][-1]:.4f} (pre-update, '
+                  f'{vmap_tasks} tasks)')
+    history['outer_loss'].extend(float(x) for x in pending)
+    seconds = time.time() - t0
+
+    hvps = accounted_hvps(solver, problem, n_outer, vmap_tasks=vmap_tasks,
+                          shared_sketch=shared)
+    metrics = {name: float(fn(None, meta))
+               for name, fn in problem.metrics.items()}
+    return BilevelResult(problem=problem.name, params=None, hparams=meta,
+                         history=history, metrics=metrics, hvp_count=hvps,
+                         seconds=seconds)

@@ -1,7 +1,9 @@
+from repro.data.sources import ArraySource, EpisodeSource
 from repro.data.synthetic import (DistillationTask, FewShotSampler,
                                   LongTailDataset, TokenStream,
                                   make_logreg_problem)
 from repro.data.loader import ShardedLoader, Prefetcher
 
-__all__ = ['DistillationTask', 'FewShotSampler', 'LongTailDataset',
-           'TokenStream', 'make_logreg_problem', 'ShardedLoader', 'Prefetcher']
+__all__ = ['ArraySource', 'DistillationTask', 'EpisodeSource',
+           'FewShotSampler', 'LongTailDataset', 'TokenStream',
+           'make_logreg_problem', 'ShardedLoader', 'Prefetcher']

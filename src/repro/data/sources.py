@@ -1,0 +1,89 @@
+"""Batch sources: the data half of a :class:`~repro.core.problem.BilevelProblem`.
+
+A *batch source* is anything satisfying the small ``BatchSource`` protocol
+(defined structurally in ``repro.core.problem``): deterministic, step-indexed
+batch draws for the inner (train) and outer (validation) streams —
+
+    source.train_batch(step, batch_size) -> inner batch
+    source.val_batch(step, batch_size)   -> outer batch
+
+Step-indexing keeps the fault-tolerance property of ``repro.data.synthetic``:
+batch t is a pure function of (seed, t), so any host can reproduce any batch.
+
+Two concrete sources cover the paper's tasks:
+
+* :class:`ArraySource` — in-memory ``(X, y)`` splits with jax-PRNG sampling.
+  The key schedule (``PRNGKey(step)`` train / ``PRNGKey(1000 + step)`` val at
+  seed 0) reproduces the seed benchmark streams bit-for-bit, so ports of
+  fig2/tab4/tab6 onto ``solve()`` keep their original trajectories.
+* :class:`EpisodeSource` — few-shot episodes for meta-problems (iMAML). It
+  has no train/val stream; consumers go through ``task_batch`` (the
+  ``vmap_tasks=`` path of ``solve()``), which returns a meta-batch of stacked
+  (support, query) pairs with a leading task axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ArraySource:
+    """Deterministic sampling over in-memory train/val array tuples.
+
+    ``train`` / ``val`` are ``(X, y)`` pairs, exposed directly for consumers
+    that want the full splits (full-batch solves, legacy ``task['train']``
+    access) — the point of the ISSUE-5 fix: no more rebuilding task dicts
+    just to smuggle the splits in next to ``data``.
+    """
+    train: tuple[jax.Array, jax.Array]
+    val: tuple[jax.Array, jax.Array]
+    seed: int = 0
+    val_key_offset: int = 1000   # seed streams: train keys t, val keys 1000+t
+
+    def _draw(self, arrays, key: int, batch_size: int):
+        X, y = arrays
+        idx = jax.random.randint(jax.random.PRNGKey(key), (batch_size,), 0,
+                                 X.shape[0])
+        return X[idx], y[idx]
+
+    def train_batch(self, step: int, batch_size: int):
+        return self._draw(self.train, self.seed + step, batch_size)
+
+    def val_batch(self, step: int, batch_size: int):
+        return self._draw(self.val, self.seed + self.val_key_offset + step,
+                          batch_size)
+
+
+@dataclasses.dataclass
+class EpisodeSource:
+    """Meta-batches of few-shot episodes (iMAML-style meta-problems).
+
+    Wraps an episode sampler (``repro.data.synthetic.FewShotSampler``:
+    ``episode(idx) -> (sx, sy, qx, qy)``). ``task_batch`` stacks ``n_tasks``
+    consecutive episodes into ((SX, SY), (QX, QY)) with a leading task axis —
+    the inner/outer batch pair one vmapped meta-step consumes.
+    """
+    sampler: Any
+
+    def task_batch(self, step: int, n_tasks: int):
+        eps = [self.sampler.episode(step * n_tasks + j)
+               for j in range(n_tasks)]
+        sx, sy, qx, qy = (jnp.stack(z) for z in zip(*eps))
+        return (sx, sy), (qx, qy)
+
+    def _no_stream(self):
+        raise TypeError(
+            'EpisodeSource is a meta-problem source: it has no flat '
+            'train/val stream. Drive it through solve(..., vmap_tasks=N) '
+            '(which draws task_batch meta-batches) instead of the '
+            'alternating BilevelTrainer path.')
+
+    def train_batch(self, step: int, batch_size: int):
+        self._no_stream()
+
+    def val_batch(self, step: int, batch_size: int):
+        self._no_stream()

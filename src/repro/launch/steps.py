@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import NystromIHVP, PyTreeIndexer, hypergradient, make_hvp
+from repro.core import NystromIHVP, implicit_root
 from repro.distributed.sharding import (batch_axes, cache_specs, mirror_specs,
                                         named_shardings, param_specs)
 from repro.models import build_model
@@ -245,9 +245,15 @@ def build_hypergrad_step(cfg: ModelConfig, mesh, global_batch: int, seq: int,
         return train_loss(cfg, params, batch)
 
     def hypergrad_step(params, hparams, inner_batch, outer_batch, rng):
-        indexer = PyTreeIndexer(params)
-        hg = hypergradient(inner_loss, outer_loss, params, hparams,
-                           inner_batch, outer_batch, solver, rng, indexer)
+        # the already-trained params are the implicit solution; grad through
+        # the implicit_root map assembles Eq. 3 in the custom_vjp backward
+        solution = implicit_root(lambda phi, b: params, inner_loss, solver)
+
+        def outer_obj(phi):
+            theta = solution(phi, inner_batch, rng=rng)
+            return outer_loss(theta, phi, outer_batch)
+
+        hg = jax.grad(outer_obj)(hparams)
         new_h = jax.tree.map(lambda h, g: h - 1e-2 * g, hparams, hg)
         return new_h
 

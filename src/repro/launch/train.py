@@ -49,6 +49,28 @@ def build_losses(cfg):
     return inner_loss, outer_loss
 
 
+def _run_problem(args):
+    """``--problem <name>``: resolve the registry entry and drive it through
+    the typed problem API (one entry point; sketch amortization via
+    ``--sketch-refresh-every`` comes along for free)."""
+    from repro.core.problem import get_problem, solve
+    hg_cfg = config_from_cli(
+        args.solver,
+        flags={'k': args.k, 'rho': args.rho,
+               'sketch_refresh_every': args.sketch_refresh_every},
+        defaults={'k': 8, 'rho': 1e-2})
+    problem = get_problem(args.problem)
+    print(f'[train] problem={problem.name} solver={args.solver} '
+          f'n_outer={args.steps}')
+    result = solve(problem, hg_cfg, n_outer=args.steps,
+                   log_every=args.log_every)
+    metrics = ' '.join(f'{k}={v:.4f}' for k, v in result.metrics.items())
+    print(f'[train] done: problem={problem.name} '
+          f'outer_loss={result.history["outer_loss"][-1]:.4f} '
+          f'hvps={result.hvp_count} wall_s={result.seconds:.1f} {metrics}')
+    return result
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', default='yi_9b')
@@ -68,11 +90,19 @@ def main(argv=None):
                          'fresh every outer step; N>1 reuses the sketch for '
                          'N-1 steps, saving k HVPs each)')
     ap.add_argument('--solver', default='nystrom')
+    ap.add_argument('--problem', default=None,
+                    help='run a registered BilevelProblem (repro.core '
+                         'PROBLEMS registry, e.g. reweighting | distillation '
+                         '| logreg_wd) through solve() instead of the LM '
+                         'pipeline; --steps then counts OUTER steps')
     ap.add_argument('--ckpt-dir', default=None)
     ap.add_argument('--ckpt-every', type=int, default=100)
     ap.add_argument('--production-mesh', action='store_true')
     ap.add_argument('--log-every', type=int, default=10)
     args = ap.parse_args(argv)
+
+    if args.problem is not None:
+        return _run_problem(args)
 
     cfg = get_config(args.arch)
     if args.reduced:

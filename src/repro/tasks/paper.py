@@ -1,8 +1,11 @@
-"""The paper's four experiment tasks as reusable bilevel problem builders.
+"""The paper's four experiment tasks as registered :class:`BilevelProblem`s.
 
-Each builder returns a dict with inner/outer losses, init functions and data,
-consumed by both ``benchmarks/`` (paper tables) and ``examples/`` (runnable
-scripts). Models use leaky-ReLU exactly as §5 prescribes (ReLU zeroes Hessian
+Each builder returns a typed ``BilevelProblem`` (inner/outer losses, init
+functions, a ``BatchSource``, metrics, paper-protocol training defaults) —
+consumed uniformly by ``repro.core.problem.solve``, ``benchmarks/`` (paper
+tables) and ``examples/`` (runnable scripts). Old dict-style consumers keep
+working for one release through the problem's deprecated ``task['key']``
+adapter. Models use leaky-ReLU exactly as §5 prescribes (ReLU zeroes Hessian
 columns and breaks the plain Eq. 6 inverse).
 """
 from __future__ import annotations
@@ -10,8 +13,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.problem import BilevelProblem, register_problem
+from repro.data.sources import ArraySource, EpisodeSource
 from repro.data.synthetic import (DistillationTask, FewShotSampler,
                                   LongTailDataset, make_logreg_problem)
+from repro.optim import sgd
 
 ACT = lambda x: jax.nn.leaky_relu(x, 0.01)   # noqa: E731  (paper §5 setup)
 
@@ -40,8 +46,17 @@ def _xent(logits, labels):
                                          labels[:, None], 1))
 
 
+def _plain_xent_loss(params, batch):
+    """The hparam-free training loss shared by the classification tasks —
+    what a no-bilevel baseline minimizes (``problem.baseline_loss``)."""
+    X, y = batch
+    return _xent(mlp_apply(params, X), y)
+
+
 # ----------------------------------------------------------------- §5.1
-def build_logreg_weight_decay(D: int = 100, n: int = 500, seed: int = 0):
+@register_problem('logreg_wd')
+def build_logreg_weight_decay(D: int = 100, n: int = 500,
+                              seed: int = 0) -> BilevelProblem:
     """Per-parameter weight decay for logistic regression (Fig. 2/3)."""
     (Xt, yt), (Xv, yv) = make_logreg_problem(D, n, seed)
 
@@ -60,15 +75,18 @@ def build_logreg_weight_decay(D: int = 100, n: int = 500, seed: int = 0):
         return jnp.mean(jnp.maximum(logit, 0) - logit * y
                         + jnp.log1p(jnp.exp(-jnp.abs(logit))))
 
-    return dict(
-        inner=inner, outer=outer,
+    return BilevelProblem(
+        name='logreg_wd', inner_loss=inner, outer_loss=outer,
         init_params=lambda rng: {'w': jnp.zeros((D,))},
-        init_hparams=lambda: {'wd': jnp.ones((D,))},
-        train=(Xt, yt), val=(Xv, yv))
+        init_hparams=lambda rng: {'wd': jnp.ones((D,))},
+        data=ArraySource(train=(Xt, yt), val=(Xv, yv)),
+        defaults=dict(inner_lr=0.1, outer_lr=0.1, outer_opt='sgd_momentum',
+                      steps_per_outer=100, batch_size=500, reset_inner=True))
 
 
 # ----------------------------------------------------------------- §5.2
-def build_distillation(n_per_class: int = 5, seed: int = 0):
+@register_problem('distillation')
+def build_distillation(n_per_class: int = 5, seed: int = 0) -> BilevelProblem:
     """Dataset distillation (Tab. 2): φ = C synthetic images + labels fixed."""
     task = DistillationTask(seed=seed)
     C = task.n_classes * n_per_class
@@ -86,23 +104,42 @@ def build_distillation(n_per_class: int = 5, seed: int = 0):
         X, y = batch
         return _xent(mlp_apply(params, X), y)
 
-    def accuracy(params):
+    def accuracy(params, hparams):
         pred = mlp_apply(params, Xs).argmax(-1)
         return float((pred == ys).mean())
 
-    return dict(
-        inner=inner, outer=outer,
+    def distilled_accuracy(params, hparams):
+        """Tab. 2's actual score: train a *fresh* model on the distilled
+        images only, evaluate on the held-out test set."""
+        prm = mlp_init(jax.random.PRNGKey(7), sizes)
+        opt = sgd(0.01)
+        st = opt.init(prm)
+        for i in range(100):
+            g = jax.grad(inner)(prm, hparams, None)
+            prm, st = opt.apply(g, st, prm, jnp.int32(i))
+        return accuracy(prm, hparams)
+
+    return BilevelProblem(
+        name='distillation', inner_loss=inner, outer_loss=outer,
         init_params=lambda rng: mlp_init(rng, sizes),
-        init_hparams=lambda: {'images': jnp.zeros((C, s, s, 1))},
-        train=(Xt, yt), val=(Xt, yt), accuracy=accuracy,
-        distill_labels=distill_labels)
+        init_hparams=lambda rng: {'images': jnp.zeros((C, s, s, 1))},
+        data=ArraySource(train=(Xt, yt), val=(Xt, yt)),
+        metrics={'accuracy': accuracy,
+                 'distilled_accuracy': distilled_accuracy},
+        baseline_loss=_plain_xent_loss,
+        reference={'distill_labels': distill_labels, 'dataset': task},
+        defaults=dict(inner_lr=0.01, outer_lr=1e-3, steps_per_outer=100,
+                      batch_size=256, reset_inner=True))
 
 
 # ----------------------------------------------------------------- §5.3
+@register_problem('imaml')
 def build_imaml(n_way: int = 5, k_shot: int = 1, seed: int = 0,
-                reg: float = 1.0):
+                reg: float = 1.0) -> BilevelProblem:
     """iMAML (Tab. 3): inner adapts to a task with a proximal term to the
-    meta-initialization; outer moves the initialization."""
+    meta-initialization; outer moves the initialization. A meta-problem:
+    drive it through ``solve(..., vmap_tasks=N)`` (its ``EpisodeSource``
+    has no flat train/val stream)."""
     sampler = FewShotSampler(n_way=n_way, k_shot=k_shot, seed=seed)
     s = sampler.image_size
     sizes = (s * s, 64, 64, n_way)
@@ -118,14 +155,19 @@ def build_imaml(n_way: int = 5, k_shot: int = 1, seed: int = 0,
         qx, qy = batch
         return _xent(mlp_apply(params, qx), qy)
 
-    return dict(
-        inner=inner, outer=outer, sampler=sampler,
+    return BilevelProblem(
+        name='imaml', inner_loss=inner, outer_loss=outer,
         init_params=lambda rng: mlp_init(rng, sizes),
-        init_hparams=lambda rng: mlp_init(rng, sizes))
+        init_hparams=lambda rng: mlp_init(rng, sizes),
+        data=EpisodeSource(sampler),
+        reference={'sampler': sampler},
+        defaults=dict(inner_lr=0.1, outer_lr=1e-3, steps_per_outer=10))
 
 
 # ----------------------------------------------------------------- §5.4
-def build_reweighting(imbalance: int = 100, seed: int = 0, d: int = 64):
+@register_problem('reweighting')
+def build_reweighting(imbalance: int = 100, seed: int = 0,
+                      d: int = 64) -> BilevelProblem:
     """Data reweighting (Tab. 4/5/6): μ_φ maps per-example loss → weight."""
     data = LongTailDataset(imbalance_factor=imbalance, seed=seed, d=d)
     n_cls = data.n_classes
@@ -153,11 +195,17 @@ def build_reweighting(imbalance: int = 100, seed: int = 0, d: int = 64):
                 'w2': jax.random.normal(k2, (100, 1)) * 0.1,
                 'b2': jnp.zeros((1,))}
 
-    def accuracy(params):
+    def accuracy(params, hparams):
         pred = mlp_apply(params, data.Xv).argmax(-1)
         return float((pred == data.yv).mean())
 
-    return dict(
-        inner=inner, outer=outer, data=data,
+    return BilevelProblem(
+        name='reweighting', inner_loss=inner, outer_loss=outer,
         init_params=lambda rng: mlp_init(rng, sizes),
-        init_hparams=init_hparams, accuracy=accuracy)
+        init_hparams=init_hparams,
+        data=ArraySource(train=(data.X, data.y), val=(data.Xv, data.yv)),
+        metrics={'accuracy': accuracy},
+        baseline_loss=_plain_xent_loss,
+        reference={'dataset': data},
+        defaults=dict(inner_lr=0.1, inner_momentum=0.9, outer_lr=1e-3,
+                      steps_per_outer=20, batch_size=128))

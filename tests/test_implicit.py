@@ -108,18 +108,18 @@ class TestGradComposition:
         100-step SGD solve agrees with the legacy path at the same point."""
         from repro.tasks import build_logreg_weight_decay
         task = build_logreg_weight_decay(D=20, n=100)
-        inner_solver = sgd_solver(task['inner'], steps=100, lr=0.1,
+        inner_solver = sgd_solver(task.inner_loss, steps=100, lr=0.1,
                                   init=lambda phi, b: {'w': jnp.zeros((20,))})
 
         phi = {'wd': jnp.full((20,), 0.5)}
         rng = jax.random.PRNGKey(3)
         solver = NystromIHVP(k=10, rho=1e-2)
-        solve = implicit_root(inner_solver, task['inner'], solver)
-        new = jax.grad(lambda p: task['outer'](
-            solve(p, task['train'], rng=rng), p, task['val']))(phi)
-        theta_star = inner_solver(phi, task['train'])
-        legacy = hypergradient(task['inner'], task['outer'], theta_star, phi,
-                               task['train'], task['val'], solver, rng)
+        solve = implicit_root(inner_solver, task.inner_loss, solver)
+        new = jax.grad(lambda p: task.outer_loss(
+            solve(p, task.data.train, rng=rng), p, task.data.val))(phi)
+        theta_star = inner_solver(phi, task.data.train)
+        legacy = hypergradient(task.inner_loss, task.outer_loss, theta_star, phi,
+                               task.data.train, task.data.val, solver, rng)
         np.testing.assert_allclose(new['wd'], legacy['wd'], rtol=1e-5,
                                    atol=1e-6)
 
@@ -153,15 +153,15 @@ class TestVmapComposition:
         iMAML meta-batch pattern (benchmarks/tab3_imaml.py)."""
         from repro.tasks import build_imaml
         task = build_imaml()
-        sampler = task['sampler']
-        meta = task['init_params'](jax.random.PRNGKey(0))
+        sampler = task.reference['sampler']
+        meta = task.init_params(jax.random.PRNGKey(0))
         solver = NystromIHVP(k=6, rho=1e-2)
-        adapt = sgd_solver(task['inner'], steps=5, lr=0.1)  # meta is θ0
-        solve = implicit_root(adapt, task['inner'], solver)
+        adapt = sgd_solver(task.inner_loss, steps=5, lr=0.1)  # meta is θ0
+        solve = implicit_root(adapt, task.inner_loss, solver)
 
         def task_grad(sx, sy, qx, qy, key):
             def obj(m):
-                return task['outer'](solve(m, (sx, sy), rng=key), m, (qx, qy))
+                return task.outer_loss(solve(m, (sx, sy), rng=key), m, (qx, qy))
             return jax.grad(obj)(meta)
 
         eps = [sampler.episode(i) for i in range(3)]

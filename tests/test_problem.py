@@ -1,0 +1,258 @@
+"""BilevelProblem / solve() tests: registry round-trip, legacy dict-adapter
+parity, solve-vs-trainer trajectory equivalence on the quadratic task, the
+vmap_tasks meta path, and a shared-sketch tab4-style amortization smoke.
+"""
+import itertools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BilevelProblem, BilevelTrainer, HypergradConfig,
+                        PROBLEMS, accounted_hvps, get_problem, solve)
+from repro.data.sources import ArraySource, EpisodeSource
+from repro.tasks import (build_imaml, build_logreg_weight_decay,
+                         build_reweighting)
+
+
+def _quadratic_problem(P=10, Hdim=4, seed=0):
+    """Analytic quadratic bilevel task as a BilevelProblem (batch-free
+    losses over a dummy ArraySource)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    Am = jax.random.normal(k1, (P, P))
+    Am = Am @ Am.T / P + jnp.eye(P)
+    Bm = jax.random.normal(k2, (P, Hdim))
+    c = jax.random.normal(k3, (P,))
+    t = jax.random.normal(k4, (P,))
+
+    def inner(prm, hp, batch):
+        th = prm['theta']
+        return 0.5 * th @ Am @ th - th @ (Bm @ hp['phi'] + c)
+
+    def outer(prm, hp, batch):
+        return 0.5 * jnp.sum((prm['theta'] - t) ** 2)
+
+    dummy = (jnp.zeros((8, 1)), jnp.zeros((8,), jnp.int32))
+    return BilevelProblem(
+        name='quadratic', inner_loss=inner, outer_loss=outer,
+        init_params=lambda rng: {'theta': jnp.zeros((P,))},
+        init_hparams=lambda rng: {'phi': jnp.ones((Hdim,))},
+        data=ArraySource(train=dummy, val=dummy),
+        defaults=dict(inner_lr=0.05, outer_lr=0.1, steps_per_outer=3,
+                      batch_size=4))
+
+
+class TestRegistry:
+    def test_paper_tasks_registered(self):
+        assert {'logreg_wd', 'distillation', 'imaml',
+                'reweighting'} <= set(PROBLEMS)
+
+    def test_round_trip_with_kwargs(self):
+        p = get_problem('reweighting', imbalance=50, d=16)
+        assert isinstance(p, BilevelProblem)
+        assert p.name == 'reweighting'
+        assert callable(p.inner_loss) and callable(p.baseline_loss)
+        assert p.data.train[0].shape[1] == 16
+
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(ValueError, match='unknown problem'):
+            get_problem('nonexistent_task')
+
+
+class TestLegacyAdapter:
+    def test_as_legacy_dict_warns_and_matches_builder(self):
+        p = build_logreg_weight_decay(D=12, n=40)
+        with pytest.warns(DeprecationWarning, match='as_legacy_dict'):
+            d = p.as_legacy_dict()
+        assert d['inner'] is p.inner_loss
+        assert d['outer'] is p.outer_loss
+        assert d['init_params'] is p.init_params
+        # BatchSource exposes the full splits directly (the tab4/tab6 fix)
+        assert d['train'] is p.data.train and d['val'] is p.data.val
+
+    def test_getitem_warns_and_exposes_reference(self):
+        p = build_imaml()
+        with pytest.warns(DeprecationWarning, match='deprecated'):
+            assert p['sampler'] is p.reference['sampler']
+        assert 'sampler' in p and 'nope' not in p
+        with pytest.raises(KeyError):
+            with warnings.catch_warnings():
+                warnings.simplefilter('ignore')
+                p['nope']
+
+    def test_legacy_accuracy_is_single_arg(self):
+        p = build_reweighting(imbalance=50, d=16)
+        with pytest.warns(DeprecationWarning):
+            acc = p['accuracy']
+        val = acc(p.init_params(jax.random.PRNGKey(0)))
+        assert 0.0 <= val <= 1.0
+
+    def test_legacy_data_key_is_raw_dataset(self):
+        """Old dicts carried the dataset object under 'data'
+        (task['data'].X, .train_batch with its np.RandomState stream) —
+        the adapter must keep that contract, not hand out the BatchSource."""
+        p = build_reweighting(imbalance=50, d=16)
+        with pytest.warns(DeprecationWarning):
+            data = p['data']
+        assert data is p.reference['dataset']
+        assert hasattr(data, 'X') and hasattr(data, 'Xv')
+
+    def test_from_legacy_dict_normalizes_zero_arg_hparams(self):
+        legacy = {
+            'inner': lambda prm, hp, b: jnp.sum(prm['w'] ** 2),
+            'outer': lambda prm, hp, b: jnp.sum(prm['w']),
+            'init_params': lambda rng: {'w': jnp.zeros((3,))},
+            'init_hparams': lambda: {'h': jnp.ones((2,))},
+            'train': (jnp.zeros((4, 3)), jnp.zeros((4,), jnp.int32)),
+            'val': (jnp.zeros((4, 3)), jnp.zeros((4,), jnp.int32)),
+        }
+        p = BilevelProblem.from_legacy_dict(legacy)
+        hp = p.init_hparams(jax.random.PRNGKey(0))
+        np.testing.assert_allclose(hp['h'], 1.0)
+        assert p.data.train is legacy['train']
+
+
+class TestSolveTrainerEquivalence:
+    @pytest.mark.parametrize('solver_name', ['nystrom', 'cg'])
+    def test_solve_matches_manual_trainer_run(self, solver_name):
+        """solve() is exactly the from_problem trainer driven over the
+        problem's batch streams — same seeds ⇒ identical trajectory."""
+        problem = _quadratic_problem()
+        cfg = HypergradConfig(solver=solver_name, k=8, rho=1e-2)
+        res = solve(problem, cfg, n_outer=4, seed=0)
+
+        trainer = BilevelTrainer.from_problem(problem, cfg)
+        rng = jax.random.PRNGKey(0)
+        state = trainer.init(rng, problem.init_params(rng),
+                             problem.init_hparams(rng))
+        train_it = (problem.data.train_batch(i, 4) for i in itertools.count())
+        val_it = (problem.data.val_batch(i, 4) for i in itertools.count())
+        state, hist = trainer.run(state, train_it, val_it,
+                                  steps_per_outer=3, n_outer=4)
+        np.testing.assert_allclose(res.hparams['phi'], state.hparams['phi'],
+                                   rtol=0, atol=0)
+        assert res.history['outer_loss'] == hist['outer_loss']
+        assert res.metrics == {}
+
+    def test_defaults_and_overrides_resolve(self):
+        problem = _quadratic_problem()
+        res = solve(problem, HypergradConfig(solver='exact', rho=1e-2),
+                    n_outer=2, steps_per_outer=1, batch_size=2)
+        assert len(res.history['outer_loss']) == 2
+        assert len(res.history['inner_loss']) == 2   # 1 inner step × 2 outer
+        # exact solver: one dense factor build per outer step, p HVPs each
+        assert res.hvp_count == 2 * 10
+
+
+class TestHvpAccounting:
+    def test_amortized_cadence_reduces_hvps(self):
+        problem = _quadratic_problem()
+        cfg = HypergradConfig(solver='nystrom', k=6, rho=1e-2)
+        solver = cfg.build()
+        assert accounted_hvps(solver, problem, 8) == 8 * 6
+        assert accounted_hvps(solver, problem, 8, refresh_every=4) == 2 * 6
+        # reset_inner invalidates: one rebuild per outer step regardless
+        assert accounted_hvps(solver, problem, 8, refresh_every=4,
+                              reset_inner=True) == 8 * 6
+
+    def test_iterative_pays_per_step(self):
+        problem = _quadratic_problem()
+        solver = HypergradConfig(solver='cg', k=5, rho=0.0).build()
+        assert accounted_hvps(solver, problem, 8) == 8 * 5
+        assert accounted_hvps(solver, problem, 8, refresh_every=4) == 8 * 5
+
+
+class TestSharedSketchSmoke:
+    def test_tab4_style_amortization(self):
+        """tab4 workload shape (reweighting, warm start): amortizing one
+        sketch over all outer steps cuts the HVP bill and provably takes
+        the reuse path (cadence 1 is bit-for-bit the fresh trajectory, so
+        any deviation at cadence N proves the stale sketch was applied)."""
+        problem = build_reweighting(imbalance=50, d=16)
+        cfg = HypergradConfig(solver='nystrom', k=4, rho=1e-2)
+        fresh = solve(problem, cfg, n_outer=4, steps_per_outer=2,
+                      batch_size=32, seed=0)
+        amort = solve(problem, cfg, n_outer=4, steps_per_outer=2,
+                      batch_size=32, seed=0, sketch_refresh_every=4)
+        assert fresh.hvp_count == 4 * 4
+        assert amort.hvp_count == 4          # one build serves all 4 steps
+        assert amort.hvp_count < fresh.hvp_count
+        # step 0 shares the build; later steps diverge (stale linearization)
+        assert fresh.history['outer_loss'][0] == amort.history['outer_loss'][0]
+        fresh_flat = np.concatenate([np.ravel(x) for x in
+                                     jax.tree.leaves(fresh.hparams)])
+        amort_flat = np.concatenate([np.ravel(x) for x in
+                                     jax.tree.leaves(amort.hparams)])
+        assert not np.array_equal(fresh_flat, amort_flat)
+        # ... but only by the staleness error, not divergence
+        np.testing.assert_allclose(fresh_flat, amort_flat, atol=0.05)
+        for m in (fresh, amort):
+            assert 0.0 <= m.metrics['accuracy'] <= 1.0
+
+
+class TestVmapTasksMetaPath:
+    def test_shared_sketch_cuts_meta_batch_hvps(self):
+        problem = build_imaml()
+        cfg = HypergradConfig(solver='nystrom', k=4, rho=1e-2)
+        shared = solve(problem, cfg, n_outer=2, steps_per_outer=3,
+                       vmap_tasks=2, shared_sketch=True, seed=0)
+        per_task = solve(problem, cfg, n_outer=2, steps_per_outer=3,
+                         vmap_tasks=2, seed=0)
+        assert shared.hvp_count == 2 * 4             # k per meta-batch
+        assert per_task.hvp_count == 2 * 2 * 4       # k per task
+        assert shared.params is None
+        for r in (shared, per_task):
+            assert len(r.history['outer_loss']) == 2
+            assert all(np.isfinite(x) for x in r.history['outer_loss'])
+        # same meta-objective: the two estimators stay closely aligned
+        a = np.concatenate([np.ravel(x) for x in
+                            jax.tree.leaves(shared.hparams)])
+        b = np.concatenate([np.ravel(x) for x in
+                            jax.tree.leaves(per_task.hparams)])
+        cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-30))
+        assert cos > 0.99
+
+    def test_meta_source_rejects_flat_stream(self):
+        problem = build_imaml()
+        with pytest.raises(TypeError, match='vmap_tasks'):
+            solve(problem, HypergradConfig(solver='nystrom', k=4),
+                  n_outer=1)
+
+    def test_vmap_tasks_needs_episode_source(self):
+        problem = _quadratic_problem()
+        with pytest.raises(TypeError, match='task_batch'):
+            solve(problem, HypergradConfig(solver='nystrom', k=4),
+                  n_outer=1, vmap_tasks=2)
+
+    def test_shared_sketch_rejects_iterative_solver(self):
+        problem = build_imaml()
+        with pytest.raises(TypeError, match='amortizable'):
+            solve(problem, HypergradConfig(solver='cg', k=4, rho=0.0),
+                  n_outer=1, vmap_tasks=2, shared_sketch=True)
+
+
+class TestRunBilevelShim:
+    def test_shim_warns_and_returns_old_triple(self):
+        from benchmarks.common import run_bilevel
+        problem = _quadratic_problem()
+        with pytest.warns(DeprecationWarning, match='run_bilevel'):
+            state, hist, secs = run_bilevel(
+                problem, 'nystrom', n_outer=2, steps_per_outer=2,
+                inner_lr=0.05, outer_lr=0.1, k=6, batch=4)
+        assert len(hist['outer_loss']) == 2
+        assert secs >= 0.0
+        assert state.hparams['phi'].shape == (4,)
+
+
+class TestEpisodeSource:
+    def test_task_batch_shapes_and_no_flat_stream(self):
+        problem = build_imaml()
+        src = problem.data
+        assert isinstance(src, EpisodeSource)
+        (sx, sy), (qx, qy) = src.task_batch(0, 3)
+        assert sx.shape[0] == 3 and qx.shape[0] == 3
+        assert sy.shape[:1] == (3,)
+        with pytest.raises(TypeError, match='meta-problem'):
+            src.train_batch(0, 8)
