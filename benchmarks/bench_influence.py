@@ -1,0 +1,68 @@
+"""Influence-service benchmark: one amortized sketch, an m-query block.
+
+The workload the block apply path was built for: train once, prepare one
+Nyström sketch, then serve a growing block of influence queries through a
+single ``apply_matrix`` call and a streamed top-k scan over the training
+set. ``applies_per_sec`` counts queries scored per second (training and
+sketch construction excluded — they amortize over every query), so the m
+sweep shows the amortization directly: Nyström's per-query cost falls with
+m while CG pays its full iteration chain per query.
+
+Rows are persisted as ``BENCH_influence.json`` (schema in
+benchmarks/common.py; validated by benchmarks/check_bench_schema.py).
+
+CLI (CI bench-smoke runs this at toy size):
+  PYTHONPATH=src python -m benchmarks.bench_influence --k 4 \
+      --train-steps 10 --m 1 4
+"""
+import time
+
+from benchmarks.common import bench_row, emit, write_bench
+from repro.core import HypergradConfig, get_problem, influence
+
+
+def run(m_values=(1, 8, 32), k: int = 16, top_k: int = 5,
+        train_steps: int = 100, d: int = 16):
+    problem = get_problem('influence', d=d)
+    rows = []
+    for solver_name in ('nystrom', 'cg'):
+        cfg = (HypergradConfig(solver='nystrom', k=k, rho=1e-2)
+               if solver_name == 'nystrom'
+               else HypergradConfig(solver='cg', k=k, rho=1e-2))
+        # train once; the query sweep reuses the converged params so the
+        # timed region is the per-query serving cost only
+        base = influence(problem, cfg, problem.reference['queries'](1),
+                         top_k=top_k, train_steps=train_steps)
+        for m in m_values:
+            queries = problem.reference['queries'](m)
+            t0 = time.time()
+            res = influence(problem, cfg, queries, params=base.params,
+                            top_k=top_k)
+            wall = time.time() - t0
+            rows.append(bench_row(
+                solver=solver_name, backend='tree', m=m,
+                applies_per_sec=m / wall, wall_seconds=wall,
+                top_k=top_k, k=k, hvps=res.hvp_count, d=d))
+            emit('bench_influence', wall * 1e6,
+                 f'solver={solver_name} m={m} k={k} top_k={top_k} '
+                 f'hvps={res.hvp_count} queries_per_s={m / wall:.1f}')
+    write_bench('influence', rows,
+                meta=dict(train_steps=train_steps, d=d))
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--m', type=int, nargs='+', default=[1, 8, 32])
+    ap.add_argument('--k', type=int, default=16)
+    ap.add_argument('--top-k', type=int, default=5)
+    ap.add_argument('--train-steps', type=int, default=100)
+    ap.add_argument('--d', type=int, default=16)
+    args = ap.parse_args(argv)
+    run(m_values=tuple(args.m), k=args.k, top_k=args.top_k,
+        train_steps=args.train_steps, d=args.d)
+
+
+if __name__ == '__main__':
+    main()

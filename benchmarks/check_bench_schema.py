@@ -1,0 +1,78 @@
+"""Validate persisted ``BENCH_*.json`` artifacts against the schema contract.
+
+CI's bench-smoke job runs the benches at toy size and then this checker over
+whatever they wrote — a perf-trajectory artifact that fails loudly the
+moment a bench drifts from the row contract in benchmarks/common.py
+(schema_version, and per-row solver/backend/m/applies_per_sec/wall_seconds).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.check_bench_schema [paths...]
+With no paths, checks every BENCH_*.json in $BENCH_OUT_DIR (default: the
+repo root) and fails if there are none.
+"""
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import BENCH_REQUIRED_KEYS, BENCH_SCHEMA_VERSION
+
+
+def check_file(path: str) -> list[str]:
+    """Return a list of human-readable schema violations (empty = valid)."""
+    errs = []
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get('schema_version') != BENCH_SCHEMA_VERSION:
+        errs.append(f"schema_version={doc.get('schema_version')!r} "
+                    f'(expected {BENCH_SCHEMA_VERSION})')
+    for key in ('name', 'created_unix', 'rows'):
+        if key not in doc:
+            errs.append(f'missing top-level key {key!r}')
+    rows = doc.get('rows', [])
+    if not isinstance(rows, list) or not rows:
+        errs.append('rows must be a non-empty list')
+        rows = []
+    for i, row in enumerate(rows):
+        missing = [k for k in BENCH_REQUIRED_KEYS if k not in row]
+        if missing:
+            errs.append(f'row {i} missing {missing}')
+            continue
+        if not isinstance(row['m'], int) or row['m'] < 1:
+            errs.append(f"row {i}: m={row['m']!r} must be an int >= 1")
+        for k in ('applies_per_sec', 'wall_seconds'):
+            if not isinstance(row[k], (int, float)) or row[k] < 0:
+                errs.append(f'row {i}: {k}={row[k]!r} must be a number >= 0')
+        for k in ('solver', 'backend'):
+            if not isinstance(row[k], str) or not row[k]:
+                errs.append(f'row {i}: {k}={row[k]!r} must be a non-empty '
+                            'string')
+    return errs
+
+
+def main(argv=None) -> int:
+    paths = list(argv if argv is not None else sys.argv[1:])
+    if not paths:
+        out_dir = os.environ.get('BENCH_OUT_DIR') or os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))
+        paths = sorted(glob.glob(os.path.join(out_dir, 'BENCH_*.json')))
+        if not paths:
+            print(f'check_bench_schema: no BENCH_*.json under {out_dir}')
+            return 1
+    failed = False
+    for path in paths:
+        errs = check_file(path)
+        if errs:
+            failed = True
+            print(f'FAIL {path}')
+            for e in errs:
+                print(f'  - {e}')
+        else:
+            with open(path) as f:
+                n = len(json.load(f)['rows'])
+            print(f'OK   {path} ({n} rows)')
+    return 1 if failed else 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

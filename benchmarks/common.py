@@ -1,17 +1,26 @@
-"""Shared benchmark machinery: solver configs + the legacy runner shim.
+"""Shared benchmark machinery: solver configs + persisted-result emission.
 
-The benchmark modules now drive ``repro.core.problem.solve`` directly (one
-typed entry point from task definition to solved hypergradient, HVP-count
-accounting included). ``run_bilevel`` remains as a deprecated thin shim for
-unported callers.
+The benchmark modules drive ``repro.core.problem.solve`` /
+``repro.core.problem.influence`` directly (one typed entry point from task
+definition to result, HVP-count accounting included).
+
+Results are persisted as ``BENCH_<name>.json`` next to the printed CSV:
+``bench_rows`` accumulates structured rows (solver, backend, m, applies/sec,
+wall time, ...) and ``write_bench`` flushes them with a schema stamp that
+``benchmarks/check_bench_schema.py`` validates in CI's bench-smoke job.
 """
 from __future__ import annotations
 
-import dataclasses
-import warnings
+import json
+import os
+import time
 
-from repro.core import BilevelProblem, HypergradConfig, solve
-from repro.optim import momentum, sgd
+from repro.core import HypergradConfig
+
+# BENCH_*.json schema contract (validated by benchmarks/check_bench_schema.py)
+BENCH_SCHEMA_VERSION = 1
+BENCH_REQUIRED_KEYS = ('solver', 'backend', 'm', 'applies_per_sec',
+                       'wall_seconds')
 
 
 def solver_cfg(name: str, k: int = 10, rho: float = 1e-2,
@@ -24,35 +33,42 @@ def solver_cfg(name: str, k: int = 10, rho: float = 1e-2,
     }[name]
 
 
-def run_bilevel(task, method: str, *, n_outer: int, steps_per_outer: int,
-                inner_lr: float, outer_lr: float, k: int = 10,
-                rho: float = 1e-2, alpha: float = 1e-2,
-                reset_inner: bool = False, outer_opt: str = 'adam',
-                inner_momentum: float = 0.0, batch: int = 100,
-                seed: int = 0):
-    """Deprecated shim over ``repro.core.problem.solve`` — returns the old
-    (final state, history, wall seconds) triple. ``task`` may be a
-    ``BilevelProblem`` or a legacy task dict."""
-    warnings.warn(
-        'benchmarks.common.run_bilevel is a legacy shim; call '
-        'repro.core.problem.solve(problem, config, ...) directly',
-        DeprecationWarning, stacklevel=2)
-    problem = (task if isinstance(task, BilevelProblem)
-               else BilevelProblem.from_legacy_dict(task))
-    inner = (momentum(inner_lr, inner_momentum) if inner_momentum
-             else sgd(inner_lr))
-    # outer optimizer (clipped) comes from the problem-level default
-    # construction; only the lr/kind knobs are forwarded
-    overrides = dict(problem.defaults)
-    overrides.update(outer_lr=outer_lr, outer_opt=(
-        'adam' if outer_opt == 'adam' else 'sgd_momentum'))
-    problem = dataclasses.replace(problem, defaults=overrides)
-    res = solve(problem, solver_cfg(method, k=k, rho=rho, alpha=alpha),
-                n_outer=n_outer, steps_per_outer=steps_per_outer,
-                batch_size=batch, inner_opt=inner, reset_inner=reset_inner,
-                seed=seed)
-    return res.state, res.history, res.seconds
-
-
 def emit(name: str, us_per_call: float, derived: str):
     print(f'{name},{us_per_call:.1f},{derived}')
+
+
+def bench_row(*, solver: str, backend: str, m: int, applies_per_sec: float,
+              wall_seconds: float, **extra) -> dict:
+    """One structured benchmark row (the BENCH_*.json unit).
+
+    ``solver``/``backend`` name what ran, ``m`` is the query-block width
+    (1 = the vector apply), ``applies_per_sec`` counts *queries* served per
+    second (so block-vs-loop rows are directly comparable), and
+    ``wall_seconds`` the measured wall time of the timed region. ``extra``
+    carries bench-specific fields (p, k, leaf count, ...).
+    """
+    row = dict(solver=solver, backend=backend, m=int(m),
+               applies_per_sec=float(applies_per_sec),
+               wall_seconds=float(wall_seconds))
+    row.update(extra)
+    return row
+
+
+def write_bench(name: str, rows: list[dict], out_dir: str | None = None,
+                meta: dict | None = None) -> str:
+    """Persist rows as ``BENCH_<name>.json`` (schema-stamped) and return the
+    path. ``out_dir`` defaults to $BENCH_OUT_DIR or the repo root."""
+    for row in rows:
+        missing = [k for k in BENCH_REQUIRED_KEYS if k not in row]
+        if missing:
+            raise ValueError(
+                f'bench row missing required keys {missing}: {row}')
+    out_dir = out_dir or os.environ.get('BENCH_OUT_DIR') or os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(out_dir, f'BENCH_{name}.json')
+    doc = {'schema_version': BENCH_SCHEMA_VERSION, 'name': name,
+           'created_unix': time.time(), 'meta': meta or {}, 'rows': rows}
+    with open(path, 'w') as f:
+        json.dump(doc, f, indent=2)
+    print(f'[bench] wrote {path} ({len(rows)} rows)')
+    return path

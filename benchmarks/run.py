@@ -8,9 +8,12 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract). Modules:
   tab4_reweighting      — Tab. 4
   tab5_speed_memory     — Tab. 5
   tab6_robustness       — Tab. 6 / Fig. 4
+  bench_influence       — influence-service queries/sec vs m
   roofline              — EXPERIMENTS.md §Roofline source (dry-run artifacts)
 
-FAST=1 env shrinks horizons for CI smoke.
+FAST=1 env shrinks horizons for CI smoke. The apply/influence benches also
+persist machine-readable BENCH_*.json rows (benchmarks/common.py schema;
+benchmarks/check_bench_schema.py validates them in CI).
 """
 import os
 import time
@@ -19,9 +22,10 @@ import traceback
 
 def main() -> None:
     fast = bool(int(os.environ.get('FAST', '0')))
-    from benchmarks import (fig1_inverse_quality, fig2_logreg_hpo, roofline,
-                            tab2_distillation, tab3_imaml, tab4_reweighting,
-                            tab5_speed_memory, tab6_robustness)
+    from benchmarks import (bench_influence, fig1_inverse_quality,
+                            fig2_logreg_hpo, roofline, tab2_distillation,
+                            tab3_imaml, tab4_reweighting, tab5_speed_memory,
+                            tab6_robustness)
     jobs = [
         ('fig1', fig1_inverse_quality.run, {}),
         ('fig2', fig2_logreg_hpo.run, {'n_outer': 4 if fast else 12}),
@@ -35,6 +39,10 @@ def main() -> None:
         ('tab5', tab5_speed_memory.run,
          {'sizes': (5,) if fast else (5, 10, 20)}),
         ('tab6', tab6_robustness.run, {'n_outer': 3 if fast else 15}),
+        ('influence', bench_influence.run,
+         {'m_values': (1, 4) if fast else (1, 8, 32),
+          'k': 4 if fast else 16,
+          'train_steps': 10 if fast else 100}),
         ('roofline', roofline.run, {}),
     ]
     t00 = time.time()

@@ -16,19 +16,32 @@ off-TPU runs in interpret mode (correctness reference, not a speed number —
 its compiled-TPU cost model is in benchmarks/roofline.py). Each row also
 reports the resident sketch-buffer memory (C plus the whitened factor B),
 for f32 and — on the flat family — bf16 sketch storage, so the
-docs/backends.md table cites reproducible numbers.
+docs/backends.md table cites reproducible numbers. All apply timings go
+through ``apply_matrix`` (the block path; a width-1 block statically
+dispatches to the vector apply, so m=1 rows are the old numbers).
+
+``run_block_apply`` is the headline loop-vs-block measurement: m IHVP
+queries served by m jitted vector applies in a Python loop (the
+pre-block-path idiom this bench used to hard-code) vs ONE
+``apply_matrix`` call on a ``(p, m)`` query block. ``applies_per_sec``
+counts queries served per second, so the two rows are directly comparable
+at each m — the block path re-reads the O(kp) sketch once instead of m
+times, which is where the ≥3× win at m≥32 comes from on CPU.
 
 ``run_sharded_backend_apply`` times flat_sharded vs tree on a mesh over all
 visible devices; on a 1-device host it emits a SKIPPED row with the
 XLA_FLAGS incantation instead (the host device count is fixed before jax
 initializes, so this process cannot grow a mesh itself).
+
+All apply rows are persisted as ``BENCH_tab5_apply.json`` (see
+benchmarks/common.py for the schema contract).
 """
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, solver_cfg
+from benchmarks.common import bench_row, emit, solver_cfg, write_bench
 from repro.core import (FlatBackend, FlatShardedBackend, NystromIHVP,
                         PallasBackend, PyTreeIndexer, hypergradient,
                         make_hvp, tree_random_like)
@@ -84,8 +97,13 @@ def run(sizes=(5, 10, 20), reps: int = 3):
         emit('tab5_speed_memory', per * 1e6,
              f'method=nystrom_kappa1 l_or_k={lk} wall_s={per:.4f} '
              f'sequential_hvps=0 sketch_MB={4*p_count/1e6:.1f}(peak κp)')
-    out.update(run_backend_apply())
-    out.update(run_sharded_backend_apply())
+    rows = []
+    out.update(run_block_apply(rows=rows))
+    out.update(run_backend_apply(rows=rows))
+    out.update(run_sharded_backend_apply(rows=rows))
+    write_bench('tab5_apply', rows,
+                meta=dict(device=jax.default_backend(),
+                          n_devices=jax.device_count()))
     return out
 
 
@@ -105,27 +123,92 @@ def _leafy_params(n_leaves: int, p_total: int) -> dict:
     return {f'layer{i:02d}': jnp.zeros((rows, 64)) for i in range(n_leaves)}
 
 
+def _diag_quadratic_hvp(params, idxr):
+    """HVP of a diagonal quadratic over ``params`` — sketch construction is
+    cheap, so apply-path timing is isolated (what amortization makes hot)."""
+    p_count = idxr.total
+    d = 1.0 + jnp.arange(p_count, dtype=jnp.float32) / p_count
+
+    def inner(prm, hp, batch):
+        th = jnp.concatenate([x.ravel() for x in jax.tree.leaves(prm)])
+        return 0.5 * jnp.sum(d * th * th)
+
+    return make_hvp(inner, params, None, None)
+
+
+def run_block_apply(m_values=(1, 8, 32), n_leaves=8, p_total=1 << 18, k=32,
+                    reps: int = 5, rows=None):
+    """Headline loop-vs-block row: m queries via m jitted vector applies
+    (Python loop — the old idiom) vs one ``apply_matrix`` on a (p, m) block.
+    """
+    params = _leafy_params(n_leaves, p_total)
+    idxr = PyTreeIndexer(params)
+    p_count = idxr.total
+    hvp = _diag_quadratic_hvp(params, idxr)
+    out = {}
+    for backend, be in (('tree', 'tree'), ('flat', 'flat')):
+        solver = NystromIHVP(k=k, rho=1e-2, backend=be)
+        sketch = jax.block_until_ready(
+            solver.prepare(hvp, idxr, jax.random.PRNGKey(1)))
+        apply_vec = jax.jit(solver.apply)
+        apply_blk = jax.jit(solver.apply_matrix)
+        for m in m_values:
+            cols = [tree_random_like(kk, params)
+                    for kk in jax.random.split(jax.random.PRNGKey(2), m)]
+            Vm = jax.tree.map(lambda *ls: jnp.stack(ls, axis=-1), *cols)
+
+            def loop_once():
+                return [apply_vec(sketch, c) for c in cols]
+
+            jax.block_until_ready(loop_once())           # warmup/compile
+            jax.block_until_ready(apply_blk(sketch, Vm))
+            t0 = time.time()
+            for _ in range(reps):
+                jax.block_until_ready(loop_once())
+            loop_per = (time.time() - t0) / reps
+            t0 = time.time()
+            for _ in range(reps):
+                jax.block_until_ready(apply_blk(sketch, Vm))
+            blk_per = (time.time() - t0) / reps
+            if rows is not None:
+                rows.append(bench_row(
+                    solver='nystrom', backend=backend, m=m,
+                    applies_per_sec=m / loop_per, wall_seconds=loop_per,
+                    path='loop', p=p_count, k=k, n_leaves=n_leaves))
+                rows.append(bench_row(
+                    solver='nystrom', backend=backend, m=m,
+                    applies_per_sec=m / blk_per, wall_seconds=blk_per,
+                    path='block', p=p_count, k=k, n_leaves=n_leaves))
+            out[('block_apply', backend, m)] = (loop_per, blk_per)
+            emit('tab5_block_apply', blk_per * 1e6,
+                 f'backend={backend} m={m} p={p_count} k={k} '
+                 f'loop_s={loop_per:.5f} block_s={blk_per:.5f} '
+                 f'block_speedup={loop_per / blk_per:.2f}x')
+    best = max(loop / blk for (_, _, m), (loop, blk) in out.items()
+               if m >= 32)
+    emit('tab5_block_apply', 0.0,
+         f'headline m>=32 block_vs_loop_speedup={best:.2f}x')
+    return out
+
+
 def run_backend_apply(leaf_counts=(2, 8, 32), p_total=1 << 18, k=32,
-                      reps: int = 20, include_pallas: bool = True):
+                      reps: int = 20, include_pallas: bool = True,
+                      rows=None):
     """Apply-time by contraction backend at fixed p, growing leaf count.
 
     The quadratic inner loss is diagonal so sketch construction is cheap and
     the timing isolates the apply path (two tall-skinny contractions) —
-    which is what sketch amortization makes hot in production.
+    which is what sketch amortization makes hot in production. Timed through
+    ``apply_matrix`` on a width-1 block (statically the vector apply).
     """
     out = {}
     for n_leaves in leaf_counts:
         params = _leafy_params(n_leaves, p_total)
         idxr = PyTreeIndexer(params)
         p_count = idxr.total
-        d = 1.0 + jnp.arange(p_count, dtype=jnp.float32) / p_count
-
-        def inner(prm, hp, batch):
-            th = jnp.concatenate([x.ravel() for x in jax.tree.leaves(prm)])
-            return 0.5 * jnp.sum(d * th * th)
-
-        hvp = make_hvp(inner, params, None, None)
-        v = tree_random_like(jax.random.PRNGKey(0), params)
+        hvp = _diag_quadratic_hvp(params, idxr)
+        v1 = jax.tree.map(lambda x: x[..., None],
+                          tree_random_like(jax.random.PRNGKey(0), params))
         backends = [('tree', 'tree'), ('flat', 'flat'),
                     ('flat_bf16', FlatBackend(sketch_dtype=jnp.bfloat16))]
         # off-TPU, pallas runs in interpret mode (~13 s/apply): one
@@ -138,16 +221,22 @@ def run_backend_apply(leaf_counts=(2, 8, 32), p_total=1 << 18, k=32,
             solver = NystromIHVP(k=k, rho=1e-2, backend=be)
             sketch = solver.prepare(hvp, idxr, jax.random.PRNGKey(1))
             sketch = jax.block_until_ready(sketch)
-            apply_fn = jax.jit(solver.apply)
-            jax.block_until_ready(apply_fn(sketch, v))      # warmup/compile
+            apply_fn = jax.jit(solver.apply_matrix)
+            jax.block_until_ready(apply_fn(sketch, v1))     # warmup/compile
             # interpret-mode pallas is a correctness path; don't loop on it
             n = 1 if (backend == 'pallas'
                       and jax.default_backend() != 'tpu') else reps
             t0 = time.time()
             for _ in range(n):
-                jax.block_until_ready(apply_fn(sketch, v))
+                jax.block_until_ready(apply_fn(sketch, v1))
             per = (time.time() - t0) / n
             out[('apply', backend, n_leaves)] = per
+            if rows is not None:
+                rows.append(bench_row(
+                    solver='nystrom', backend=backend, m=1,
+                    applies_per_sec=1.0 / per, wall_seconds=per,
+                    path='block', p=p_count, k=k, n_leaves=n_leaves,
+                    sketch_mb=_sketch_bytes(sketch) / 1e6))
             emit('tab5_backend_apply', per * 1e6,
                  f'backend={backend} n_leaves={n_leaves} p={p_count} k={k} '
                  f'apply_wall_s={per:.6f} '
@@ -162,7 +251,7 @@ def run_backend_apply(leaf_counts=(2, 8, 32), p_total=1 << 18, k=32,
 
 
 def run_sharded_backend_apply(n_leaves: int = 16, p_total=1 << 18, k: int = 32,
-                              reps: int = 20):
+                              reps: int = 20, rows=None):
     """flat_sharded vs tree apply-time on a mesh over every visible device.
 
     Every leaf's rows shard over the single 'model' axis except one
@@ -190,14 +279,9 @@ def run_sharded_backend_apply(n_leaves: int = 16, p_total=1 << 18, k: int = 32,
              for name in params}
     idxr = PyTreeIndexer(params)
     p_count = idxr.total
-    d = 1.0 + jnp.arange(p_count, dtype=jnp.float32) / p_count
-
-    def inner(prm, hp, batch):
-        th = jnp.concatenate([x.ravel() for x in jax.tree.leaves(prm)])
-        return 0.5 * jnp.sum(d * th * th)
-
-    hvp = make_hvp(inner, params, None, None)
-    v = tree_random_like(jax.random.PRNGKey(0), params)
+    hvp = _diag_quadratic_hvp(params, idxr)
+    v1 = jax.tree.map(lambda x: x[..., None],
+                      tree_random_like(jax.random.PRNGKey(0), params))
     cases = {
         'tree': 'tree',
         'flat_sharded': FlatShardedBackend(mesh=mesh, specs=specs),
@@ -208,13 +292,18 @@ def run_sharded_backend_apply(n_leaves: int = 16, p_total=1 << 18, k: int = 32,
         solver = NystromIHVP(k=k, rho=1e-2, backend=be)
         sketch = jax.block_until_ready(
             solver.prepare(hvp, idxr, jax.random.PRNGKey(1)))
-        apply_fn = jax.jit(solver.apply)
-        jax.block_until_ready(apply_fn(sketch, v))          # warmup/compile
+        apply_fn = jax.jit(solver.apply_matrix)
+        jax.block_until_ready(apply_fn(sketch, v1))         # warmup/compile
         t0 = time.time()
         for _ in range(reps):
-            jax.block_until_ready(apply_fn(sketch, v))
+            jax.block_until_ready(apply_fn(sketch, v1))
         per = (time.time() - t0) / reps
         out[('sharded_apply', name)] = per
+        if rows is not None:
+            rows.append(bench_row(
+                solver='nystrom', backend=name, m=1,
+                applies_per_sec=1.0 / per, wall_seconds=per, path='block',
+                p=p_count, k=k, n_leaves=n_leaves, n_dev=n_dev))
         emit('tab5_sharded_apply', per * 1e6,
              f'backend={name} n_dev={n_dev} n_leaves={n_leaves} p={p_count} '
              f'k={k} apply_wall_s={per:.6f} '

@@ -3,7 +3,10 @@
 Public API:
   BilevelProblem / solve / PROBLEMS               — typed problem API (one
                                                     entry point task → result)
-  implicit_root                                   — differentiable θ*(φ) map
+  InfluenceProblem / influence                    — per-example influence
+                                                    scores (matrix-IHVP service)
+  implicit_root / phi_vjp_block                   — differentiable θ*(φ) map
+                                                    (+ m-query cotangent block)
   NystromIHVP / CGIHVP / NeumannIHVP / ExactIHVP  — IHVP solvers
   hypergradient / unrolled_hypergradient          — Eq. 3 assembly (legacy)
   BilevelTrainer / BilevelState                   — warm-start bilevel loop
@@ -12,20 +15,22 @@ Public API:
 """
 from repro.core.backend import (BACKENDS, FlatBackend, FlatShardedBackend,
                                 PallasBackend, ShardedOperand, TreeBackend,
-                                flatten_sketch, flatten_vec, get_backend,
-                                unflatten_vec)
+                                flatten_sketch, flatten_vec, flatten_vecm,
+                                get_backend, unflatten_vec, unflatten_vecm)
 from repro.core.bilevel import BilevelState, BilevelTrainer
 from repro.core.hvp import extract_columns, make_hvp, make_hvp_fn
 from repro.core.hypergrad import (HypergradConfig, config_from_cli,
                                   hypergradient, unrolled_hypergradient)
-from repro.core.implicit import implicit_root, sgd_solver
+from repro.core.implicit import implicit_root, phi_vjp_block, sgd_solver
 from repro.core.problem import (BatchSource, BilevelProblem, BilevelResult,
-                                PROBLEMS, accounted_hvps, get_problem,
+                                InfluenceProblem, InfluenceResult, PROBLEMS,
+                                accounted_hvps, get_problem, influence,
                                 register_problem, solve)
 from repro.core.solvers import (SOLVERS, CGIHVP, DenseFactor, ExactIHVP,
                                 IterativeOperator, NeumannIHVP, NystromIHVP,
                                 NystromSketch, SketchPolicy, SketchState,
-                                SolverSpec, nystrom_inverse_dense)
+                                SolverSpec, nystrom_inverse_dense,
+                                query_width)
 from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_cast, tree_norm, tree_random_like,
                                   tree_scale, tree_size, tree_sub, tree_vdot,
@@ -34,17 +39,19 @@ from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
 __all__ = [
     'BACKENDS', 'BatchSource', 'BilevelProblem', 'BilevelResult',
     'BilevelState', 'BilevelTrainer', 'DenseFactor', 'PROBLEMS',
+    'InfluenceProblem', 'InfluenceResult', 'influence',
     'accounted_hvps', 'get_problem', 'register_problem', 'solve',
     'FlatBackend', 'FlatShardedBackend', 'HypergradConfig',
     'IterativeOperator', 'PallasBackend', 'ShardedOperand', 'SOLVERS',
     'SketchPolicy', 'SketchState', 'SolverSpec', 'TreeBackend',
     'CGIHVP', 'ExactIHVP', 'NeumannIHVP', 'NystromIHVP', 'NystromSketch',
     'PyTreeIndexer', 'extract_columns', 'flatten_sketch', 'flatten_vec',
+    'flatten_vecm', 'phi_vjp_block', 'query_width',
     'config_from_cli', 'get_backend', 'hypergradient', 'implicit_root',
     'make_hvp',
     'make_hvp_fn', 'nystrom_inverse_dense', 'sgd_solver', 'tree_add',
     'tree_axpy',
     'tree_cast', 'tree_norm', 'tree_random_like', 'tree_scale', 'tree_size',
     'tree_sub', 'tree_vdot', 'tree_zeros_like', 'unflatten_vec',
-    'unrolled_hypergradient',
+    'unflatten_vecm', 'unrolled_hypergradient',
 ]

@@ -49,6 +49,14 @@ pytree once per apply, ``unvec()`` converts the result back (identity for
 ``tree``). ``NystromIHVP`` threads a backend instance through prepare/apply;
 see ``repro.core.solvers``.
 
+Matrix-valued queries ride the same contract with an ``m`` suffix: a *query
+block* is a pytree whose every leaf carries the parameter shape plus one
+trailing (m,) axis (m stacked cotangents). ``vecm``/``unvecm`` fuse it to the
+backend's (p, m) form, ``ctm`` is CᵀV → (k, m), ``cm`` is C·W → block, and
+``combinem`` the fused Woodbury pass 2 for all m queries in one C-read.
+``flat_sharded`` finishes ``ctm`` with a single (k, m) psum — one collective
+per apply pass regardless of m (contract details: ``docs/backends.md``).
+
 Examples
 --------
 Fuse a two-leaf sketch (k=2) and run contractions under ``flat``
@@ -135,6 +143,30 @@ def unflatten_vec(u: jax.Array, like: PyTree) -> PyTree:
     return treedef.unflatten(outs)
 
 
+def flatten_vecm(V: PyTree) -> jax.Array:
+    """Query-block pytree (every leaf = param shape + trailing (m,)) →
+    (p, m) f32, rows in ``flatten_vec``'s leaf order.
+
+    A *query block* is the matrix-apply form of a parameter vector: m
+    cotangents stacked on one trailing axis, so leaf ``(27, 37)`` travels as
+    ``(27, 37, m)`` and a scalar leaf as ``(m,)``."""
+    return jnp.concatenate(
+        [x.astype(jnp.float32).reshape(-1, x.shape[-1])
+         for x in jax.tree.leaves(V)], axis=0)
+
+
+def unflatten_vecm(U: jax.Array, like: PyTree) -> PyTree:
+    """(p, m) → query-block pytree shaped/dtyped like ``like`` (a reference
+    block whose leaves already carry the trailing query axis)."""
+    leaves, treedef = jax.tree.flatten(like)
+    outs, off = [], 0
+    for l in leaves:
+        rows = l.size // l.shape[-1]
+        outs.append(U[off:off + rows].reshape(l.shape).astype(l.dtype))
+        off += rows
+    return treedef.unflatten(outs)
+
+
 # ---------------------------------------------------------------------------
 # backends
 # ---------------------------------------------------------------------------
@@ -194,6 +226,30 @@ class TreeBackend:
         """u = v/ρ + C w (the fused Woodbury pass 2)."""
         return tree_axpy(1.0, self.cv(C, w), tree_scale(v, 1.0 / rho))
 
+    # -- matrix-valued queries: trailing (m,) axis on every leaf ------------
+    def vecm(self, V: PyTree):
+        return V
+
+    def unvecm(self, U, like: PyTree) -> PyTree:
+        del like
+        return U
+
+    def ctm(self, C, V) -> jax.Array:
+        """CᵀV over an m-query block → (k, m)."""
+        parts = jax.tree.leaves(jax.tree.map(
+            lambda c, x: jnp.einsum('k...,...m->km', c.astype(jnp.float32),
+                                    x.astype(jnp.float32)), C, V))
+        return sum(parts)
+
+    def cm(self, C, W: jax.Array):
+        """C W for W (k, m) → a query-block pytree."""
+        return jax.tree.map(
+            lambda c: jnp.einsum('k...,km->...m', c.astype(jnp.float32), W), C)
+
+    def combinem(self, C, W: jax.Array, V, rho: float):
+        """U = V/ρ + C W (the fused Woodbury pass 2, m queries at once)."""
+        return tree_axpy(1.0, self.cm(C, W), tree_scale(V, 1.0 / rho))
+
 
 @dataclasses.dataclass(frozen=True)
 class FlatBackend:
@@ -251,6 +307,25 @@ class FlatBackend:
                 rho: float) -> jax.Array:
         return vf / rho + self.cv(Ckp, w)
 
+    # -- matrix-valued queries: (p, m) fused blocks -------------------------
+    def vecm(self, V: PyTree) -> jax.Array:
+        return flatten_vecm(V)
+
+    def unvecm(self, U: jax.Array, like: PyTree) -> PyTree:
+        return unflatten_vecm(U, like)
+
+    def ctm(self, Ckp: jax.Array, Vm: jax.Array) -> jax.Array:
+        return jnp.einsum('kp,pm->km', Ckp, Vm,
+                          preferred_element_type=jnp.float32)
+
+    def cm(self, Ckp: jax.Array, W: jax.Array) -> jax.Array:
+        return jnp.einsum('kp,km->pm', Ckp, W,
+                          preferred_element_type=jnp.float32)
+
+    def combinem(self, Ckp: jax.Array, W: jax.Array, Vm: jax.Array,
+                 rho: float) -> jax.Array:
+        return Vm / rho + self.cm(Ckp, W)
+
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend(FlatBackend):
@@ -305,6 +380,23 @@ class PallasBackend(FlatBackend):
         from repro.kernels import ops
         # woodbury_apply computes v/ρ − C w̃/ρ²; w̃ = −ρ² w gives v/ρ + C w.
         return ops.woodbury_apply(Cpk, -(rho * rho) * w, vf, rho,
+                                  block_p=self.block_p,
+                                  interpret=self.interpret)
+
+    # -- matrix-valued queries: the kernels take (p, m) blocks natively -----
+    def ctm(self, Cpk: jax.Array, Vm: jax.Array) -> jax.Array:
+        from repro.kernels import ops
+        return ops.woodbury_ctv(Cpk, Vm, block_p=self.block_p,
+                                interpret=self.interpret)
+
+    def cm(self, Cpk: jax.Array, W: jax.Array) -> jax.Array:
+        return jnp.einsum('pk,km->pm', Cpk, W,
+                          preferred_element_type=jnp.float32)
+
+    def combinem(self, Cpk: jax.Array, W: jax.Array, Vm: jax.Array,
+                 rho: float) -> jax.Array:
+        from repro.kernels import ops
+        return ops.woodbury_apply(Cpk, -(rho * rho) * W, Vm, rho,
                                   block_p=self.block_p,
                                   interpret=self.interpret)
 
@@ -368,10 +460,11 @@ class FlatShardedBackend:
     def _axes(self) -> tuple:
         return tuple(self.mesh.axis_names)
 
-    def _plan(self, tree, lead: int):
+    def _plan(self, tree, lead: int, trail: int = 0):
         """Per-leaf (sanitized spec, local shape/size, psum weight), in
         ``jax.tree.leaves`` order; ``lead`` leading unsharded dims (the
-        sketch's k axis) are stripped before planning."""
+        sketch's k axis) and ``trail`` trailing unsharded dims (a query
+        block's m axis) are stripped before planning."""
         from jax.sharding import PartitionSpec as P
 
         from repro.distributed.sharding import (local_shape,
@@ -384,7 +477,7 @@ class FlatShardedBackend:
             spec_leaves = jax.tree.structure(tree).flatten_up_to(self.specs)
         plan = []
         for leaf, sp in zip(leaves, spec_leaves):
-            gshape = tuple(leaf.shape)[lead:]
+            gshape = tuple(leaf.shape)[lead:len(leaf.shape) - trail]
             sp = sanitize_spec(gshape, sp, self.mesh)
             lshape = local_shape(gshape, sp, self.mesh)
             lsize = int(np.prod(lshape, dtype=np.int64)) if lshape else 1
@@ -513,6 +606,78 @@ class FlatShardedBackend:
         return self._smap(local, (self._op_spec(3), P(None),
                                   self._op_spec(2)),
                           self._op_spec(2))(C.buf, w, vf)
+
+    # -- matrix-valued queries: local (p_local, m) blocks, ONE (k, m) psum --
+    def vecm(self, V: PyTree) -> jax.Array:
+        """Query-block pytree (leaves = param shape + (m,)) → per-device
+        (1, p_local, m) fused block; the trailing m axis is never sharded."""
+        from jax.sharding import PartitionSpec as P
+        plan = self._plan(V, lead=0, trail=1)
+        leaves = jax.tree.leaves(V)
+
+        def fuse(*ls):
+            return jnp.concatenate(
+                [l.astype(jnp.float32).reshape(-1, l.shape[-1])
+                 for l in ls], axis=0)[None]
+
+        return self._smap(fuse, tuple(P(*sp, None) for sp, _, _, _ in plan),
+                          self._op_spec(3))(*leaves)
+
+    def unvecm(self, U: jax.Array, like: PyTree) -> PyTree:
+        from jax.sharding import PartitionSpec as P
+        plan = self._plan(like, lead=0, trail=1)
+        leaves, treedef = jax.tree.flatten(like)
+        dtypes = [l.dtype for l in leaves]
+
+        def split(ub):
+            u1, outs, off = ub[0], [], 0
+            for (_, lshape, lsize, _), dt in zip(plan, dtypes):
+                outs.append(u1[off:off + lsize]
+                            .reshape(lshape + (u1.shape[-1],)).astype(dt))
+                off += lsize
+            return tuple(outs)
+
+        outs = self._smap(split, (self._op_spec(3),),
+                          tuple(P(*sp, None) for sp, _, _, _ in plan))(U)
+        return treedef.unflatten(list(outs))
+
+    def ctm(self, C: ShardedOperand, Vm: jax.Array) -> jax.Array:
+        """CᵀV over an m-query block → (k, m): the local contraction covers
+        the whole block, so exactly ONE psum of (k, m) floats crosses the
+        mesh per apply pass — not m separate k-float psums."""
+        from jax.sharding import PartitionSpec as P
+        axes = self._axes()
+
+        def local(s, w, v):
+            t = jnp.einsum('kp,pm->km', s[0], v[0] * w[:, None],
+                           preferred_element_type=jnp.float32)
+            return jax.lax.psum(t, axes)
+
+        return self._smap(local, (self._op_spec(3), P(None),
+                                  self._op_spec(3)), P())(C.buf, C.w, Vm)
+
+    def cm(self, C: ShardedOperand, W: jax.Array) -> jax.Array:
+        from jax.sharding import PartitionSpec as P
+
+        def local(s, wm):
+            return jnp.einsum('kp,km->pm', s[0], wm,
+                              preferred_element_type=jnp.float32)[None]
+
+        return self._smap(local, (self._op_spec(3), P(None, None)),
+                          self._op_spec(3))(C.buf, W)
+
+    def combinem(self, C: ShardedOperand, W: jax.Array, Vm: jax.Array,
+                 rho: float) -> jax.Array:
+        from jax.sharding import PartitionSpec as P
+
+        def local(s, wm, v):
+            u = v[0] / rho + jnp.einsum('kp,km->pm', s[0], wm,
+                                        preferred_element_type=jnp.float32)
+            return u[None]
+
+        return self._smap(local, (self._op_spec(3), P(None, None),
+                                  self._op_spec(3)),
+                          self._op_spec(3))(C.buf, W, Vm)
 
     # -- structural helpers (operand- and vector-form aware) ----------------
     def slice_k(self, C: ShardedOperand, start: int,

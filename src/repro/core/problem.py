@@ -32,10 +32,13 @@ Meta-problems (iMAML) carry an episode source instead and are driven by
 optionally sharing one sketch across the meta-batch
 (``shared_sketch=True`` — k HVPs per meta-batch instead of per task).
 
-Migration: builders in ``repro.tasks`` now return ``BilevelProblem``s. Old
-dict consumers keep working for one release through the deprecated adapter —
-``problem['inner']`` / ``problem.as_legacy_dict()`` emit a
-``DeprecationWarning`` and map the old keys onto the typed fields.
+The module also hosts the influence-function service built on the
+matrix-valued apply path: an :class:`InfluenceProblem` is a *single-level*
+training problem (loss + params + data), and :func:`influence` scores every
+training example against a block of m query examples with ONE prepared
+sketch — the per-query IHVPs ride ``solver.apply_matrix`` as a (p, m) block,
+and the scores stream over the training set (running top-k, never a full
+n_train × m score matrix in memory).
 """
 from __future__ import annotations
 
@@ -43,7 +46,6 @@ import dataclasses
 import itertools
 import math
 import time
-import warnings
 from typing import Any, Callable, Protocol, runtime_checkable
 
 import jax
@@ -103,78 +105,6 @@ class BilevelProblem:
     baseline_loss: Callable[..., jax.Array] | None = None
     reference: dict[str, Any] = dataclasses.field(default_factory=dict)
     defaults: dict[str, Any] = dataclasses.field(default_factory=dict)
-
-    # ------------------------------------------------- legacy dict adapter
-    def _legacy_map(self) -> dict[str, Any]:
-        d = {'inner': self.inner_loss, 'outer': self.outer_loss,
-             'init_params': self.init_params,
-             'init_hparams': self.init_hparams,
-             # old dicts carried the raw dataset object under 'data'
-             # (task['data'].X / .train_batch with its np.RandomState
-             # stream) — keep that contract; the BatchSource is what *new*
-             # code reaches via problem.data
-             'data': self.reference.get('dataset', self.data)}
-        for key in ('train', 'val'):
-            if hasattr(self.data, key):
-                d[key] = getattr(self.data, key)
-        if 'accuracy' in self.metrics:
-            acc = self.metrics['accuracy']
-            d['accuracy'] = lambda params: acc(params, None)
-        d.update(self.reference)
-        return d
-
-    def as_legacy_dict(self) -> dict[str, Any]:
-        """The old ``repro.tasks`` dict shape, for unported call sites.
-
-        Deprecated: new code should use the typed fields (and ``solve``)
-        directly. Note ``init_hparams`` is the normalized rng-taking
-        callable even for tasks whose legacy builder took zero args.
-        """
-        warnings.warn(
-            f'as_legacy_dict() on problem {self.name!r} is deprecated; use '
-            'the typed BilevelProblem fields / solve() instead',
-            DeprecationWarning, stacklevel=2)
-        return self._legacy_map()
-
-    def __getitem__(self, key: str):
-        legacy = self._legacy_map()
-        if key not in legacy:
-            raise KeyError(key)
-        warnings.warn(
-            f'task[{key!r}] dict access on problem {self.name!r} is '
-            'deprecated; use the typed BilevelProblem fields / solve() '
-            'instead', DeprecationWarning, stacklevel=2)
-        return legacy[key]
-
-    def __contains__(self, key: str) -> bool:
-        return key in self._legacy_map()
-
-    @classmethod
-    def from_legacy_dict(cls, task: dict, name: str = 'legacy') -> \
-            'BilevelProblem':
-        """Adapt an old-style task dict (the pre-ISSUE-5 builder output)."""
-        from repro.data.sources import ArraySource
-        hp = task['init_hparams']
-        if callable(hp) and hp.__code__.co_argcount == 0:
-            init_hparams = lambda rng, _hp=hp: _hp()    # noqa: E731
-        else:
-            init_hparams = hp
-        data = task.get('data')
-        if data is None and 'train' in task:
-            data = ArraySource(train=task['train'],
-                               val=task.get('val', task['train']))
-        metrics = {}
-        if 'accuracy' in task:
-            acc = task['accuracy']
-            metrics['accuracy'] = lambda params, hparams: acc(params)
-        reference = {k: v for k, v in task.items()
-                     if k not in ('inner', 'outer', 'init_params',
-                                  'init_hparams', 'data', 'train', 'val',
-                                  'accuracy')}
-        return cls(name=name, inner_loss=task['inner'],
-                   outer_loss=task['outer'], init_params=task['init_params'],
-                   init_hparams=init_hparams, data=data, metrics=metrics,
-                   reference=reference)
 
 
 @dataclasses.dataclass
@@ -444,3 +374,176 @@ def _solve_meta(problem: BilevelProblem, solver, d: dict, *, n_outer: int,
     return BilevelResult(problem=problem.name, params=None, hparams=meta,
                          history=history, metrics=metrics, hvp_count=hvps,
                          seconds=seconds)
+
+
+# ---------------------------------------------------------------------------
+# Influence functions — the matrix-valued apply path as a service
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class InfluenceProblem:
+    """A single-level training problem posed for influence-function queries.
+
+    Unlike :class:`BilevelProblem` there is no outer loss and no hparams —
+    just ``loss(params, batch) -> scalar`` (mean over the batch's leading
+    axis), an ``init_params(rng)``, and a ``data`` source. The source must
+    expose the ordered-streaming protocol (``n_train`` /
+    ``train_slice(start, size)``, see ``repro.data.sources.ArraySource``) in
+    addition to the step-indexed ``train_batch`` used for training.
+    ``defaults`` may override ``influence``'s training hyperparameters
+    (``inner_lr``, ``batch_size``, ``train_steps``).
+    """
+    name: str
+    loss: Callable[..., jax.Array]
+    init_params: Callable[[jax.Array], PyTree]
+    data: Any = None
+    defaults: dict[str, Any] = dataclasses.field(default_factory=dict)
+    reference: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class InfluenceResult:
+    """``influence``'s output: per-query top-k training examples.
+
+    ``scores`` is (m, top_k) — s(q, i) = −∇L(q)ᵀ (H+ρI)⁻¹ ∇L(zᵢ), sorted
+    descending per query — and ``indices`` the matching (m, top_k) global
+    training-example indices. ``self_scores`` (m,) is the queries' own
+    ∇L(q)ᵀ (H+ρI)⁻¹ ∇L(q) when requested. ``hvp_count`` follows the same
+    accounting as :class:`BilevelResult` — k sketch HVPs total, amortized
+    over all m queries and the whole training sweep.
+    """
+    problem: str
+    scores: jax.Array
+    indices: jax.Array
+    self_scores: jax.Array | None
+    params: PyTree
+    hvp_count: int
+    seconds: float
+
+
+def _per_example_grads(loss, params, batch):
+    """(b,)+param-shaped gradient stack: each example re-batched to size 1 so
+    ``loss``'s mean-over-batch contract holds per example."""
+    def one(ex):
+        return jax.grad(lambda p: loss(p, jax.tree.map(
+            lambda x: x[None], ex)))(params)
+    return jax.vmap(one)(batch)
+
+
+def influence(problem: InfluenceProblem, config: HypergradConfig | Any = None,
+              queries: Any = None, source: Any = None, *,
+              params: PyTree | None = None, top_k: int = 10,
+              batch_size: int | None = None, train_steps: int | None = None,
+              self_influence: bool = False, seed: int = 0) -> InfluenceResult:
+    """Score training examples against m queries with one prepared sketch.
+
+    For each query example q (a row of ``queries``, a batch pytree with
+    leading axis m) and each training example zᵢ streamed from ``source``
+    (default ``problem.data``), computes the influence score
+
+        s(q, i) = −∇L(q)ᵀ (H + ρI)⁻¹ ∇L(zᵢ)
+
+    and returns the top-``top_k`` (score, index) pairs per query. The m
+    query IHVPs sᵩ = (H+ρI)⁻¹∇L(q) ride ``solver.apply_matrix`` as ONE
+    (p, m) block — k sketch HVPs total, then two GEMM passes — and the
+    training sweep is a streamed contraction: per ``batch_size`` slice, an
+    (m, b) score tile is folded into a running ``jax.lax.top_k`` merge, so
+    the full n_train × m score matrix never materializes.
+
+    ``params=None`` first trains the model (plain SGD, ``train_steps``
+    steps on ``problem.data.train_batch``); pass trained params to skip.
+    ``config`` is a HypergradConfig or built solver (uniform protocol).
+    """
+    from repro.core.hvp import make_hvp
+    from repro.core.tree_util import PyTreeIndexer
+    from repro.optim import sgd
+
+    if config is None:
+        config = HypergradConfig()
+    solver = (config.build() if isinstance(config, HypergradConfig)
+              else config)
+    source = problem.data if source is None else source
+    if queries is None:
+        raise ValueError('influence() needs a queries batch (leading axis m)')
+    for attr in ('n_train', 'train_slice'):
+        if not hasattr(source, attr):
+            raise TypeError(
+                f'influence() needs an ordered-streaming source exposing '
+                f'n_train/train_slice (see ArraySource); '
+                f'{type(source).__name__} lacks {attr!r}')
+    d = {**_TRAIN_DEFAULTS, **problem.defaults}
+    bs = batch_size if batch_size is not None else d['batch_size']
+    steps = (train_steps if train_steps is not None
+             else d.get('train_steps', 200))
+    rng = jax.random.PRNGKey(seed)
+
+    t0 = time.time()
+    if params is None:
+        params = problem.init_params(rng)
+        opt = sgd(d['inner_lr'])
+        ost = opt.init(params)
+
+        @jax.jit
+        def train_step(p, s, b, i):
+            g = jax.grad(problem.loss)(p, b)
+            return opt.apply(g, s, p, i)
+
+        for i in range(steps):
+            params, ost = train_step(params, ost,
+                                     problem.data.train_batch(i, bs),
+                                     jnp.int32(i))
+
+    # curvature at the trained params, over one large ordered slice
+    n = source.n_train
+    curv = source.train_slice(0, min(n, max(bs, 1024)))
+    hvp = make_hvp(lambda p, hp, b: problem.loss(p, b), params, None, curv)
+    state = solver.prepare(hvp, PyTreeIndexer(params), rng)
+
+    # m query gradients → one (p, m) block → one apply_matrix
+    G_q = _per_example_grads(problem.loss, params, queries)
+    V = jax.tree.map(lambda g: jnp.moveaxis(g, 0, -1), G_q)
+    S = solver.apply_matrix(state, V)
+    m = jax.tree.leaves(S)[0].shape[-1]
+
+    self_scores = None
+    if self_influence:
+        self_scores = sum(jax.tree.leaves(jax.tree.map(
+            lambda v, s: jnp.einsum('...m,...m->m', v.astype(jnp.float32),
+                                    s.astype(jnp.float32)), V, S)))
+
+    @jax.jit
+    def score_tile(batch):
+        """(m, b) influence tile for one ordered training slice."""
+        G = _per_example_grads(problem.loss, params, batch)
+        parts = jax.tree.leaves(jax.tree.map(
+            lambda s, g: jnp.einsum('...m,b...->mb', s.astype(jnp.float32),
+                                    g.astype(jnp.float32)), S, G))
+        return -sum(parts)
+
+    @jax.jit
+    def merge(vals, idxs, tile, base):
+        b = tile.shape[1]
+        gidx = base + jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32),
+                                       (m, b))
+        cand_v = jnp.concatenate([vals, tile], axis=1)
+        cand_i = jnp.concatenate([idxs, gidx], axis=1)
+        v, sel = jax.lax.top_k(cand_v, vals.shape[1])
+        return v, jnp.take_along_axis(cand_i, sel, axis=1)
+
+    kk = min(top_k, n)
+    vals = jnp.full((m, kk), -jnp.inf, jnp.float32)
+    idxs = jnp.full((m, kk), -1, jnp.int32)
+    for start in range(0, n, bs):
+        batch = source.train_slice(start, bs)
+        vals, idxs = merge(vals, idxs, score_tile(batch), jnp.int32(start))
+
+    if getattr(type(solver), 'amortizable', False):
+        # one state build amortized over all m queries and the whole sweep
+        hvps = getattr(solver, 'k', None)
+        if hvps is None:                        # ExactIHVP: full column scan
+            hvps = sum(int(math.prod(l.shape))
+                       for l in jax.tree.leaves(params))
+    else:
+        hvps = getattr(solver, 'iters', 0) * m  # per-query iterative solves
+    return InfluenceResult(problem=problem.name, scores=vals, indices=idxs,
+                           self_scores=self_scores, params=params,
+                           hvp_count=int(hvps), seconds=time.time() - t0)

@@ -7,7 +7,17 @@ Uniform solver protocol: every solver implements
 
     prepare(hvp, indexer, rng) -> state     # touches the model (HVPs)
     apply(state, v)            -> u         # touches only the state
+    apply_matrix(state, V)     -> U         # m queries per state pass
     solve(hvp, indexer, v, rng) == apply(prepare(hvp, indexer, rng), v)
+
+``apply_matrix`` takes a *query block*: a pytree shaped like v with one
+trailing (m,) axis on every leaf (m stacked cotangents / query gradients).
+One prepared state then serves all m queries per pass — for Nyström that
+means the tall-skinny contractions become genuine GEMMs ((k, p) × (p, m))
+instead of m separate matvecs, and under ``flat_sharded`` the cross-device
+reduction is a single (k, m) psum instead of m k-float psums. m = 1
+dispatches statically to the vector ``apply``, so a width-1 block is
+bit-identical to the vector path on every backend.
 
 ``prepare`` does all the work that can be amortized across right-hand sides
 (and, for the Nyström sketch / dense factor, across outer steps); ``apply``
@@ -89,7 +99,8 @@ _SAFE_BIG = 1e30
 
 
 def _sym_solve(M: jax.Array, t: jax.Array) -> jax.Array:
-    """Solve M w = t for symmetric (possibly indefinite) k×k M.
+    """Solve M w = t for symmetric (possibly indefinite) k×k M; t may be a
+    (k,) vector or a (k, m) block of right-hand sides.
 
     Jacobi (diagonal) preconditioning: M = H_KK + CᵀC/ρ mixes scales of H and
     H²/ρ, which costs ~3 digits in f32; symmetric diagonal scaling restores
@@ -101,8 +112,34 @@ def _sym_solve(M: jax.Array, t: jax.Array) -> jax.Array:
     Ms = M / d[:, None] / d[None, :]
     jitter = 1e-7
     k = M.shape[0]
-    w = jnp.linalg.solve(Ms + jitter * jnp.eye(k, dtype=M.dtype), t / d)
-    return w / d
+    ds = d if t.ndim == 1 else d[:, None]
+    w = jnp.linalg.solve(Ms + jitter * jnp.eye(k, dtype=M.dtype), t / ds)
+    return w / ds
+
+
+def query_width(V: PyTree) -> int:
+    """The m of a query block: the shared trailing-axis width of every leaf.
+
+    Raises ValueError when leaves disagree (the usual symptom of passing a
+    plain parameter vector where a block was expected — a block leaf is the
+    parameter shape *plus* one trailing (m,) axis, even at m = 1).
+    """
+    leaves = jax.tree.leaves(V)
+    if not leaves:
+        raise ValueError('query block has no leaves')
+    widths = {l.shape[-1] if l.ndim else None for l in leaves}
+    if len(widths) != 1 or None in widths:
+        raise ValueError(
+            'inconsistent query block: every leaf must carry the same '
+            f'trailing (m,) query axis, got widths {sorted(map(str, widths))}')
+    return leaves[0].shape[-1]
+
+
+def _matrix_via_vector(apply_fn, V: PyTree) -> PyTree:
+    """m = 1 static dispatch: strip the query axis, run the vector apply,
+    restore the axis — bit-identical to the vector path by construction."""
+    u = apply_fn(jax.tree.map(lambda x: x[..., 0], V))
+    return jax.tree.map(lambda x: x[..., None], u)
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +285,20 @@ class NystromIHVP:
             return _apply_whitened(be, sketch, v, self.rho, self.refine)
         return _apply_woodbury_direct(be, sketch, v, self.rho)
 
+    def apply_matrix(self, sketch: NystromSketch, V: PyTree) -> PyTree:
+        """m IHVPs per sketch pass: every contraction of the vector apply
+        widens to a (·, m) GEMM (same dispatch precedence — chunked >
+        whitened > direct), so m queries cost one set of C-reads, not m."""
+        if query_width(V) == 1:
+            return _matrix_via_vector(lambda v: self.apply(sketch, v), V)
+        be = self._be()
+        if self.kappa is not None and self.kappa < self.k:
+            return _apply_woodbury_chunked_m(be, sketch, V, self.kappa,
+                                             self.rho, self.refine)
+        if self.stabilized and sketch.B is not None:
+            return _apply_whitened_m(be, sketch, V, self.rho, self.refine)
+        return _apply_woodbury_direct_m(be, sketch, V, self.rho)
+
     def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
               rng: jax.Array) -> PyTree:
         return self.apply(self.prepare(hvp, indexer, rng), v)
@@ -301,6 +352,29 @@ def _apply_whitened(be, s: NystromSketch, v: PyTree, rho: float,
     return be.unvec(u, v)
 
 
+def _apply_whitened_m(be, s: NystromSketch, V: PyTree, rho: float,
+                      refine: int = 1) -> PyTree:
+    """The whitened apply over an m-query block: identical algebra with every
+    k-vector widened to (k, m) and every p-vector to the backend's (p, m)
+    block form — one C-read per pass for all m queries, and under
+    flat_sharded exactly one (k, m) psum per ``ctm``."""
+    Vm = be.vecm(V)
+    k = s.gram_B.shape[0]
+    M = s.gram_B + rho * jnp.eye(k, dtype=s.gram_B.dtype)
+
+    def woodbury(X):
+        T = be.ctm(s.B, X)                     # (k, m)  [ONE psum]
+        W = -jnp.linalg.solve(M, T) / rho      # tiny replicated math
+        return be.combinem(s.B, W, X, rho)
+
+    U = woodbury(Vm)
+    for _ in range(refine):
+        h_u = be.cm(s.B, be.ctm(s.B, U))       # H_k U
+        r = be.sub(be.sub(Vm, be.scale(U, rho)), h_u)
+        U = be.add(U, woodbury(r))
+    return be.unvecm(U, V)
+
+
 def _apply_woodbury_direct(be, s: NystromSketch, v: PyTree,
                            rho: float) -> PyTree:
     """Eq. 6:  u = v/ρ − C (H_KK + CᵀC/ρ)⁻¹ (Cᵀv) / ρ²."""
@@ -314,6 +388,18 @@ def _apply_woodbury_direct(be, s: NystromSketch, v: PyTree,
     return be.unvec(be.combine(s.C, -w / (rho * rho), vf, rho), v)
 
 
+def _apply_woodbury_direct_m(be, s: NystromSketch, V: PyTree,
+                             rho: float) -> PyTree:
+    """Eq. 6 over an m-query block: the k×k system is solved once against m
+    right-hand sides (multi-RHS ``_sym_solve``)."""
+    Vm = be.vecm(V)
+    T = be.ctm(s.C, Vm)                    # (k, m)  [ONE psum]
+    gram_C = s.gram_C if s.gram_C is not None else be.gram(s.C)
+    M = s.H_KK + gram_C / rho
+    W = _sym_solve(M, T)
+    return be.unvecm(be.combinem(s.C, -W / (rho * rho), Vm, rho), V)
+
+
 def _eig_factors(be, s: NystromSketch):
     """L = C·U and deactivated-eigenvalue diagonal for Alg. 1 paths."""
     lam, U = jnp.linalg.eigh(s.H_KK)
@@ -322,20 +408,16 @@ def _eig_factors(be, s: NystromSketch):
     return be.mul_right(s.C, U), lam_safe
 
 
-def _apply_woodbury_chunked(be, s: NystromSketch, v: PyTree, kappa: int,
-                            rho: float, refine: int = 0) -> PyTree:
-    """Alg. 1: recursive rank-κ Woodbury updates, applied in operator form.
+def _chunk_factors(be, s: NystromSketch, kappa: int, rho: float):
+    """Alg. 1 factor construction, shared by the vector and block appliers.
 
     State after chunk m: Ĥ_m x = x/ρ − Σ_{j≤m} G_j R_j (G_jᵀ x), held as the
     factor list {(G_j, R_j)}. Per chunk: apply Ĥ_m to the κ new columns
     (one block of backend contractions — no vmap), solve a κ×κ system,
-    append a factor. Bit-equivalent to Eq. 6 for every κ.
-
-    ``refine`` residual sweeps correct u against H_k + ρI exactly as on the
-    whitened path, with H_k u = L diag(λ_safe⁻¹) (Lᵀ u) — deactivated
-    eigenvalues were sent to _SAFE_BIG, so their reciprocal contribution
-    vanishes, matching the truncated-pseudo-inverse semantics.
-    """
+    append a factor. Bit-equivalent to Eq. 6 for every κ. Returns
+    (L, λ_safe, factors) — L = C·U with deactivated eigenvalues sent to
+    _SAFE_BIG so their reciprocal contribution vanishes
+    (truncated-pseudo-inverse semantics)."""
     k = s.indices['leaf'].shape[0]
     L, lam = _eig_factors(be, s)
     factors: list[tuple[Any, jax.Array]] = []
@@ -357,6 +439,20 @@ def _apply_woodbury_chunked(be, s: NystromSketch, v: PyTree, kappa: int,
         jitter = 1e-8 * (jnp.trace(jnp.abs(S)) / width + 1.0)
         R = jnp.linalg.inv(S + jitter * jnp.eye(width, dtype=S.dtype))
         factors.append((HmL, 0.5 * (R + R.T)))
+    return L, lam, factors
+
+
+def _apply_woodbury_chunked(be, s: NystromSketch, v: PyTree, kappa: int,
+                            rho: float, refine: int = 0) -> PyTree:
+    """Alg. 1: recursive rank-κ Woodbury updates, applied in operator form
+    (factor construction: :func:`_chunk_factors`).
+
+    ``refine`` residual sweeps correct u against H_k + ρI exactly as on the
+    whitened path, with H_k u = L diag(λ_safe⁻¹) (Lᵀ u) — deactivated
+    eigenvalues were sent to _SAFE_BIG, so their reciprocal contribution
+    vanishes, matching the truncated-pseudo-inverse semantics.
+    """
+    L, lam, factors = _chunk_factors(be, s, kappa, rho)
 
     def apply_factors(x):
         out = be.scale(x, 1.0 / rho)
@@ -371,6 +467,28 @@ def _apply_woodbury_chunked(be, s: NystromSketch, v: PyTree, kappa: int,
         r = be.sub(be.sub(vf, be.scale(u, rho)), h_u)
         u = be.add(u, apply_factors(r))
     return be.unvec(u, v)
+
+
+def _apply_woodbury_chunked_m(be, s: NystromSketch, V: PyTree, kappa: int,
+                              rho: float, refine: int = 0) -> PyTree:
+    """Alg. 1 over an m-query block: the factor list is built once (it is
+    query-independent — the expensive part of the chunked apply) and each
+    factor's rank-κ correction hits all m queries as one GEMM pair."""
+    L, lam, factors = _chunk_factors(be, s, kappa, rho)
+
+    def apply_factors(X):
+        out = be.scale(X, 1.0 / rho)
+        for G, R in factors:
+            out = be.sub(out, be.cm(G, R @ be.ctm(G, X)))
+        return out
+
+    Vm = be.vecm(V)
+    U = apply_factors(Vm)
+    for _ in range(refine):
+        h_u = be.cm(L, be.ctm(L, U) / lam[:, None])   # H_k U, truncated λ†
+        r = be.sub(be.sub(Vm, be.scale(U, rho)), h_u)
+        U = be.add(U, apply_factors(r))
+    return be.unvecm(U, V)
 
 
 def nystrom_inverse_dense(H: jax.Array, k: int, rho: float,
@@ -455,6 +573,16 @@ class CGIHVP:
         x, _, _, _ = jax.lax.fori_loop(0, self.iters, body, (x, r, p, rs))
         return x
 
+    def apply_matrix(self, state: IterativeOperator, V: PyTree) -> PyTree:
+        """vmap over the trailing query axis: CG's recurrence couples the
+        scalars (α, β) to each right-hand side, so the m solves stay
+        independent — but the HVPs inside batch across queries under vmap
+        (one batched fwd+bwd per iteration instead of m)."""
+        if query_width(V) == 1:
+            return _matrix_via_vector(lambda v: self.apply(state, v), V)
+        return jax.vmap(lambda v: self.apply(state, v),
+                        in_axes=-1, out_axes=-1)(V)
+
     def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
               rng: jax.Array | None = None) -> PyTree:
         return self.apply(self.prepare(hvp, indexer, rng), v)
@@ -485,6 +613,14 @@ class NeumannIHVP:
 
         p, acc = jax.lax.fori_loop(0, self.iters, body, (v, v))
         return tree_scale(acc, self.alpha)
+
+    def apply_matrix(self, state: IterativeOperator, V: PyTree) -> PyTree:
+        """vmap over the trailing query axis (the series recursion is
+        per-query, but the inner HVPs batch under vmap)."""
+        if query_width(V) == 1:
+            return _matrix_via_vector(lambda v: self.apply(state, v), V)
+        return jax.vmap(lambda v: self.apply(state, v),
+                        in_axes=-1, out_axes=-1)(V)
 
     def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
               rng: jax.Array | None = None) -> PyTree:
@@ -519,6 +655,16 @@ class ExactIHVP:
                         .astype(leaf.dtype))
             off += leaf.size
         return treedef.unflatten(outs)
+
+    def apply_matrix(self, state: DenseFactor, V: PyTree) -> PyTree:
+        """One factorization against m right-hand sides (multi-RHS solve)."""
+        if query_width(V) == 1:
+            return _matrix_via_vector(lambda v: self.apply(state, v), V)
+        from repro.core.backend import flatten_vecm, unflatten_vecm
+        Vm = flatten_vecm(V)                            # (p, m)
+        p = state.H.shape[0]
+        Um = jnp.linalg.solve(state.H + self.rho * jnp.eye(p), Vm)
+        return unflatten_vecm(Um, V)
 
     def solve(self, hvp: HVP, indexer: PyTreeIndexer, v: PyTree,
               rng: jax.Array | None = None) -> PyTree:

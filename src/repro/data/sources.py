@@ -35,9 +35,14 @@ class ArraySource:
     """Deterministic sampling over in-memory train/val array tuples.
 
     ``train`` / ``val`` are ``(X, y)`` pairs, exposed directly for consumers
-    that want the full splits (full-batch solves, legacy ``task['train']``
-    access) — the point of the ISSUE-5 fix: no more rebuilding task dicts
-    just to smuggle the splits in next to ``data``.
+    that want the full splits (full-batch solves).
+
+    Beyond the step-indexed random streams, the source exposes the
+    *ordered-streaming* protocol (``n_train`` / ``train_slice``) that
+    :func:`repro.core.problem.influence` sweeps: contiguous, deterministic,
+    index-aligned slices of the training split — ``train_slice(start, size)``
+    is examples ``[start, min(start + size, n_train))`` in storage order, so
+    a returned score index always names the same example.
     """
     train: tuple[jax.Array, jax.Array]
     val: tuple[jax.Array, jax.Array]
@@ -56,6 +61,20 @@ class ArraySource:
     def val_batch(self, step: int, batch_size: int):
         return self._draw(self.val, self.seed + self.val_key_offset + step,
                           batch_size)
+
+    # -- ordered streaming (influence sweeps) -------------------------------
+    @property
+    def n_train(self) -> int:
+        return int(self.train[0].shape[0])
+
+    def train_slice(self, start: int, size: int):
+        """Examples [start, min(start+size, n_train)) in storage order."""
+        X, y = self.train
+        stop = min(start + size, X.shape[0])
+        if not 0 <= start < X.shape[0]:
+            raise IndexError(f'train_slice start {start} outside '
+                             f'[0, {X.shape[0]})')
+        return X[start:stop], y[start:stop]
 
 
 @dataclasses.dataclass

@@ -13,6 +13,10 @@ local p-shard per device) and k ≤ 128. TPU mapping:
     optimum for this shape).
 
 f32 accumulation regardless of input dtype (bf16 C is the production case).
+
+``nystrom_cross`` is the same kernel with a second operand: AᵀB for a
+(p, m) query block B — the batched Cᵀ·[v₁…v_m] pass of the matrix-valued
+IHVP apply, one C-read for m queries.
 """
 from __future__ import annotations
 
@@ -36,6 +40,20 @@ def _gram_kernel(c_ref, out_ref):
         preferred_element_type=jnp.float32)
 
 
+def _cross_kernel(a_ref, b_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...].astype(jnp.float32)              # (block_p, k_pad)
+    b = b_ref[...].astype(jnp.float32)              # (block_p, m_pad)
+    out_ref[...] += jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())),             # contract over block_p
+        preferred_element_type=jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=('block_p', 'interpret'))
 def nystrom_gram(C: jax.Array, *, block_p: int = 1024,
                  interpret: bool = False) -> jax.Array:
@@ -55,3 +73,37 @@ def nystrom_gram(C: jax.Array, *, block_p: int = 1024,
         interpret=interpret,
     )(C)
     return out[:k, :k]
+
+
+@functools.partial(jax.jit, static_argnames=('block_p', 'interpret'))
+def nystrom_cross(A: jax.Array, B: jax.Array, *, block_p: int = 1024,
+                  interpret: bool = False) -> jax.Array:
+    """AᵀB for tall-skinny A (p, k) against a query block B (p, m) → (k, m).
+
+    The gram kernel generalized to a second operand: the same p-blocked grid
+    streams both slabs HBM→VMEM and accumulates one (k_pad, m_pad) MXU tile
+    (constant index_map, one HBM write). With B = A this is CᵀC; with B a
+    (p, m) query block it is the batched Cᵀv of the matrix-valued IHVP apply
+    — m query vectors per C-read instead of one. f32 accumulation regardless
+    of input dtypes.
+    """
+    p, k = A.shape
+    pb, m = B.shape
+    assert p == pb, f'row mismatch: A has p={p}, B has p={pb}'
+    k_pad = max(128, ((k + 127) // 128) * 128)
+    m_pad = max(128, ((m + 127) // 128) * 128)
+    p_pad = ((p + block_p - 1) // block_p) * block_p
+    if (p_pad, k_pad) != (p, k):
+        A = jnp.pad(A, ((0, p_pad - p), (0, k_pad - k)))
+    if (p_pad, m_pad) != (p, m):
+        B = jnp.pad(B, ((0, p_pad - p), (0, m_pad - m)))
+    out = pl.pallas_call(
+        _cross_kernel,
+        grid=(p_pad // block_p,),
+        in_specs=[pl.BlockSpec((block_p, k_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((block_p, m_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((k_pad, m_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, m_pad), jnp.float32),
+        interpret=interpret,
+    )(A, B)
+    return out[:k, :m]

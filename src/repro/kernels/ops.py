@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.nystrom_gram import nystrom_cross as _cross
 from repro.kernels.nystrom_gram import nystrom_gram as _gram
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.woodbury import woodbury_apply as _wapply
@@ -28,13 +29,22 @@ def nystrom_gram(C, *, block_p: int = 1024, interpret: bool | None = None):
                  interpret=_default_interpret() if interpret is None else interpret)
 
 
+def nystrom_cross(A, B, *, block_p: int = 1024, interpret: bool | None = None):
+    """AᵀB for A (p, k), B (p, m) → (k, m): the gram kernel's two-operand
+    form (batched Cᵀv over an m-query block, one C-read)."""
+    return _cross(A, B, block_p=block_p,
+                  interpret=_default_interpret() if interpret is None else interpret)
+
+
 def woodbury_ctv(C, v, *, block_p: int = 1024, interpret: bool | None = None):
+    """Cᵀv. v may be (p,) → (k,) or a (p, m) query block → (k, m)."""
     return _wctv(C, v, block_p=block_p,
                  interpret=_default_interpret() if interpret is None else interpret)
 
 
 def woodbury_apply(C, w, v, rho: float, *, block_p: int = 1024,
                    interpret: bool | None = None):
+    """v/ρ − Cw/ρ². Vector (w (k,), v (p,)) or block (w (k, m), v (p, m))."""
     return _wapply(C, w, v, rho, block_p=block_p,
                    interpret=_default_interpret() if interpret is None else interpret)
 

@@ -11,14 +11,20 @@ def nystrom_gram(C: jax.Array) -> jax.Array:
     return Cf.T @ Cf
 
 
+def nystrom_cross(A: jax.Array, B: jax.Array) -> jax.Array:
+    """AᵀB : (p, k), (p, m) → (k, m), f32 accumulation."""
+    return A.astype(jnp.float32).T @ B.astype(jnp.float32)
+
+
 def woodbury_ctv(C: jax.Array, v: jax.Array) -> jax.Array:
-    """t = Cᵀ v : (p, k), (p,) → (k,)."""
+    """t = Cᵀ v : (p, k), (p,) → (k,) — or (p, m) → (k, m) for a block."""
     return C.astype(jnp.float32).T @ v.astype(jnp.float32)
 
 
 def woodbury_apply(C: jax.Array, w: jax.Array, v: jax.Array,
                    rho: float) -> jax.Array:
-    """u = v/ρ − C w / ρ² : the p-dimensional Woodbury correction apply."""
+    """u = v/ρ − C w / ρ² : the p-dimensional Woodbury correction apply
+    (vector w (k,), v (p,) — or block w (k, m), v (p, m))."""
     vf = v.astype(jnp.float32)
     corr = C.astype(jnp.float32) @ w.astype(jnp.float32)
     return vf / rho - corr / (rho * rho)

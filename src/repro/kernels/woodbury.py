@@ -10,6 +10,12 @@ compare l sequential HVPs (l full fwd+bwd passes) for CG/Neumann.
 
 The k-vectors are carried as (1, k_pad) 2-D tiles (TPU VREG lanes want the
 trailing dim = 128-multiple; rank-1 arrays don't map to the vector unit).
+
+Matrix-valued queries: both entry points also take a (p, m) query block
+(``v.ndim == 2``), turning each pass into a genuine GEMM — pass 1 routes to
+``nystrom_cross`` (the gram kernel's two-operand form), pass 2 to a block
+kernel tiling (block_p, m_pad) output slabs. m = 1 (a 1-D ``v``) takes the
+original vector kernels untouched, so existing callers see identical bits.
 """
 from __future__ import annotations
 
@@ -37,6 +43,11 @@ def _ctv_kernel(c_ref, v_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=('block_p', 'interpret'))
 def woodbury_ctv(C: jax.Array, v: jax.Array, *, block_p: int = 1024,
                  interpret: bool = False) -> jax.Array:
+    """t = Cᵀv. v (p,) → (k,) via the vector kernel; v (p, m) → (k, m) via
+    the two-operand gram kernel (one C-read for the whole query block)."""
+    if v.ndim == 2:
+        from repro.kernels.nystrom_gram import nystrom_cross
+        return nystrom_cross(C, v, block_p=block_p, interpret=interpret)
     p, k = C.shape
     k_pad = max(128, ((k + 127) // 128) * 128)
     p_pad = ((p + block_p - 1) // block_p) * block_p
@@ -72,10 +83,34 @@ def _make_apply_kernel(rho: float):
     return kernel
 
 
+def _make_apply_block_kernel(rho: float):
+    inv_rho = 1.0 / rho
+    inv_rho2 = 1.0 / (rho * rho)
+
+    def kernel(c_ref, v_ref, w_ref, out_ref):
+        c = c_ref[...].astype(jnp.float32)          # (block_p, k_pad)
+        v = v_ref[...].astype(jnp.float32)          # (block_p, m_pad)
+        w = w_ref[...].astype(jnp.float32)          # (k_pad, m_pad)
+        corr = jax.lax.dot_general(
+            c, w, (((1,), (0,)), ((), ())),         # (bp,k) @ (k,m) → (bp,m)
+            preferred_element_type=jnp.float32)
+        out_ref[...] = v * inv_rho - corr * inv_rho2
+
+    return kernel
+
+
 @functools.partial(jax.jit, static_argnames=('rho', 'block_p', 'interpret'))
 def woodbury_apply(C: jax.Array, w: jax.Array, v: jax.Array, rho: float, *,
                    block_p: int = 1024, interpret: bool = False) -> jax.Array:
-    """u = v/ρ − C w / ρ² : (p,). ρ is a compile-time constant (hyperparam)."""
+    """u = v/ρ − C w / ρ². ρ is a compile-time constant (hyperparam).
+
+    Vector form: w (k,), v (p,) → (p,). Block form (``v.ndim == 2``):
+    w (k, m), v (p, m) → (p, m) — the correction becomes one
+    (block_p, k) @ (k, m) MXU matmul per grid step, still one C-read total.
+    """
+    if v.ndim == 2:
+        return _woodbury_apply_block(C, w, v, rho, block_p=block_p,
+                                     interpret=interpret)
     p, k = C.shape
     k_pad = max(128, ((k + 127) // 128) * 128)
     p_pad = ((p + block_p - 1) // block_p) * block_p
@@ -96,3 +131,30 @@ def woodbury_apply(C: jax.Array, w: jax.Array, v: jax.Array, rho: float, *,
         interpret=interpret,
     )(C, v[None, :], w[None, :])
     return out[0, :p]
+
+
+def _woodbury_apply_block(C: jax.Array, w: jax.Array, v: jax.Array,
+                          rho: float, *, block_p: int,
+                          interpret: bool) -> jax.Array:
+    p, k = C.shape
+    m = v.shape[1]
+    k_pad = max(128, ((k + 127) // 128) * 128)
+    m_pad = max(128, ((m + 127) // 128) * 128)
+    p_pad = ((p + block_p - 1) // block_p) * block_p
+    if (p_pad, k_pad) != (p, k):
+        C = jnp.pad(C, ((0, p_pad - p), (0, k_pad - k)))
+    if (p_pad, m_pad) != v.shape:
+        v = jnp.pad(v, ((0, p_pad - p), (0, m_pad - m)))
+    if (k_pad, m_pad) != w.shape:
+        w = jnp.pad(w, ((0, k_pad - k), (0, m_pad - m)))
+    out = pl.pallas_call(
+        _make_apply_block_kernel(rho),
+        grid=(p_pad // block_p,),
+        in_specs=[pl.BlockSpec((block_p, k_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((block_p, m_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((k_pad, m_pad), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_p, m_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, m_pad), jnp.float32),
+        interpret=interpret,
+    )(C, v, w)
+    return out[:p, :m]

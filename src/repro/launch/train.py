@@ -52,14 +52,32 @@ def build_losses(cfg):
 def _run_problem(args):
     """``--problem <name>``: resolve the registry entry and drive it through
     the typed problem API (one entry point; sketch amortization via
-    ``--sketch-refresh-every`` comes along for free)."""
-    from repro.core.problem import get_problem, solve
+    ``--sketch-refresh-every`` comes along for free). An
+    :class:`~repro.core.problem.InfluenceProblem` routes to ``influence()``
+    instead of ``solve()`` — ``--steps`` then counts training steps and
+    ``--queries``/``--top-k`` size the query block / result."""
+    from repro.core.problem import (InfluenceProblem, get_problem, influence,
+                                    solve)
     hg_cfg = config_from_cli(
         args.solver,
         flags={'k': args.k, 'rho': args.rho,
                'sketch_refresh_every': args.sketch_refresh_every},
         defaults={'k': 8, 'rho': 1e-2})
     problem = get_problem(args.problem)
+    if isinstance(problem, InfluenceProblem):
+        queries = problem.reference['queries'](args.queries)
+        print(f'[train] influence problem={problem.name} '
+              f'solver={args.solver} m={args.queries} top_k={args.top_k}')
+        result = influence(problem, hg_cfg, queries,
+                           top_k=args.top_k, train_steps=args.steps)
+        for q in range(result.scores.shape[0]):
+            pairs = ' '.join(
+                f'{int(i)}:{float(s):+.4f}'
+                for s, i in zip(result.scores[q], result.indices[q]))
+            print(f'[influence] query {q}: {pairs}')
+        print(f'[train] done: problem={problem.name} '
+              f'hvps={result.hvp_count} wall_s={result.seconds:.1f}')
+        return result
     print(f'[train] problem={problem.name} solver={args.solver} '
           f'n_outer={args.steps}')
     result = solve(problem, hg_cfg, n_outer=args.steps,
@@ -91,10 +109,15 @@ def main(argv=None):
                          'N-1 steps, saving k HVPs each)')
     ap.add_argument('--solver', default='nystrom')
     ap.add_argument('--problem', default=None,
-                    help='run a registered BilevelProblem (repro.core '
-                         'PROBLEMS registry, e.g. reweighting | distillation '
-                         '| logreg_wd) through solve() instead of the LM '
-                         'pipeline; --steps then counts OUTER steps')
+                    help='run a registered problem (repro.core PROBLEMS '
+                         'registry, e.g. reweighting | distillation | '
+                         'logreg_wd | influence) through solve()/influence() '
+                         'instead of the LM pipeline; --steps then counts '
+                         'OUTER (resp. training) steps')
+    ap.add_argument('--queries', type=int, default=8,
+                    help='influence problems: query-block width m')
+    ap.add_argument('--top-k', type=int, default=10,
+                    help='influence problems: top-k examples per query')
     ap.add_argument('--ckpt-dir', default=None)
     ap.add_argument('--ckpt-every', type=int, default=100)
     ap.add_argument('--production-mesh', action='store_true')

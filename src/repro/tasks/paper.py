@@ -1,19 +1,22 @@
-"""The paper's four experiment tasks as registered :class:`BilevelProblem`s.
+"""The paper's experiment tasks as registered problems.
 
-Each builder returns a typed ``BilevelProblem`` (inner/outer losses, init
-functions, a ``BatchSource``, metrics, paper-protocol training defaults) —
-consumed uniformly by ``repro.core.problem.solve``, ``benchmarks/`` (paper
-tables) and ``examples/`` (runnable scripts). Old dict-style consumers keep
-working for one release through the problem's deprecated ``task['key']``
-adapter. Models use leaky-ReLU exactly as §5 prescribes (ReLU zeroes Hessian
-columns and breaks the plain Eq. 6 inverse).
+Each bilevel builder returns a typed ``BilevelProblem`` (inner/outer losses,
+init functions, a ``BatchSource``, metrics, paper-protocol training
+defaults) — consumed uniformly by ``repro.core.problem.solve``,
+``benchmarks/`` (paper tables) and ``examples/`` (runnable scripts). The
+``influence`` builder returns an :class:`InfluenceProblem` instead (a
+single-level loss over the long-tail data), driven by
+``repro.core.problem.influence`` — the matrix-valued IHVP service. Models
+use leaky-ReLU exactly as §5 prescribes (ReLU zeroes Hessian columns and
+breaks the plain Eq. 6 inverse).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import BilevelProblem, register_problem
+from repro.core.problem import (BilevelProblem, InfluenceProblem,
+                                register_problem)
 from repro.data.sources import ArraySource, EpisodeSource
 from repro.data.synthetic import (DistillationTask, FewShotSampler,
                                   LongTailDataset, make_logreg_problem)
@@ -209,3 +212,30 @@ def build_reweighting(imbalance: int = 100, seed: int = 0,
         reference={'dataset': data},
         defaults=dict(inner_lr=0.1, inner_momentum=0.9, outer_lr=1e-3,
                       steps_per_outer=20, batch_size=128))
+
+
+# -------------------------------------------------- influence functions
+@register_problem('influence')
+def build_influence(imbalance: int = 100, seed: int = 0,
+                    d: int = 64) -> InfluenceProblem:
+    """Influence queries over the long-tail classification substrate.
+
+    The single-level counterpart of ``reweighting``: the same MLP and
+    LongTailDataset, but the question is per-example — which training
+    examples move a query's loss, scored by
+    ``repro.core.problem.influence`` through one Nyström sketch. The val
+    split is the natural query pool (``reference['queries'](m)`` draws the
+    first m val examples as a query batch).
+    """
+    data = LongTailDataset(imbalance_factor=imbalance, seed=seed, d=d)
+    sizes = (d, 128, 128, data.n_classes)
+
+    def queries(m: int):
+        return data.Xv[:m], data.yv[:m]
+
+    return InfluenceProblem(
+        name='influence', loss=_plain_xent_loss,
+        init_params=lambda rng: mlp_init(rng, sizes),
+        data=ArraySource(train=(data.X, data.y), val=(data.Xv, data.yv)),
+        defaults=dict(inner_lr=0.1, batch_size=128, train_steps=200),
+        reference={'dataset': data, 'queries': queries})

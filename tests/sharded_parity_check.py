@@ -15,7 +15,11 @@ Checks, on a 2×4 ('data', 'model') host mesh:
   * end-to-end NystromIHVP apply parity for stabilized / Eq. 6 / chunked;
   * the compiled prepare→ctv pipeline contains an all-reduce (the psum)
     and NO all-gather — the fused path never rematerializes a leaf;
-  * bf16 sketch storage stays within bf16-rounding tolerance of tree/f32.
+  * bf16 sketch storage stays within bf16-rounding tolerance of tree/f32;
+  * the m-query block apply (``apply_matrix``) matches the tree backend for
+    stabilized / Eq. 6 / chunked, and lowers to exactly ONE psum (one
+    ``all_reduce`` op for the whole (k, m) block, not m k-float psums) with
+    no all-gather.
 
 Prints one ``OK <name>`` marker per passed check; the pytest wrapper
 asserts on the full set, so a silently-skipped check fails the suite.
@@ -135,6 +139,51 @@ def check_no_all_gather(mesh):
     print('OK hlo:no-all-gather')
 
 
+def _query_block(m, seed=30):
+    cols = [tree_random_like(kk, PARAMS)
+            for kk in jax.random.split(jax.random.PRNGKey(seed), m)]
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=-1), *cols)
+
+
+def check_block_apply(mesh):
+    """apply_matrix parity on the 8-device mesh for every apply variant."""
+    from repro.core.backend import flatten_vecm
+    idxr, hvp = _quadratic()
+    sb = get_backend('flat_sharded', mesh=mesh, specs=SPECS)
+    rng = jax.random.PRNGKey(31)
+    Vm = _query_block(5)
+    for label, kw in (('stabilized', dict(k=10, rho=1e-2, stabilized=True)),
+                      ('eq6', dict(k=10, rho=1e-2, stabilized=False)),
+                      ('chunked', dict(k=8, rho=0.1, kappa=3))):
+        st = NystromIHVP(backend='tree', **kw)
+        ss = NystromIHVP(backend=sb, **kw)
+        Ut = flatten_vecm(st.apply_matrix(st.prepare(hvp, idxr, rng), Vm))
+        Us = flatten_vecm(ss.apply_matrix(ss.prepare(hvp, idxr, rng), Vm))
+        scale = np.abs(np.asarray(Ut)).max()
+        np.testing.assert_allclose(np.asarray(Us) / scale,
+                                   np.asarray(Ut) / scale, atol=2e-4,
+                                   err_msg=label)
+        print(f'OK block:{label}')
+
+
+def check_block_single_psum(mesh):
+    """One (k, m) psum per block apply — the whole point of ctm — and never
+    an all-gather of a parameter shard."""
+    idxr, hvp = _quadratic()
+    sb = get_backend('flat_sharded', mesh=mesh, specs=SPECS)
+    solver = NystromIHVP(k=8, rho=1e-2, backend=sb, refine=0)
+    sketch = solver.prepare(hvp, idxr, jax.random.PRNGKey(32))
+    for m in (4, 16):
+        low = jax.jit(solver.apply_matrix).lower(sketch, _query_block(m))
+        txt = low.as_text()
+        assert txt.count('all_reduce') == 1, \
+            f'expected exactly one psum in the block apply at m={m}'
+        assert 'all_gather' not in txt
+        ctxt = low.compile().as_text()
+        assert 'all-gather' not in ctxt
+    print('OK block:single-psum')
+
+
 def check_bf16(mesh):
     C_tree, v = _sketch_and_vec(seed=21)
     tb = get_backend('tree')
@@ -158,7 +207,8 @@ def check_bf16(mesh):
 EXPECTED = ['primitive:ctv', 'primitive:gram', 'primitive:cv',
             'primitive:mul_right', 'primitive:combine', 'solver:stabilized',
             'solver:eq6', 'solver:chunked', 'hlo:no-all-gather',
-            'bf16:tolerance']
+            'block:stabilized', 'block:eq6', 'block:chunked',
+            'block:single-psum', 'bf16:tolerance']
 
 
 def main():
@@ -166,6 +216,8 @@ def main():
     check_primitives(mesh)
     check_solver(mesh)
     check_no_all_gather(mesh)
+    check_block_apply(mesh)
+    check_block_single_psum(mesh)
     check_bf16(mesh)
     print('ALL CHECKS PASSED')
     return 0

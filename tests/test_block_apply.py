@@ -1,0 +1,254 @@
+"""Matrix-valued (query-block) apply path: parity and structure guarantees.
+
+The block contract (see docs/backends.md): a query block V is a pytree
+whose every leaf is the parameter shape plus one trailing (m,) axis, and
+``solver.apply_matrix(state, V)`` answers all m IHVPs in one sketch pass.
+Guarantees pinned here:
+
+  * m=1 BITWISE-matches the vector ``apply`` for all four backends and all
+    four solver families (the width-1 block statically dispatches to the
+    vector path, so this is equality by construction — and this test keeps
+    it that way);
+  * m>1 matches the m-column Python loop to f32-roundoff tolerance (the
+    direct Eq. 6 path solves a cond²-amplified k×k system, where batched
+    multi-RHS LU and per-column solves legitimately differ at ~1e-4 rel —
+    hence the looser tolerance there);
+  * flat_sharded's block apply issues exactly ONE psum per apply pass
+    (counted as ``all_reduce`` ops in lowered HLO), not m;
+  * ``query_width`` rejects ragged blocks (the symptom of passing a plain
+    parameter tree where a block was expected);
+  * ``phi_vjp_block`` (the batched-cotangent implicit path) matches the
+    per-vector VJP column by column.
+
+Multi-device sharded block parity lives in tests/sharded_parity_check.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import (CGIHVP, ExactIHVP, FlatShardedBackend, NeumannIHVP,
+                        NystromIHVP, PallasBackend, PyTreeIndexer,
+                        flatten_vec, flatten_vecm, get_backend, make_hvp,
+                        query_width, tree_random_like, unflatten_vecm)
+
+# same deliberately-awkward tree as test_backend.py: odd sizes, a scalar
+PARAMS = {'w': jnp.zeros((8,)), 'm': jnp.zeros((27, 37)),
+          'b': jnp.zeros((2, 2)), 's': jnp.zeros(())}
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ('model',))
+
+
+def _backends():
+    return {'tree': get_backend('tree'),
+            'flat': get_backend('flat'),
+            'flat_sharded': FlatShardedBackend(
+                mesh=_mesh1(),
+                specs={'w': P('model'), 'm': P(None, 'model'),
+                       'b': P(), 's': P()}),
+            'pallas': PallasBackend(interpret=True, block_p=128)}
+
+
+def _block(m, seed=0):
+    """(p, m) query block: every leaf gets a trailing m axis."""
+    cols = [tree_random_like(k, PARAMS)
+            for k in jax.random.split(jax.random.PRNGKey(seed), m)]
+    return cols, jax.tree.map(lambda *ls: jnp.stack(ls, axis=-1), *cols)
+
+
+def _quadratic(seed=0):
+    idxr = PyTreeIndexer(PARAMS)
+    p = idxr.total
+    B = jax.random.normal(jax.random.PRNGKey(seed), (p, 16))
+    Hm = B @ B.T / p + 0.5 * jnp.eye(p)
+
+    def loss(prm, hp, batch):
+        th = flatten_vec(prm)
+        return 0.5 * th @ Hm @ th
+
+    return idxr, make_hvp(loss, PARAMS, None, None)
+
+
+def _solver_grid():
+    """(label, solver) for every family × apply-path variant under test."""
+    grid = []
+    for name, be in _backends().items():
+        grid.append((f'nystrom-whitened-{name}',
+                     NystromIHVP(k=10, rho=1e-2, backend=be)))
+    grid += [
+        ('nystrom-direct', NystromIHVP(k=10, rho=1e-2, stabilized=False)),
+        ('nystrom-chunked', NystromIHVP(k=10, rho=1e-2, kappa=4)),
+        ('cg', CGIHVP(iters=6, rho=1e-2)),
+        ('neumann', NeumannIHVP(iters=6, alpha=1e-2)),
+        ('exact', ExactIHVP(rho=1e-2)),
+    ]
+    return grid
+
+
+# ---------------------------------------------------------------- query_width
+class TestQueryWidth:
+    def test_reads_trailing_axis(self):
+        _, Vm = _block(5)
+        assert query_width(Vm) == 5
+
+    def test_scalar_leaf_carries_its_axis(self):
+        # the scalar param's block leaf is (m,): still one trailing axis
+        _, Vm = _block(3)
+        assert Vm['s'].shape == (3,)
+        assert query_width(Vm) == 3
+
+    def test_ragged_block_rejected(self):
+        bad = {'a': jnp.zeros((4, 3)), 'b': jnp.zeros((4, 2))}
+        with pytest.raises(ValueError, match='trailing'):
+            query_width(bad)
+
+    def test_plain_param_tree_rejected(self):
+        # a parameter tree's "trailing axes" disagree — the classic misuse
+        with pytest.raises(ValueError):
+            query_width(PARAMS)
+
+
+# ------------------------------------------------------- backend primitives
+@pytest.mark.parametrize('m', [1, 5])
+def test_backend_block_primitives_match_tree(m):
+    """vecm/unvecm roundtrip + ctm/cm/combinem agree with the tree oracle."""
+    k = 9
+    keys = jax.random.split(jax.random.PRNGKey(m), 2)
+    C_tree = jax.tree.map(lambda l: jax.random.normal(keys[0], (k,) + l.shape),
+                          PARAMS)
+    _, Vm = _block(m, seed=3)
+    W = jax.random.normal(keys[1], (k, m))
+    tb = get_backend('tree')
+    ref = {'ctm': tb.ctm(C_tree, Vm),
+           'cm': flatten_vecm(tb.cm(C_tree, W)),
+           'combinem': flatten_vecm(tb.combinem(C_tree, W, Vm, 0.05))}
+    for name, be in _backends().items():
+        C = be.prepare_operand(C_tree)
+        Vb = be.vecm(Vm)
+        rt = be.unvecm(Vb, Vm)
+        for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(Vm)):
+            np.testing.assert_array_equal(a, b, err_msg=f'{name}:roundtrip')
+        got = {'ctm': be.ctm(C, Vb),
+               'cm': flatten_vecm(be.unvecm(be.cm(C, W), Vm)),
+               'combinem': flatten_vecm(
+                   be.unvecm(be.combinem(C, W, Vb, 0.05), Vm))}
+        for op in ref:
+            tol = 1e-4 * (np.abs(np.asarray(ref[op])).max() + 1.0)
+            np.testing.assert_allclose(got[op], ref[op], rtol=1e-4, atol=tol,
+                                       err_msg=f'{name}:{op} (m={m})')
+
+
+# ----------------------------------------------------------- solver parity
+@pytest.mark.parametrize('label,solver', _solver_grid(),
+                         ids=[lb for lb, _ in _solver_grid()])
+def test_m1_bitwise_matches_vector_apply(label, solver):
+    """apply_matrix on a width-1 block == apply on the vector, bit for bit."""
+    idxr, hvp = _quadratic(seed=11)
+    state = solver.prepare(hvp, idxr, jax.random.PRNGKey(12))
+    cols, V1 = _block(1, seed=13)
+    u_vec = solver.apply(state, cols[0])
+    u_blk = solver.apply_matrix(state, V1)
+    for a, b in zip(jax.tree.leaves(u_blk), jax.tree.leaves(u_vec)):
+        assert a.shape == b.shape + (1,)
+        np.testing.assert_array_equal(np.asarray(a)[..., 0], np.asarray(b),
+                                      err_msg=label)
+
+
+@pytest.mark.parametrize('label,solver', _solver_grid(),
+                         ids=[lb for lb, _ in _solver_grid()])
+def test_block_matches_column_loop(label, solver):
+    """m=5 block == the 5-column Python loop to f32-roundoff tolerance."""
+    idxr, hvp = _quadratic(seed=21)
+    state = solver.prepare(hvp, idxr, jax.random.PRNGKey(22))
+    cols, Vm = _block(5, seed=23)
+    U = solver.apply_matrix(state, Vm)
+    assert query_width(U) == 5
+    looped = [solver.apply(state, c) for c in cols]
+    for j, u in enumerate(looped):
+        got = flatten_vec(jax.tree.map(lambda x: x[..., j], U))
+        # direct Eq. 6: batched-LU vs per-column solve differ at ~1e-4 rel
+        # on its cond²-amplified k×k system; all other paths sit well below
+        np.testing.assert_allclose(got, flatten_vec(u), rtol=2e-4, atol=2e-3,
+                                   err_msg=f'{label} col {j}')
+
+
+def test_block_apply_under_jit():
+    idxr, hvp = _quadratic(seed=31)
+    solver = NystromIHVP(k=8, rho=1e-2, backend='flat')
+    state = solver.prepare(hvp, idxr, jax.random.PRNGKey(32))
+    _, Vm = _block(4, seed=33)
+    U = jax.jit(solver.apply_matrix)(state, Vm)
+    # jit changes fusion order, so agreement is f32-roundoff, not bitwise
+    np.testing.assert_allclose(np.asarray(flatten_vecm(U)),
+                               np.asarray(flatten_vecm(
+                                   solver.apply_matrix(state, Vm))),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------- psum count
+def test_flat_sharded_block_apply_single_psum():
+    """The whole m-query apply crosses the mesh once: exactly one psum (one
+    ``all_reduce`` op in lowered HLO) regardless of m, and never an
+    all-gather of a parameter shard."""
+    idxr, hvp = _quadratic(seed=41)
+    be = _backends()['flat_sharded']
+    solver = NystromIHVP(k=8, rho=1e-2, backend=be, refine=0)
+    state = solver.prepare(hvp, idxr, jax.random.PRNGKey(42))
+    for m in (4, 16):
+        _, Vm = _block(m, seed=m)
+        txt = jax.jit(solver.apply_matrix).lower(state, Vm).as_text()
+        assert txt.count('all_reduce') == 1, \
+            f'expected exactly one psum at m={m}'
+        assert 'all_gather' not in txt
+    # each refinement sweep legitimately adds psums (ctm inside the residual
+    # and the correction woodbury); the base apply stays at one
+    ref = NystromIHVP(k=8, rho=1e-2, backend=be, refine=1)
+    _, Vm = _block(4, seed=4)
+    txt = jax.jit(ref.apply_matrix).lower(state, Vm).as_text()
+    assert txt.count('all_reduce') > 1
+
+
+# ------------------------------------------------------------ implicit path
+def test_phi_vjp_block_matches_per_vector_columns():
+    """The batched-cotangent implicit path == per-column VJPs."""
+    from repro.core.implicit import _implicit_phi_vjp, phi_vjp_block
+
+    D, H = 12, 3
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(50), 3)
+    A = jax.random.normal(k1, (D, D))
+    A = A @ A.T / D + jnp.eye(D)
+    Bm = jax.random.normal(k2, (D, H))
+
+    def inner(theta, phi, batch):
+        return (0.5 * theta['t'] @ A @ theta['t']
+                - theta['t'] @ (Bm @ phi['p']))
+
+    theta = {'t': jnp.linalg.solve(A, Bm @ jnp.ones((H,)))}
+    phi = {'p': jnp.ones((H,))}
+    solver = NystromIHVP(k=D, rho=1e-3)   # full-rank sketch: near-exact
+    m = 4
+    cols = [{'t': jax.random.normal(kk, (D,))}
+            for kk in jax.random.split(k3, m)]
+    Vm = jax.tree.map(lambda *ls: jnp.stack(ls, -1), *cols)
+    rng = jax.random.PRNGKey(51)
+    state = solver.prepare(
+        make_hvp(inner, theta, phi, None), PyTreeIndexer(theta), rng)
+    G = phi_vjp_block(solver, inner, theta, phi, None, Vm, state=state)
+    for j, c in enumerate(cols):
+        g = _implicit_phi_vjp(solver, inner, theta, phi, None, c, rng, state)
+        np.testing.assert_allclose(
+            np.asarray(G['p'][..., j]), np.asarray(g['p']),
+            rtol=1e-4, atol=1e-5, err_msg=f'col {j}')
+
+
+def test_exact_multi_rhs_roundtrip_helpers():
+    """flatten_vecm/unflatten_vecm invert each other on the block layout."""
+    _, Vm = _block(6, seed=61)
+    flat = flatten_vecm(Vm)
+    assert flat.shape == (PyTreeIndexer(PARAMS).total, 6)
+    back = unflatten_vecm(flat, Vm)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(Vm)):
+        np.testing.assert_array_equal(a, b)

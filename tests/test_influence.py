@@ -1,0 +1,154 @@
+"""influence(): the matrix-IHVP service against a dense oracle.
+
+The oracle materializes what the service must never: the full (m, n_train)
+score matrix s(q, i) = −∇L(q)ᵀ (H+ρI)⁻¹ ∇L(zᵢ) from an explicit dense
+Hessian. ``influence`` streams (m, b) tiles through a running top-k merge
+instead — these tests pin that the streamed top-k (values AND global
+indices, across ragged batch boundaries) equals the oracle's, for the exact
+solver and for a full-rank Nyström sketch, plus the protocol errors and the
+HVP accounting the result reports.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CGIHVP, ExactIHVP, HypergradConfig, InfluenceProblem,
+                        NystromIHVP, influence)
+from repro.data.sources import ArraySource
+
+N, D, M = 40, 5, 6        # train examples / features / queries
+RHO = 1e-2
+
+
+def _toy(seed=0):
+    """Binary logistic regression, params one flat vector (w ++ bias)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(k1, (N, D))
+    w_true = jax.random.normal(k2, (D,))
+    y = (X @ w_true > 0).astype(jnp.float32)
+    Xq = jax.random.normal(k3, (M, D))
+    yq = (Xq @ w_true > 0).astype(jnp.float32)
+
+    def loss(params, batch):
+        Xb, yb = batch
+        z = Xb @ params['w'][:D] + params['w'][D]
+        return jnp.mean(jnp.maximum(z, 0) - z * yb
+                        + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+    problem = InfluenceProblem(
+        name='toy', loss=loss,
+        init_params=lambda rng: {'w': jnp.zeros((D + 1,))},
+        data=ArraySource(train=(X, y), val=(Xq, yq)))
+    params = {'w': 0.1 * jax.random.normal(jax.random.PRNGKey(9), (D + 1,))}
+    return problem, params, (X, y), (Xq, yq)
+
+
+def _oracle(problem, params, train, queries, rho=RHO):
+    """Full (m, n) score matrix from the dense Hessian — no streaming."""
+    X, y = train
+    H = jax.hessian(lambda w: problem.loss({'w': w}, train))(params['w'])
+    g = lambda batch: jax.vmap(lambda Xi, yi: jax.grad(
+        lambda w: problem.loss({'w': w}, (Xi[None], yi[None])))(
+            params['w']))(*batch)
+    G_t, G_q = g(train), g(queries)                      # (n, p), (m, p)
+    S = jnp.linalg.solve(H + rho * jnp.eye(H.shape[0]), G_q.T)   # (p, m)
+    return -(S.T @ G_t.T)                                # (m, n)
+
+
+def _topk(scores, k):
+    idx = np.argsort(-np.asarray(scores), axis=1)[:, :k]
+    return np.take_along_axis(np.asarray(scores), idx, axis=1), idx
+
+
+class TestDenseOracle:
+    def test_exact_solver_matches_oracle(self):
+        """Streamed top-k == dense-matrix top-k, across ragged tiles
+        (batch_size=7 over n=40 ⇒ a 5-example tail tile)."""
+        problem, params, train, queries = _toy()
+        res = influence(problem, ExactIHVP(rho=RHO), queries, params=params,
+                        top_k=4, batch_size=7, self_influence=True)
+        ref_v, ref_i = _topk(_oracle(problem, params, train, queries), 4)
+        np.testing.assert_array_equal(np.asarray(res.indices), ref_i)
+        np.testing.assert_allclose(np.asarray(res.scores), ref_v,
+                                   rtol=1e-4, atol=1e-5)
+        # self-influence ∇L(q)ᵀ(H+ρI)⁻¹∇L(q) > 0 (damped PSD quadratic form)
+        assert res.self_scores.shape == (M,)
+        assert (np.asarray(res.self_scores) > 0).all()
+
+    def test_full_rank_nystrom_matches_exact(self):
+        """k = p Nyström is the exact inverse up to f32: same top-k."""
+        problem, params, train, queries = _toy(seed=3)
+        ny = influence(problem, NystromIHVP(k=D + 1, rho=RHO), queries,
+                       params=params, top_k=4, batch_size=16)
+        ref_v, ref_i = _topk(_oracle(problem, params, train, queries), 4)
+        np.testing.assert_array_equal(np.asarray(ny.indices), ref_i)
+        np.testing.assert_allclose(np.asarray(ny.scores), ref_v,
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_config_path_equals_built_solver(self):
+        problem, params, _, queries = _toy(seed=5)
+        via_cfg = influence(problem, HypergradConfig(solver='exact', rho=RHO),
+                            queries, params=params, top_k=3)
+        direct = influence(problem, ExactIHVP(rho=RHO), queries,
+                           params=params, top_k=3)
+        np.testing.assert_array_equal(np.asarray(via_cfg.indices),
+                                      np.asarray(direct.indices))
+        np.testing.assert_allclose(np.asarray(via_cfg.scores),
+                                   np.asarray(direct.scores), rtol=1e-6)
+
+
+class TestResultContract:
+    def test_shapes_and_topk_clamp(self):
+        problem, params, _, queries = _toy()
+        res = influence(problem, ExactIHVP(rho=RHO), queries, params=params,
+                        top_k=1000)             # clamps to n_train
+        assert res.scores.shape == (M, N)
+        assert res.indices.shape == (M, N)
+        assert res.self_scores is None
+        assert res.problem == 'toy'
+        # every training index appears exactly once per query row
+        for row in np.asarray(res.indices):
+            assert sorted(row.tolist()) == list(range(N))
+        # rows are sorted descending
+        s = np.asarray(res.scores)
+        assert (np.diff(s, axis=1) <= 1e-6).all()
+
+    def test_hvp_accounting(self):
+        problem, params, _, queries = _toy()
+        kw = dict(queries=queries, params=params, top_k=2)
+        assert influence(problem, ExactIHVP(rho=RHO),
+                         **kw).hvp_count == D + 1          # dense column scan
+        assert influence(problem, NystromIHVP(k=4, rho=RHO),
+                         **kw).hvp_count == 4              # k, amortized
+        assert influence(problem, CGIHVP(iters=3, rho=RHO),
+                         **kw).hvp_count == 3 * M          # per-query chains
+
+    def test_queries_required(self):
+        problem, params, _, _ = _toy()
+        with pytest.raises(ValueError, match='queries'):
+            influence(problem, ExactIHVP(rho=RHO), params=params)
+
+    def test_streaming_source_protocol_enforced(self):
+        problem, params, _, queries = _toy()
+
+        class StepOnly:                      # train_batch but no streaming
+            def train_batch(self, i, bs):
+                raise AssertionError('should not be reached')
+
+        with pytest.raises(TypeError, match='n_train'):
+            influence(problem, ExactIHVP(rho=RHO), queries,
+                      source=StepOnly(), params=params)
+
+    def test_training_path_runs_and_improves(self):
+        """params=None trains first (SGD on problem.data) — scores are then
+        computed at the trained params."""
+        problem, _, train, queries = _toy(seed=7)
+        res = influence(problem, NystromIHVP(k=4, rho=RHO), queries,
+                        train_steps=60, batch_size=16, top_k=3)
+        trained = res.params
+        init = problem.init_params(jax.random.PRNGKey(0))
+        assert float(problem.loss(trained, train)) < float(
+            problem.loss(init, train))
+        assert res.scores.shape == (M, 3)
+        assert np.isfinite(np.asarray(res.scores)).all()

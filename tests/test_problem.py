@@ -1,9 +1,8 @@
-"""BilevelProblem / solve() tests: registry round-trip, legacy dict-adapter
-parity, solve-vs-trainer trajectory equivalence on the quadratic task, the
-vmap_tasks meta path, and a shared-sketch tab4-style amortization smoke.
+"""BilevelProblem / solve() tests: registry round-trip, solve-vs-trainer
+trajectory equivalence on the quadratic task, the vmap_tasks meta path, and
+a shared-sketch tab4-style amortization smoke.
 """
 import itertools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -61,57 +60,15 @@ class TestRegistry:
             get_problem('nonexistent_task')
 
 
-class TestLegacyAdapter:
-    def test_as_legacy_dict_warns_and_matches_builder(self):
+class TestNoLegacyAdapter:
+    def test_dict_adapter_is_gone(self):
+        """The one-release deprecation window closed: BilevelProblem is a
+        plain typed dataclass — no dict-style access, no legacy builders."""
         p = build_logreg_weight_decay(D=12, n=40)
-        with pytest.warns(DeprecationWarning, match='as_legacy_dict'):
-            d = p.as_legacy_dict()
-        assert d['inner'] is p.inner_loss
-        assert d['outer'] is p.outer_loss
-        assert d['init_params'] is p.init_params
-        # BatchSource exposes the full splits directly (the tab4/tab6 fix)
-        assert d['train'] is p.data.train and d['val'] is p.data.val
-
-    def test_getitem_warns_and_exposes_reference(self):
-        p = build_imaml()
-        with pytest.warns(DeprecationWarning, match='deprecated'):
-            assert p['sampler'] is p.reference['sampler']
-        assert 'sampler' in p and 'nope' not in p
-        with pytest.raises(KeyError):
-            with warnings.catch_warnings():
-                warnings.simplefilter('ignore')
-                p['nope']
-
-    def test_legacy_accuracy_is_single_arg(self):
-        p = build_reweighting(imbalance=50, d=16)
-        with pytest.warns(DeprecationWarning):
-            acc = p['accuracy']
-        val = acc(p.init_params(jax.random.PRNGKey(0)))
-        assert 0.0 <= val <= 1.0
-
-    def test_legacy_data_key_is_raw_dataset(self):
-        """Old dicts carried the dataset object under 'data'
-        (task['data'].X, .train_batch with its np.RandomState stream) —
-        the adapter must keep that contract, not hand out the BatchSource."""
-        p = build_reweighting(imbalance=50, d=16)
-        with pytest.warns(DeprecationWarning):
-            data = p['data']
-        assert data is p.reference['dataset']
-        assert hasattr(data, 'X') and hasattr(data, 'Xv')
-
-    def test_from_legacy_dict_normalizes_zero_arg_hparams(self):
-        legacy = {
-            'inner': lambda prm, hp, b: jnp.sum(prm['w'] ** 2),
-            'outer': lambda prm, hp, b: jnp.sum(prm['w']),
-            'init_params': lambda rng: {'w': jnp.zeros((3,))},
-            'init_hparams': lambda: {'h': jnp.ones((2,))},
-            'train': (jnp.zeros((4, 3)), jnp.zeros((4,), jnp.int32)),
-            'val': (jnp.zeros((4, 3)), jnp.zeros((4,), jnp.int32)),
-        }
-        p = BilevelProblem.from_legacy_dict(legacy)
-        hp = p.init_hparams(jax.random.PRNGKey(0))
-        np.testing.assert_allclose(hp['h'], 1.0)
-        assert p.data.train is legacy['train']
+        assert not hasattr(p, 'as_legacy_dict')
+        assert not hasattr(BilevelProblem, 'from_legacy_dict')
+        with pytest.raises(TypeError):
+            p['inner']  # noqa: B018  (subscript must no longer be supported)
 
 
 class TestSolveTrainerEquivalence:
@@ -231,19 +188,6 @@ class TestVmapTasksMetaPath:
         with pytest.raises(TypeError, match='amortizable'):
             solve(problem, HypergradConfig(solver='cg', k=4, rho=0.0),
                   n_outer=1, vmap_tasks=2, shared_sketch=True)
-
-
-class TestRunBilevelShim:
-    def test_shim_warns_and_returns_old_triple(self):
-        from benchmarks.common import run_bilevel
-        problem = _quadratic_problem()
-        with pytest.warns(DeprecationWarning, match='run_bilevel'):
-            state, hist, secs = run_bilevel(
-                problem, 'nystrom', n_outer=2, steps_per_outer=2,
-                inner_lr=0.05, outer_lr=0.1, k=6, batch=4)
-        assert len(hist['outer_loss']) == 2
-        assert secs >= 0.0
-        assert state.hparams['phi'].shape == (4,)
 
 
 class TestEpisodeSource:

@@ -1,0 +1,120 @@
+"""Batch-source contracts: determinism, sizing edges, streaming protocol.
+
+The sources carry two load-bearing guarantees the rest of the repo builds
+on: (1) step-indexed draws are pure functions of (seed, step) — the
+fault-tolerance property every resume/replay path relies on — and (2) the
+ordered-streaming protocol (``n_train`` / ``train_slice``) keeps influence
+scores' global indices aligned with storage order. EpisodeSource's
+meta-batch shape contract (and its refusal to serve a flat stream) rounds
+out the set.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.sources import ArraySource, EpisodeSource
+from repro.data.synthetic import FewShotSampler
+
+
+def _source(n=12, d=3, n_val=5, seed=0):
+    key = jax.random.PRNGKey(99)
+    X = jax.random.normal(key, (n, d))
+    y = jnp.arange(n) % 2
+    Xv = jax.random.normal(key, (n_val, d)) + 1.0
+    yv = jnp.arange(n_val) % 2
+    return ArraySource(train=(X, y), val=(Xv, yv), seed=seed)
+
+
+class TestArraySourceDeterminism:
+    def test_same_seed_same_stream(self):
+        a, b = _source(seed=7), _source(seed=7)
+        for step in (0, 1, 5):
+            for draw in ('train_batch', 'val_batch'):
+                xa, ya = getattr(a, draw)(step, 4)
+                xb, yb = getattr(b, draw)(step, 4)
+                np.testing.assert_array_equal(xa, xb, err_msg=f'{draw}@{step}')
+                np.testing.assert_array_equal(ya, yb)
+
+    def test_different_seed_or_step_differs(self):
+        a = _source(n=64, seed=0)
+        x0, _ = a.train_batch(0, 8)
+        x1, _ = a.train_batch(1, 8)
+        assert not np.array_equal(np.asarray(x0), np.asarray(x1))
+        b = _source(n=64, seed=1)
+        xb, _ = b.train_batch(0, 8)
+        assert not np.array_equal(np.asarray(x0), np.asarray(xb))
+
+    def test_train_and_val_streams_independent(self):
+        """val keys live at seed+1000+step — step t of each stream must not
+        collide (the t vs 1000+t offset)."""
+        a = _source(n=64)
+        xt, _ = a.train_batch(0, 8)
+        xv, _ = a.val_batch(0, 8)
+        assert xt.shape == xv.shape == (8, 3)
+        assert not np.array_equal(np.asarray(xt), np.asarray(xv))
+
+
+class TestArraySourceSizing:
+    def test_batch_larger_than_split_resamples(self):
+        """Draws sample with replacement: a batch bigger than the split is
+        served (rows repeat) rather than truncated or raising."""
+        src = _source(n=4)
+        X, y = src.train_batch(0, 50)
+        assert X.shape == (50, 3) and y.shape == (50,)
+        # every served row is one of the 4 training rows
+        train_rows = np.asarray(src.train[0])
+        for row in np.asarray(X):
+            assert any(np.array_equal(row, t) for t in train_rows)
+
+    def test_train_slice_contract(self):
+        """Storage order, tail clamp, start bounds — the influence-index
+        alignment guarantees."""
+        src = _source(n=12)
+        assert src.n_train == 12
+        X, y = src.train_slice(3, 4)
+        np.testing.assert_array_equal(X, src.train[0][3:7])
+        np.testing.assert_array_equal(y, src.train[1][3:7])
+        Xt, yt = src.train_slice(10, 4)            # clamps at the tail
+        assert Xt.shape == (2, 3) and yt.shape == (2,)
+        np.testing.assert_array_equal(Xt, src.train[0][10:])
+        for bad in (-1, 12, 99):
+            with pytest.raises(IndexError, match='train_slice'):
+                src.train_slice(bad, 4)
+
+    def test_slices_tile_the_split_exactly(self):
+        """Concatenated ragged tiles == the split (what the influence sweep
+        actually iterates)."""
+        src = _source(n=12)
+        tiles = [src.train_slice(s, 5) for s in range(0, 12, 5)]  # 5+5+2
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(t[0]) for t in tiles]),
+            np.asarray(src.train[0]))
+
+
+class TestEpisodeSource:
+    def test_task_batch_shapes(self):
+        sampler = FewShotSampler(n_way=5, k_shot=1, seed=0)
+        src = EpisodeSource(sampler)
+        (sx, sy), (qx, qy) = src.task_batch(0, 3)
+        assert sx.shape[0] == sy.shape[0] == 3       # leading task axis
+        assert qx.shape[0] == qy.shape[0] == 3
+        assert sx.shape[1] == sy.shape[1]            # support examples align
+        assert qx.shape[1] == qy.shape[1]
+        assert sx.shape[2:] == qx.shape[2:]          # same image shape
+
+    def test_task_batches_deterministic_and_non_overlapping(self):
+        sampler = FewShotSampler(n_way=5, k_shot=1, seed=0)
+        src = EpisodeSource(sampler)
+        (sx0, _), _ = src.task_batch(0, 2)
+        (sx0b, _), _ = src.task_batch(0, 2)
+        np.testing.assert_array_equal(sx0, sx0b)
+        # step 1 draws episodes 2..3, not 0..1 (consecutive, not reused)
+        (sx1, _), _ = src.task_batch(1, 2)
+        assert not np.array_equal(np.asarray(sx0), np.asarray(sx1))
+
+    def test_flat_stream_refused(self):
+        src = EpisodeSource(FewShotSampler(n_way=5, k_shot=1, seed=0))
+        for draw in ('train_batch', 'val_batch'):
+            with pytest.raises(TypeError, match='meta-problem'):
+                getattr(src, draw)(0, 8)
