@@ -42,7 +42,8 @@ def run(m_values=(1, 8, 32), k: int = 16, top_k: int = 5,
             rows.append(bench_row(
                 solver=solver_name, backend='tree', m=m,
                 applies_per_sec=m / wall, wall_seconds=wall,
-                top_k=top_k, k=k, hvps=res.hvp_count, d=d))
+                problem='influence', hvp_count=res.hvp_count,
+                top_k=top_k, k=k, d=d))
             emit('bench_influence', wall * 1e6,
                  f'solver={solver_name} m={m} k={k} top_k={top_k} '
                  f'hvps={res.hvp_count} queries_per_s={m / wall:.1f}')

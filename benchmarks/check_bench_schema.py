@@ -2,8 +2,14 @@
 
 CI's bench-smoke job runs the benches at toy size and then this checker over
 whatever they wrote — a perf-trajectory artifact that fails loudly the
-moment a bench drifts from the row contract in benchmarks/common.py
-(schema_version, and per-row solver/backend/m/applies_per_sec/wall_seconds).
+moment a bench drifts from the row contract in benchmarks/common.py.
+
+Both schema versions validate (``BENCH_SCHEMA_KEYS``): v1 rows carry
+solver/backend/m/applies_per_sec/wall_seconds; v2 rows additionally carry
+``problem`` and ``hvp_count``, plus type-checked optional
+``hypergrad_error`` / ``grid`` fields (the observatory's accuracy cells).
+Old baselines therefore stay checkable after the bump — only
+``compare_runs.py`` insists both sides of a diff share one version.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.check_bench_schema [paths...]
@@ -15,7 +21,7 @@ import json
 import os
 import sys
 
-from benchmarks.common import BENCH_REQUIRED_KEYS, BENCH_SCHEMA_VERSION
+from benchmarks.common import BENCH_SCHEMA_KEYS
 
 
 def check_file(path: str) -> list[str]:
@@ -23,9 +29,12 @@ def check_file(path: str) -> list[str]:
     errs = []
     with open(path) as f:
         doc = json.load(f)
-    if doc.get('schema_version') != BENCH_SCHEMA_VERSION:
-        errs.append(f"schema_version={doc.get('schema_version')!r} "
-                    f'(expected {BENCH_SCHEMA_VERSION})')
+    version = doc.get('schema_version')
+    if version not in BENCH_SCHEMA_KEYS:
+        errs.append(f'schema_version={version!r} '
+                    f'(expected one of {sorted(BENCH_SCHEMA_KEYS)})')
+        return errs
+    required = BENCH_SCHEMA_KEYS[version]
     for key in ('name', 'created_unix', 'rows'):
         if key not in doc:
             errs.append(f'missing top-level key {key!r}')
@@ -34,7 +43,7 @@ def check_file(path: str) -> list[str]:
         errs.append('rows must be a non-empty list')
         rows = []
     for i, row in enumerate(rows):
-        missing = [k for k in BENCH_REQUIRED_KEYS if k not in row]
+        missing = [k for k in required if k not in row]
         if missing:
             errs.append(f'row {i} missing {missing}')
             continue
@@ -47,6 +56,29 @@ def check_file(path: str) -> list[str]:
             if not isinstance(row[k], str) or not row[k]:
                 errs.append(f'row {i}: {k}={row[k]!r} must be a non-empty '
                             'string')
+        if version >= 2:
+            errs.extend(_check_v2_row(i, row))
+    return errs
+
+
+def _check_v2_row(i: int, row: dict) -> list[str]:
+    """v2 additions: required problem/hvp_count + typed optional fields."""
+    errs = []
+    if not isinstance(row['problem'], str) or not row['problem']:
+        errs.append(f"row {i}: problem={row['problem']!r} must be a "
+                    'non-empty string')
+    if (not isinstance(row['hvp_count'], int)
+            or isinstance(row['hvp_count'], bool) or row['hvp_count'] < 0):
+        errs.append(f"row {i}: hvp_count={row['hvp_count']!r} must be an "
+                    'int >= 0')
+    if 'hypergrad_error' in row:
+        v = row['hypergrad_error']
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+            errs.append(f'row {i}: hypergrad_error={v!r} must be a '
+                        'number >= 0')
+    if 'grid' in row and not isinstance(row['grid'], dict):
+        errs.append(f"row {i}: grid={row['grid']!r} must be a dict of "
+                    'accuracy-knob values')
     return errs
 
 
@@ -69,8 +101,9 @@ def main(argv=None) -> int:
                 print(f'  - {e}')
         else:
             with open(path) as f:
-                n = len(json.load(f)['rows'])
-            print(f'OK   {path} ({n} rows)')
+                doc = json.load(f)
+            print(f"OK   {path} (schema v{doc['schema_version']}, "
+                  f"{len(doc['rows'])} rows)")
     return 1 if failed else 0
 
 

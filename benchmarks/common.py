@@ -5,9 +5,23 @@ The benchmark modules drive ``repro.core.problem.solve`` /
 definition to result, HVP-count accounting included).
 
 Results are persisted as ``BENCH_<name>.json`` next to the printed CSV:
-``bench_rows`` accumulates structured rows (solver, backend, m, applies/sec,
-wall time, ...) and ``write_bench`` flushes them with a schema stamp that
-``benchmarks/check_bench_schema.py`` validates in CI's bench-smoke job.
+``bench_row`` builds structured rows and ``write_bench`` flushes them with a
+schema stamp that ``benchmarks/check_bench_schema.py`` validates in CI's
+bench-smoke job, and that ``benchmarks/compare_runs.py`` diffs across runs
+(the enforceable perf trajectory).
+
+Schema history:
+  v1 — solver/backend/m/applies_per_sec/wall_seconds per row (PR 6).
+  v2 — v1 plus required ``problem`` (which workload produced the row) and
+       ``hvp_count`` (the row's HVP bill; 0 for pure apply-path microbenches
+       that run no HVPs), and two schema-known optional fields:
+       ``hypergrad_error`` (relative error vs the exact-IHVP oracle,
+       observatory cells) and ``grid`` (the accuracy-knob dict of a sweep
+       cell, e.g. ``{"k": 4, "rho": 0.01}``).
+
+``write_bench`` always stamps the current version; the checker validates
+both (old baselines stay readable), and ``compare_runs.py`` refuses to diff
+across versions rather than miscompare.
 """
 from __future__ import annotations
 
@@ -18,19 +32,35 @@ import time
 from repro.core import HypergradConfig
 
 # BENCH_*.json schema contract (validated by benchmarks/check_bench_schema.py)
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2
 BENCH_REQUIRED_KEYS = ('solver', 'backend', 'm', 'applies_per_sec',
                        'wall_seconds')
+BENCH_V2_REQUIRED_KEYS = BENCH_REQUIRED_KEYS + ('problem', 'hvp_count')
+# per-version required row keys — the checker accepts any version listed here
+BENCH_SCHEMA_KEYS = {1: BENCH_REQUIRED_KEYS, 2: BENCH_V2_REQUIRED_KEYS}
 
 
 def solver_cfg(name: str, k: int = 10, rho: float = 1e-2,
                alpha: float = 1e-2) -> HypergradConfig:
-    return {
-        'nystrom': HypergradConfig(solver='nystrom', k=k, rho=rho),
-        'nystrom_eq6': HypergradConfig(solver='nystrom', k=k, rho=rho),
-        'cg': HypergradConfig(solver='cg', k=k, rho=0.0),
-        'neumann': HypergradConfig(solver='neumann', k=k, alpha=alpha),
-    }[name]
+    """The benchmark suite's named solver configurations.
+
+    ``nystrom_eq6`` is the paper-faithful literal Eq. 6 apply
+    (``stabilized=False``, no refinement sweeps) — distinct from ``nystrom``,
+    whose whitened-Woodbury apply is the backward-stable production path.
+    Unknown names raise with the known set (never a bare KeyError).
+    """
+    cfgs = {
+        'nystrom': lambda: HypergradConfig(solver='nystrom', k=k, rho=rho),
+        'nystrom_eq6': lambda: HypergradConfig(
+            solver='nystrom', k=k, rho=rho, stabilized=False, refine=0),
+        'cg': lambda: HypergradConfig(solver='cg', k=k, rho=0.0),
+        'neumann': lambda: HypergradConfig(solver='neumann', k=k, alpha=alpha),
+        'exact': lambda: HypergradConfig(solver='exact', rho=rho),
+    }
+    if name not in cfgs:
+        raise ValueError(f'unknown solver config {name!r}; known: '
+                         f'{sorted(cfgs)}')
+    return cfgs[name]()
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -38,18 +68,29 @@ def emit(name: str, us_per_call: float, derived: str):
 
 
 def bench_row(*, solver: str, backend: str, m: int, applies_per_sec: float,
-              wall_seconds: float, **extra) -> dict:
-    """One structured benchmark row (the BENCH_*.json unit).
+              wall_seconds: float, problem: str, hvp_count: int,
+              hypergrad_error: float | None = None, grid: dict | None = None,
+              **extra) -> dict:
+    """One structured benchmark row (the BENCH_*.json unit, schema v2).
 
-    ``solver``/``backend`` name what ran, ``m`` is the query-block width
+    ``solver``/``backend`` name what ran, ``problem`` the workload (a
+    registry name or a bench-local label), ``m`` is the query-block width
     (1 = the vector apply), ``applies_per_sec`` counts *queries* served per
-    second (so block-vs-loop rows are directly comparable), and
-    ``wall_seconds`` the measured wall time of the timed region. ``extra``
-    carries bench-specific fields (p, k, leaf count, ...).
+    second (so block-vs-loop rows are directly comparable), ``wall_seconds``
+    the measured wall time of the timed region, and ``hvp_count`` the row's
+    HVP bill (0 when the timed region runs no HVPs). ``hypergrad_error`` and
+    ``grid`` are the observatory's per-cell accuracy fields (omitted from
+    the row when None). ``extra`` carries bench-specific fields (p, k, leaf
+    count, ...).
     """
     row = dict(solver=solver, backend=backend, m=int(m),
                applies_per_sec=float(applies_per_sec),
-               wall_seconds=float(wall_seconds))
+               wall_seconds=float(wall_seconds), problem=problem,
+               hvp_count=int(hvp_count))
+    if hypergrad_error is not None:
+        row['hypergrad_error'] = float(hypergrad_error)
+    if grid is not None:
+        row['grid'] = dict(grid)
     row.update(extra)
     return row
 
@@ -59,7 +100,7 @@ def write_bench(name: str, rows: list[dict], out_dir: str | None = None,
     """Persist rows as ``BENCH_<name>.json`` (schema-stamped) and return the
     path. ``out_dir`` defaults to $BENCH_OUT_DIR or the repo root."""
     for row in rows:
-        missing = [k for k in BENCH_REQUIRED_KEYS if k not in row]
+        missing = [k for k in BENCH_V2_REQUIRED_KEYS if k not in row]
         if missing:
             raise ValueError(
                 f'bench row missing required keys {missing}: {row}')

@@ -1,0 +1,62 @@
+"""Diff two BENCH_*.json runs into a regression report (nonzero on regress).
+
+The enforceable half of the perf trajectory: cells are matched by identity
+(problem, solver, grid, every non-measurement field) and their measurements
+compared under tolerances. Any regression — wall time or throughput beyond
+``--tol-wall``, hypergradient error beyond ``--tol-error`` (+``--atol-error``
+floor), ANY hvp_count increase, or a baseline cell missing from the new
+run — is named and the exit code is 1. Schema-version mismatches refuse to
+diff (exit 2) rather than miscompare.
+
+  python benchmarks/compare_runs.py BENCH_baseline.json BENCH_new.json
+  python benchmarks/compare_runs.py old.json new.json --no-wall   # cross-machine
+
+``--no-wall`` skips the wall/throughput checks — use it whenever the two
+runs came from different machines (e.g. CI vs a committed baseline), where
+absolute timings are not comparable but error and HVP bills are.
+"""
+import argparse
+import sys
+
+if __package__ in (None, ''):          # `python benchmarks/compare_runs.py`
+    import os
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, 'src')):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+
+def main(argv=None) -> int:
+    from repro.bench import CompareError, format_report
+    from repro.bench.compare import compare_files
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument('baseline', help='baseline BENCH_*.json')
+    ap.add_argument('new', help='new-run BENCH_*.json')
+    ap.add_argument('--tol-wall', type=float, default=0.25,
+                    help='relative wall/throughput slack (default 25%%)')
+    ap.add_argument('--tol-error', type=float, default=0.25,
+                    help='relative hypergrad_error slack (default 25%%)')
+    ap.add_argument('--atol-error', type=float, default=1e-6,
+                    help='absolute hypergrad_error floor (keeps near-zero '
+                         'baselines from flagging roundoff)')
+    ap.add_argument('--no-wall', action='store_true',
+                    help='skip wall/throughput checks (cross-machine runs)')
+    ap.add_argument('--verbose', action='store_true',
+                    help='also print non-regressed cell deltas')
+    args = ap.parse_args(argv)
+
+    try:
+        report = compare_files(
+            args.baseline, args.new, tol_wall=args.tol_wall,
+            tol_error=args.tol_error, atol_error=args.atol_error,
+            check_wall=not args.no_wall)
+    except CompareError as e:
+        print(f'compare_runs: {e}')
+        return 2
+    print(format_report(report, verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == '__main__':
+    sys.exit(main())

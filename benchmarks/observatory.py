@@ -1,0 +1,96 @@
+"""The solver observatory CLI: one command, the whole complexity picture.
+
+Sweeps registered problems × registered solvers × accuracy knobs through
+the ``repro.bench.observatory`` engine and persists every cell as a
+schema-v2 BENCH row: hypergradient error vs the exact-IHVP oracle, the
+analytic HVP bill, and measured wall time, with the population axis
+(seeds or an explicit ``--vary`` kwarg) under one ``jax.vmap``.
+
+  python benchmarks/observatory.py                         # default toy sweep
+  python benchmarks/observatory.py --problems logreg_wd:D=8:n=60 \\
+      --solvers nystrom,cg --grid k=2:5:10,rho=0.01 --tasks 3
+  python benchmarks/observatory.py --problems reweighting:d=8:width=16 \\
+      --vary imbalance=10,100
+
+Writes ``BENCH_<out>.json`` (default ``BENCH_observatory.json``) to
+$BENCH_OUT_DIR or the repo root; validate with
+``benchmarks/check_bench_schema.py``, diff two runs with
+``benchmarks/compare_runs.py``. See docs/benchmarks.md.
+"""
+import argparse
+import sys
+
+if __package__ in (None, ''):          # `python benchmarks/observatory.py`
+    import os
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, 'src')):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+from benchmarks.common import bench_row, write_bench
+
+
+def main(argv=None) -> int:
+    from repro.bench import (DEFAULT_GRID, DEFAULT_PROBLEM_SPECS, parse_grid,
+                             parse_vary, run_sweep)
+    from repro.bench.observatory import DEFAULT_MAX_ORACLE_P
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument('--problems', default=','.join(DEFAULT_PROBLEM_SPECS),
+                    help="comma-separated problem specs, 'name:kw=v:kw=v' "
+                         '(colons separate kwargs; registry names)')
+    ap.add_argument('--solvers', default='nystrom,cg,neumann,exact',
+                    help='comma-separated SOLVERS registry names')
+    ap.add_argument('--grid', default=None,
+                    help="accuracy knobs, 'k=2:5:10,rho=0.01' (commas "
+                         'separate axes, colons values); default '
+                         + ','.join(f'{k}={":".join(str(x) for x in v)}'
+                                    for k, v in DEFAULT_GRID.items()))
+    ap.add_argument('--tasks', type=int, default=3,
+                    help='population size (seed variants per problem)')
+    ap.add_argument('--vary', default=None,
+                    help="population axis as 'builder_kwarg=v1,v2' (e.g. "
+                         "'imbalance=10,100') instead of seeds")
+    ap.add_argument('--steps-per-outer', type=int, default=None,
+                    help='inner-SGD adaptation steps to θ_T (default: the '
+                         "problem's own protocol)")
+    ap.add_argument('--batch-size', type=int, default=None)
+    ap.add_argument('--oracle-rho', type=float, default=0.0,
+                    help='oracle damping: 0.0 = true implicit hypergradient; '
+                         "set to the solvers' rho to isolate sketch/"
+                         'truncation error from damping bias')
+    ap.add_argument('--reps', type=int, default=2,
+                    help='timing repetitions per cell (best-of)')
+    ap.add_argument('--seed', type=int, default=0)
+    ap.add_argument('--max-oracle-p', type=int, default=DEFAULT_MAX_ORACLE_P,
+                    help='refuse problems whose oracle needs more than this '
+                         'many HVPs per task')
+    ap.add_argument('--out', default='observatory',
+                    help='artifact name: writes BENCH_<out>.json')
+    args = ap.parse_args(argv)
+
+    cells = run_sweep(
+        problem_specs=[s for s in args.problems.split(',') if s],
+        solvers=[s for s in args.solvers.split(',') if s],
+        grid=parse_grid(args.grid) if args.grid else None,
+        tasks=args.tasks,
+        vary=parse_vary(args.vary) if args.vary else None,
+        steps=args.steps_per_outer, batch_size=args.batch_size,
+        seed=args.seed, oracle_rho=args.oracle_rho, reps=args.reps,
+        max_oracle_p=args.max_oracle_p, progress=print)
+
+    rows = [bench_row(solver=c.solver, backend='tree', m=1,
+                      applies_per_sec=c.applies_per_sec,
+                      wall_seconds=c.wall_seconds, problem=c.problem,
+                      hvp_count=c.hvp_count,
+                      hypergrad_error=c.hypergrad_error, grid=c.grid,
+                      err_max=c.err_max, tasks=c.tasks)
+            for c in cells]
+    write_bench(args.out, rows,
+                meta={'argv': list(argv if argv is not None else sys.argv[1:]),
+                      'oracle_rho': args.oracle_rho, 'tasks': args.tasks})
+    return 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract). Modules:
   tab5_speed_memory     — Tab. 5
   tab6_robustness       — Tab. 6 / Fig. 4
   bench_influence       — influence-service queries/sec vs m
+  observatory           — solver × problem × accuracy-knob complexity sweep
   roofline              — EXPERIMENTS.md §Roofline source (dry-run artifacts)
 
 FAST=1 env shrinks horizons for CI smoke. The apply/influence benches also
@@ -18,6 +19,17 @@ benchmarks/check_bench_schema.py validates them in CI).
 import os
 import time
 import traceback
+
+
+def _observatory(fast: bool = False) -> None:
+    """The solver observatory sweep at orchestrator scale: every solver over
+    the toy problem set (shrunk to a logreg 2×2 micro-sweep under FAST)."""
+    from benchmarks import observatory
+    argv = ['--oracle-rho', '0.01']
+    if fast:
+        argv += ['--problems', 'logreg_wd:D=8:n=60',
+                 '--grid', 'k=2:5,rho=0.01', '--tasks', '2']
+    observatory.main(argv)
 
 
 def main() -> None:
@@ -43,6 +55,7 @@ def main() -> None:
          {'m_values': (1, 4) if fast else (1, 8, 32),
           'k': 4 if fast else 16,
           'train_steps': 10 if fast else 100}),
+        ('observatory', _observatory, {'fast': fast}),
         ('roofline', roofline.run, {}),
     ]
     t00 = time.time()

@@ -15,7 +15,7 @@ are only measurable without resets — the row says so explicitly.
 """
 import argparse
 
-from benchmarks.common import emit, solver_cfg
+from benchmarks.common import bench_row, emit, solver_cfg, write_bench
 from repro.core import solve
 from repro.tasks import build_distillation
 
@@ -25,10 +25,17 @@ SKETCH_REFRESH = 5          # default amortization cadence for the HVP row
 def run(n_outer: int = 25, sketch_refresh_every: int | None = None):
     problem = build_distillation()
     accs = {}
+    rows = []
     for method in ('nystrom', 'neumann', 'cg'):
         res = solve(problem, solver_cfg(method, k=10, rho=1e-2, alpha=1e-2),
                     n_outer=n_outer)
         accs[method] = res.metrics['distilled_accuracy']
+        rows.append(bench_row(
+            solver=method, backend='tree', m=1,
+            applies_per_sec=n_outer / max(res.seconds, 1e-12),
+            wall_seconds=res.seconds, problem='distillation',
+            hvp_count=res.hvp_count, n_outer=n_outer,
+            test_acc=accs[method]))
         emit('tab2_distillation', res.seconds * 1e6 / n_outer,
              f'method={method} test_acc={accs[method]:.3f} '
              f'hvps={res.hvp_count}')
@@ -39,11 +46,18 @@ def run(n_outer: int = 25, sketch_refresh_every: int | None = None):
                    n_outer=n_outer, reset_inner=False,
                    sketch_refresh_every=refresh)
     accs['nystrom_amortized'] = res_am.metrics['distilled_accuracy']
+    rows.append(bench_row(
+        solver='nystrom', backend='tree', m=1,
+        applies_per_sec=n_outer / max(res_am.seconds, 1e-12),
+        wall_seconds=res_am.seconds, problem='distillation',
+        hvp_count=res_am.hvp_count, n_outer=n_outer,
+        refresh_every=refresh, test_acc=accs['nystrom_amortized']))
     emit('tab2_distillation_sketch', res_am.seconds * 1e6 / n_outer,
          f'method=nystrom protocol=warm_start refresh_every={refresh} '
          f'hvps={res_am.hvp_count} (fresh_prepare={n_outer * 10}) '
          f'wall_s={res_am.seconds:.2f} '
          f'test_acc={accs["nystrom_amortized"]:.3f}')
+    write_bench('tab2', rows, meta=dict(n_outer=n_outer))
     return accs
 
 

@@ -19,7 +19,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, solver_cfg
+from benchmarks.common import bench_row, emit, solver_cfg, write_bench
 from repro.core import solve
 from repro.optim import momentum
 from repro.tasks import build_reweighting
@@ -53,6 +53,7 @@ def _baseline(problem, steps=600):
 def run(imbalances=(200, 100, 50), n_outer: int = 30,
         sketch_refresh_every: int | None = None, baseline_steps: int = 600):
     out = {}
+    rows = []
     for imb in imbalances:
         problem = build_reweighting(imbalance=imb)
         base = _baseline(problem, steps=baseline_steps)
@@ -61,6 +62,12 @@ def run(imbalances=(200, 100, 50), n_outer: int = 30,
             res = solve(problem, solver_cfg(method, k=10, rho=1e-2,
                                             alpha=1e-2), n_outer=n_outer)
             out[(imb, method)] = res.metrics['accuracy']
+            rows.append(bench_row(
+                solver=method, backend='tree', m=1,
+                applies_per_sec=n_outer / max(res.seconds, 1e-12),
+                wall_seconds=res.seconds, problem='reweighting',
+                hvp_count=res.hvp_count, imb=imb, n_outer=n_outer,
+                acc=res.metrics['accuracy']))
             emit('tab4_reweighting', res.seconds * 1e6 / n_outer,
                  f'imb={imb} method={method} '
                  f'acc={res.metrics["accuracy"]:.3f} hvps={res.hvp_count}')
@@ -73,12 +80,19 @@ def run(imbalances=(200, 100, 50), n_outer: int = 30,
                        n_outer=n_outer, sketch_refresh_every=refresh)
         fresh_hvps = n_outer * 10
         out[(imb, 'nystrom_amortized')] = res_am.metrics['accuracy']
+        rows.append(bench_row(
+            solver='nystrom', backend='tree', m=1,
+            applies_per_sec=n_outer / max(res_am.seconds, 1e-12),
+            wall_seconds=res_am.seconds, problem='reweighting',
+            hvp_count=res_am.hvp_count, imb=imb, n_outer=n_outer,
+            refresh_every=refresh, acc=res_am.metrics['accuracy']))
         emit('tab4_reweighting_sketch', res_am.seconds * 1e6 / n_outer,
              f'imb={imb} method=nystrom refresh_every={refresh} '
              f'hvps={res_am.hvp_count} (fresh_prepare={fresh_hvps}) '
              f'wall_s={res_am.seconds:.2f} '
              f'acc={res_am.metrics["accuracy"]:.3f}')
         out[(imb, 'baseline')] = base
+    write_bench('tab4', rows, meta=dict(n_outer=n_outer))
     return out
 
 

@@ -171,13 +171,17 @@ def run_block_apply(m_values=(1, 8, 32), n_leaves=8, p_total=1 << 18, k=32,
                 jax.block_until_ready(apply_blk(sketch, Vm))
             blk_per = (time.time() - t0) / reps
             if rows is not None:
+                # hvp_count=0: the timed region is the pure apply path — the
+                # sketch (and its k HVPs) amortizes outside the clock
                 rows.append(bench_row(
                     solver='nystrom', backend=backend, m=m,
                     applies_per_sec=m / loop_per, wall_seconds=loop_per,
+                    problem='synthetic_quadratic', hvp_count=0,
                     path='loop', p=p_count, k=k, n_leaves=n_leaves))
                 rows.append(bench_row(
                     solver='nystrom', backend=backend, m=m,
                     applies_per_sec=m / blk_per, wall_seconds=blk_per,
+                    problem='synthetic_quadratic', hvp_count=0,
                     path='block', p=p_count, k=k, n_leaves=n_leaves))
             out[('block_apply', backend, m)] = (loop_per, blk_per)
             emit('tab5_block_apply', blk_per * 1e6,
@@ -235,6 +239,7 @@ def run_backend_apply(leaf_counts=(2, 8, 32), p_total=1 << 18, k=32,
                 rows.append(bench_row(
                     solver='nystrom', backend=backend, m=1,
                     applies_per_sec=1.0 / per, wall_seconds=per,
+                    problem='synthetic_quadratic', hvp_count=0,
                     path='block', p=p_count, k=k, n_leaves=n_leaves,
                     sketch_mb=_sketch_bytes(sketch) / 1e6))
             emit('tab5_backend_apply', per * 1e6,
@@ -302,7 +307,8 @@ def run_sharded_backend_apply(n_leaves: int = 16, p_total=1 << 18, k: int = 32,
         if rows is not None:
             rows.append(bench_row(
                 solver='nystrom', backend=name, m=1,
-                applies_per_sec=1.0 / per, wall_seconds=per, path='block',
+                applies_per_sec=1.0 / per, wall_seconds=per,
+                problem='synthetic_quadratic', hvp_count=0, path='block',
                 p=p_count, k=k, n_leaves=n_leaves, n_dev=n_dev))
         emit('tab5_sharded_apply', per * 1e6,
              f'backend={name} n_dev={n_dev} n_leaves={n_leaves} p={p_count} '

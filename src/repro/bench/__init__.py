@@ -1,0 +1,33 @@
+"""repro.bench — the solver observatory's measurement substrate.
+
+Public API:
+  run_sweep / SweepCell / build_population    — PROBLEMS × SOLVERS × knob-grid
+                                                complexity sweeps (vmapped
+                                                population axis, error vs the
+                                                exact-IHVP oracle)
+  parse_grid / parse_problem_spec /           — the observatory CLI's spec
+    parse_vary                                  mini-language
+  solver_grid_points                          — registry-driven grid axes (a
+                                                solver sweeps exactly the
+                                                knobs its SolverSpec consumes)
+  compare_docs / CompareError / format_report — two-run regression diffing
+                                                (benchmarks/compare_runs.py)
+
+The CLI lives in ``benchmarks/observatory.py`` (persistence via
+``benchmarks/common.py``); this package holds everything importable —
+and therefore unit-testable — without the benchmarks tree.
+"""
+from repro.bench.compare import (CellDiff, CompareError, CompareReport,
+                                 compare_docs, format_report)
+from repro.bench.observatory import (DEFAULT_GRID, DEFAULT_PROBLEM_SPECS,
+                                     PopulationBundle, SweepCell,
+                                     build_population, parse_grid,
+                                     parse_problem_spec, parse_vary,
+                                     run_sweep, solver_grid_points)
+
+__all__ = [
+    'CellDiff', 'CompareError', 'CompareReport', 'DEFAULT_GRID',
+    'DEFAULT_PROBLEM_SPECS', 'PopulationBundle', 'SweepCell',
+    'build_population', 'compare_docs', 'format_report', 'parse_grid',
+    'parse_problem_spec', 'parse_vary', 'run_sweep', 'solver_grid_points',
+]

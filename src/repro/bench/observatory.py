@@ -1,0 +1,360 @@
+"""The solver observatory: PROBLEMS × SOLVERS × accuracy-knob sweeps.
+
+One measurement primitive — ``hypergrad_at`` at a fixed linearization point
+(θ_T, φ), scored against the exact-IHVP oracle — swept over
+
+  * the **problem axis**: any registered ``PROBLEMS`` builder at toy size
+    (``parse_problem_spec``'s ``name:kw=v`` syntax picks the size),
+  * the **population axis**: T variants of the problem (seeds by default,
+    or an explicit ``--vary`` axis such as imbalance factors), measured
+    under ONE ``jax.vmap`` — one compiled program per cell, not T,
+  * the **solver axis**: any subset of the ``SOLVERS`` registry, and
+  * the **grid axis**: accuracy knobs (Nyström k, CG/Neumann iterations,
+    damping ρ, Neumann α). Each solver sweeps exactly the grid keys its
+    ``SolverSpec`` consumes — ``exact`` ignores ``k``, a newly registered
+    solver opts into the sweep by listing its knobs in its spec.
+
+Each cell yields a :class:`SweepCell`: relative hypergradient error vs the
+oracle (mean and max over the population), the per-hypergradient HVP bill
+(``accounted_hvps`` — the same arithmetic ``solve`` reports), and measured
+wall time. ``benchmarks/observatory.py`` is the CLI that persists cells as
+schema-v2 BENCH rows; ``benchmarks/compare_runs.py`` diffs two such files.
+
+The population is built once per problem (inner-SGD adaptation to θ_T and
+the p-HVP oracle are shared by every cell), so adding a solver or a grid
+point costs only that cell's own measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergrad import HypergradConfig
+from repro.core.problem import (BilevelProblem, accounted_hvps, get_problem,
+                                hypergrad_at, hypergrad_error,
+                                hypergrad_reference, resolved_defaults)
+from repro.core.solvers import SOLVERS
+from repro.core.tree_util import PyTree
+
+# Toy-size default sweep set: small enough that the exact-IHVP oracle
+# (p HVPs + a dense p×p solve, per population member) runs in CI on CPU.
+DEFAULT_PROBLEM_SPECS = (
+    'logreg_wd:D=8:n=60',
+    'distillation:n_per_class=1:image_size=8:width=16',
+    'reweighting:d=8:width=16',
+)
+
+# Accuracy knobs swept by default. Keys are HypergradConfig field names:
+# ``k`` doubles as the iteration count l for CG/Neumann (the registry's
+# field renames), ``rho`` reaches nystrom/cg/exact, ``alpha`` neumann only.
+DEFAULT_GRID: dict[str, tuple] = {'k': (2, 5, 10), 'rho': (1e-2,)}
+
+# The oracle materializes the full inner Hessian: p HVPs + an O(p³) solve
+# per population member. Refuse quietly-quadratic mistakes above this.
+DEFAULT_MAX_ORACLE_P = 20_000
+
+
+# ---------------------------------------------------------------------------
+# Spec mini-language (shared by the CLI and tests)
+# ---------------------------------------------------------------------------
+def _parse_value(text: str):
+    """int → float → bool → str, first that parses."""
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            pass
+    if text.lower() in ('true', 'false'):
+        return text.lower() == 'true'
+    return text
+
+
+def parse_problem_spec(spec: str) -> tuple[str, dict]:
+    """``'name:kw=v:kw=v'`` → (name, builder kwargs).
+
+    Colons separate the kwargs so commas stay free as the list separator in
+    ``--problems a,b,c``:
+
+    >>> parse_problem_spec('logreg_wd:D=8:n=60')
+    ('logreg_wd', {'D': 8, 'n': 60})
+    >>> parse_problem_spec('reweighting')
+    ('reweighting', {})
+    """
+    name, *parts = spec.split(':')
+    kwargs = {}
+    for part in parts:
+        if '=' not in part:
+            raise ValueError(
+                f'bad problem spec part {part!r} in {spec!r} '
+                "(expected 'name:kw=v:kw=v')")
+        key, _, val = part.partition('=')
+        kwargs[key] = _parse_value(val)
+    return name, kwargs
+
+
+def parse_grid(text: str) -> dict[str, tuple]:
+    """``'k=2:4:8,rho=0.01'`` → ``{'k': (2, 4, 8), 'rho': (0.01,)}``.
+
+    Commas separate axes, colons separate an axis's values:
+
+    >>> parse_grid('k=2:4,rho=0.01:0.1')
+    {'k': (2, 4), 'rho': (0.01, 0.1)}
+    """
+    grid = {}
+    for axis in filter(None, text.split(',')):
+        if '=' not in axis:
+            raise ValueError(f'bad grid axis {axis!r} in {text!r} '
+                             "(expected 'key=v1:v2:...')")
+        key, _, vals = axis.partition('=')
+        grid[key] = tuple(_parse_value(v) for v in vals.split(':'))
+    return grid
+
+
+def parse_vary(text: str) -> tuple[str, tuple]:
+    """``'imbalance=10,100'`` → ``('imbalance', (10, 100))`` — an explicit
+    population axis (builder kwarg × values) instead of the seed default.
+
+    >>> parse_vary('imbalance=10,100')
+    ('imbalance', (10, 100))
+    """
+    if '=' not in text:
+        raise ValueError(f'bad vary spec {text!r} '
+                         "(expected 'builder_kwarg=v1,v2,...')")
+    key, _, vals = text.partition('=')
+    return key, tuple(_parse_value(v) for v in vals.split(','))
+
+
+def solver_grid_points(solver: str, grid: dict[str, tuple]) -> list[dict]:
+    """The grid cells a solver actually sweeps: the product of the grid axes
+    whose keys its ``SolverSpec`` consumes (others are simply not its dials).
+
+    >>> solver_grid_points('exact', {'k': (2, 4), 'rho': (0.01,)})
+    [{'rho': 0.01}]
+    >>> solver_grid_points('neumann', {'k': (2, 4), 'rho': (0.01,)})
+    [{'k': 2}, {'k': 4}]
+    """
+    if solver not in SOLVERS:
+        raise ValueError(
+            f'unknown solver {solver!r}; registered: {sorted(SOLVERS)}')
+    axes = [(key, vals) for key, vals in grid.items()
+            if key in SOLVERS[solver].fields]
+    if not axes:
+        return [{}]
+    keys = [k for k, _ in axes]
+    return [dict(zip(keys, combo))
+            for combo in itertools.product(*(vals for _, vals in axes))]
+
+
+# ---------------------------------------------------------------------------
+# Population construction (shared across every cell of a problem)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PopulationBundle:
+    """A measured problem population, frozen at its linearization points.
+
+    ``theta``/``phi``/``inner_b``/``outer_b``/``keys`` all carry a leading
+    task axis of size ``tasks``; ``reference`` is the stacked exact-IHVP
+    oracle hypergradient at those points (computed once, reused by every
+    cell). ``problem`` is the variant-0 build — its loss *functions* are
+    shared by all variants (data enters only through the stacked batches).
+    """
+    problem: BilevelProblem
+    spec: str                 # the 'name:kw=v' spec this was built from
+    tasks: int
+    p: int                    # inner parameter count (the oracle's HVP bill)
+    theta: PyTree             # adapted inner params θ_T, stacked
+    phi: PyTree               # outer variables φ, stacked
+    inner_b: Any
+    outer_b: Any
+    keys: jax.Array           # per-task sketch-sampling keys
+    reference: PyTree         # oracle hypergradients, stacked
+    oracle_rho: float
+
+
+def _stack(trees: list) -> PyTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _params_size(problem: BilevelProblem) -> int:
+    shapes = jax.eval_shape(problem.init_params, jax.random.PRNGKey(0))
+    return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+def build_population(spec: str, *, tasks: int = 3,
+                     vary: tuple[str, tuple] | None = None,
+                     steps: int | None = None, batch_size: int | None = None,
+                     seed: int = 0, oracle_rho: float = 0.0,
+                     max_oracle_p: int = DEFAULT_MAX_ORACLE_P,
+                     ) -> PopulationBundle:
+    """Build a problem population and its oracle references.
+
+    Variants: ``vary=None`` sweeps the builder's ``seed`` over
+    ``seed+0..seed+tasks-1``; ``vary=('imbalance', (10, 100))`` sweeps that
+    builder kwarg instead (``tasks`` is then its value count). Each variant
+    contributes one population member: fresh (θ₀, φ) from its init
+    functions, step-``t`` batches from its data source, and θ_T from
+    ``steps`` full-batch inner-SGD steps on its inner batch (defaults from
+    ``resolved_defaults`` — the problem's own training protocol). The
+    adaptation matters: several tasks are degenerate at θ₀ (e.g. logreg's
+    mixed term vanishes at w=0), so errors are only meaningful at θ_T.
+
+    Meta-problems (``EpisodeSource``) draw the population from
+    ``task_batch`` instead: ``tasks`` episodes, θ₀ = φ = the meta-init,
+    per-episode proximal adaptation — the same geometry ``solve``'s
+    ``vmap_tasks`` path differentiates through.
+    """
+    name, kwargs = parse_problem_spec(spec)
+    if vary is not None:
+        key, values = vary
+        variants = [{**kwargs, key: v} for v in values]
+        tasks = len(variants)          # the vary axis IS the population
+    else:
+        variants = [{**kwargs, 'seed': seed + t} for t in range(tasks)]
+
+    problems = [get_problem(name, **v) for v in variants]
+    problem = problems[0]
+    p = _params_size(problem)
+    if p > max_oracle_p:
+        raise ValueError(
+            f'problem {spec!r} has p={p} inner parameters; the exact-IHVP '
+            f'oracle costs p HVPs + a dense p×p solve per task '
+            f'(max_oracle_p={max_oracle_p}). Sweep a toy size '
+            f"(e.g. {DEFAULT_PROBLEM_SPECS[0]!r}) or raise max_oracle_p")
+    d = resolved_defaults(problem, steps_per_outer=steps,
+                          batch_size=batch_size)
+    rng = jax.random.PRNGKey(seed)
+
+    if hasattr(problem.data, 'task_batch'):
+        if vary is not None:
+            raise ValueError(
+                f'--vary is not supported for meta-problem {name!r}: its '
+                'population axis is the episode draw from task_batch')
+        inner_b, outer_b = problem.data.task_batch(0, tasks)
+        phi0 = problem.init_hparams(rng)
+        phi = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (tasks,) + x.shape), phi0)
+        theta0 = phi                      # adapt from the meta-init, as iMAML
+    else:
+        inner_b = _stack([pb.data.train_batch(t, d['batch_size'])
+                          for t, pb in enumerate(problems)])
+        outer_b = _stack([pb.data.val_batch(t, d['batch_size'])
+                          for t, pb in enumerate(problems)])
+        theta0 = _stack([pb.init_params(jax.random.fold_in(rng, t))
+                         for t, pb in enumerate(problems)])
+        phi = _stack([pb.init_hparams(jax.random.fold_in(rng, 10_000 + t))
+                      for t, pb in enumerate(problems)])
+
+    lr, n_steps = d['inner_lr'], d['steps_per_outer']
+
+    def adapt(th, ph, batch):
+        def sgd_step(prm, _):
+            g = jax.grad(problem.inner_loss)(prm, ph, batch)
+            return jax.tree.map(lambda w, gw: w - lr * gw, prm, g), None
+        out, _ = jax.lax.scan(sgd_step, th, None, length=n_steps)
+        return out
+
+    theta = jax.jit(jax.vmap(adapt))(theta0, phi, inner_b)
+    reference = jax.jit(jax.vmap(
+        lambda th, ph, ib, ob: hypergrad_reference(
+            problem, th, ph, ib, ob, rho=oracle_rho)))(
+                theta, phi, inner_b, outer_b)
+    keys = jax.random.split(jax.random.fold_in(rng, 777), tasks)
+    return PopulationBundle(problem=problem, spec=spec, tasks=tasks, p=p,
+                            theta=theta, phi=phi, inner_b=inner_b,
+                            outer_b=outer_b, keys=keys, reference=reference,
+                            oracle_rho=oracle_rho)
+
+
+# ---------------------------------------------------------------------------
+# Cell measurement
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepCell:
+    """One observatory measurement: (problem, solver, grid point) over the
+    population. ``problem`` is the full ``'name:kw=v'`` spec (two sizes of
+    one builder are different cells). ``hypergrad_error`` is the population
+    mean of the relative
+    error vs the oracle (``err_max`` the worst member); ``hvp_count`` is
+    the per-hypergradient analytic bill (k for Nyström, l for CG/Neumann,
+    p for exact); ``wall_seconds`` is the best-of-``reps`` wall time of the
+    whole vmapped population program (compile excluded),
+    ``applies_per_sec`` = tasks / wall_seconds."""
+    problem: str
+    solver: str
+    grid: dict
+    tasks: int
+    hypergrad_error: float
+    err_max: float
+    hvp_count: int
+    wall_seconds: float
+    applies_per_sec: float
+
+
+def measure_cell(bundle: PopulationBundle, solver_name: str, point: dict,
+                 *, reps: int = 2) -> SweepCell:
+    """Measure one (solver, grid point) cell against a built population."""
+    solver = HypergradConfig(solver=solver_name, **point).build()
+    fn = jax.jit(jax.vmap(
+        lambda th, ph, ib, ob, key: hypergrad_at(
+            bundle.problem, solver, th, ph, ib, ob, rng=key)))
+    batched = (bundle.theta, bundle.phi, bundle.inner_b, bundle.outer_b,
+               bundle.keys)
+    hg = jax.block_until_ready(fn(*batched))     # compile + warm
+    wall = math.inf
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*batched))
+        wall = min(wall, time.perf_counter() - t0)
+    errs = jax.vmap(hypergrad_error)(hg, bundle.reference)
+    return SweepCell(
+        problem=bundle.spec, solver=solver_name, grid=dict(point),
+        tasks=bundle.tasks, hypergrad_error=float(jnp.mean(errs)),
+        err_max=float(jnp.max(errs)),
+        hvp_count=accounted_hvps(solver, bundle.problem, 1),
+        wall_seconds=wall, applies_per_sec=bundle.tasks / max(wall, 1e-12))
+
+
+def run_sweep(problem_specs=DEFAULT_PROBLEM_SPECS,
+              solvers=('nystrom', 'cg', 'neumann', 'exact'),
+              grid: dict[str, tuple] | None = None, *, tasks: int = 3,
+              vary: tuple[str, tuple] | None = None, steps: int | None = None,
+              batch_size: int | None = None, seed: int = 0,
+              oracle_rho: float = 0.0, reps: int = 2,
+              max_oracle_p: int = DEFAULT_MAX_ORACLE_P,
+              progress: Callable[[str], None] | None = None,
+              ) -> list[SweepCell]:
+    """The full sweep: problems × solvers × per-solver grid points.
+
+    Unknown solver names raise before any measurement (the CLI's
+    ``--solvers`` filter therefore selects exactly registry entries). The
+    population (adaptation + oracle) is built once per problem and shared
+    by all its cells.
+    """
+    say = progress or (lambda msg: None)
+    grid = DEFAULT_GRID if grid is None else grid
+    points = {s: solver_grid_points(s, grid) for s in solvers}
+    if vary is not None:
+        tasks = len(vary[1])
+    cells = []
+    for spec in problem_specs:
+        bundle = build_population(
+            spec, tasks=tasks, vary=vary, steps=steps,
+            batch_size=batch_size, seed=seed, oracle_rho=oracle_rho,
+            max_oracle_p=max_oracle_p)
+        say(f'[observatory] {spec}: population of {bundle.tasks} built '
+            f'(p={bundle.p}, oracle rho={oracle_rho})')
+        for solver_name in solvers:
+            for point in points[solver_name]:
+                cell = measure_cell(bundle, solver_name, point, reps=reps)
+                cells.append(cell)
+                knobs = ','.join(f'{k}={v}' for k, v in point.items()) or '-'
+                say(f'[observatory]   {solver_name:<8} {knobs:<16} '
+                    f'err={cell.hypergrad_error:.3e} '
+                    f'hvps={cell.hvp_count} wall={cell.wall_seconds:.3f}s')
+    return cells

@@ -5,6 +5,8 @@ Public API:
                                                     entry point task → result)
   InfluenceProblem / influence                    — per-example influence
                                                     scores (matrix-IHVP service)
+  hypergrad_at / hypergrad_reference /            — per-point hypergradient +
+    hypergrad_error                                 exact-IHVP oracle (observatory)
   implicit_root / phi_vjp_block                   — differentiable θ*(φ) map
                                                     (+ m-query cotangent block)
   NystromIHVP / CGIHVP / NeumannIHVP / ExactIHVP  — IHVP solvers
@@ -24,8 +26,9 @@ from repro.core.hypergrad import (HypergradConfig, config_from_cli,
 from repro.core.implicit import implicit_root, phi_vjp_block, sgd_solver
 from repro.core.problem import (BatchSource, BilevelProblem, BilevelResult,
                                 InfluenceProblem, InfluenceResult, PROBLEMS,
-                                accounted_hvps, get_problem, influence,
-                                register_problem, solve)
+                                accounted_hvps, get_problem, hypergrad_at,
+                                hypergrad_error, hypergrad_reference,
+                                influence, register_problem, solve)
 from repro.core.solvers import (SOLVERS, CGIHVP, DenseFactor, ExactIHVP,
                                 IterativeOperator, NeumannIHVP, NystromIHVP,
                                 NystromSketch, SketchPolicy, SketchState,
@@ -40,7 +43,8 @@ __all__ = [
     'BACKENDS', 'BatchSource', 'BilevelProblem', 'BilevelResult',
     'BilevelState', 'BilevelTrainer', 'DenseFactor', 'PROBLEMS',
     'InfluenceProblem', 'InfluenceResult', 'influence',
-    'accounted_hvps', 'get_problem', 'register_problem', 'solve',
+    'accounted_hvps', 'get_problem', 'hypergrad_at', 'hypergrad_error',
+    'hypergrad_reference', 'register_problem', 'solve',
     'FlatBackend', 'FlatShardedBackend', 'HypergradConfig',
     'IterativeOperator', 'PallasBackend', 'ShardedOperand', 'SOLVERS',
     'SketchPolicy', 'SketchState', 'SolverSpec', 'TreeBackend',

@@ -203,6 +203,9 @@ class HypergradConfig:
     refine: int = 1               # residual sweeps on the stabilized apply:
     #   0 = literal two-C-pass apply; each sweep adds 4 C-passes and drives
     #   the f32 cancellation error (~eps·λmax/ρ) down to roundoff
+    stabilized: bool = True       # False = the literal Eq. 6 apply (the
+    #   paper-faithful 'nystrom_eq6' benchmark variant); True = the
+    #   whitened-Woodbury apply (backward-stable; see NystromIHVP)
 
     def _build_backend(self):
         from repro.core.backend import get_backend

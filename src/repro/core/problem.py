@@ -128,6 +128,8 @@ class BilevelResult:
     hvp_count: int
     seconds: float
     state: BilevelState | None = None
+    hypergrad_error: float | None = None    # vs the exact-IHVP oracle, when
+    #   requested via solve(with_hypergrad_error=True); None otherwise
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +221,69 @@ def accounted_hvps(solver, problem: BilevelProblem, n_outer: int,
 
 
 # ---------------------------------------------------------------------------
+# Hypergradient oracle — solver accuracy against the exact IHVP
+# ---------------------------------------------------------------------------
+def hypergrad_at(problem: BilevelProblem, config: HypergradConfig | Any,
+                 params: PyTree, hparams: PyTree, inner_batch: Any,
+                 outer_batch: Any, *, rng: jax.Array | None = None) -> PyTree:
+    """One implicit hypergradient at an explicit linearization point.
+
+    Treats ``params`` as the (already-computed) inner solution θ* and
+    differentiates ``outer_loss(θ*(φ), φ)`` through ``implicit_root`` with
+    the given solver — the same backward pass ``solve`` runs, isolated to a
+    single evaluation so solvers can be compared at an identical
+    (θ*, φ, batch) point. ``config`` is a :class:`HypergradConfig` or a
+    built solver instance; ``rng`` seeds the sketch-column sampling.
+
+    This is the measurement primitive of the solver observatory
+    (``benchmarks/observatory.py``): per-cell error is
+    ``hypergrad_error(hypergrad_at(...), hypergrad_reference(...))``.
+    Vmappable — stacking (params, hparams, batches, rng) over a leading
+    task axis measures a whole problem population in one program.
+    """
+    if config is None:
+        config = HypergradConfig()
+    solver = (config.build() if isinstance(config, HypergradConfig)
+              else config)
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    solution = implicit_root(lambda phi, batch: params, problem.inner_loss,
+                             solver)
+
+    def obj(phi):
+        theta = solution(phi, inner_batch, rng=rng)
+        return problem.outer_loss(theta, phi, outer_batch)
+
+    return jax.grad(obj)(hparams)
+
+
+def hypergrad_reference(problem: BilevelProblem, params: PyTree,
+                        hparams: PyTree, inner_batch: Any, outer_batch: Any,
+                        *, rho: float = 0.0) -> PyTree:
+    """Exact-IHVP oracle hypergradient at (``params``, ``hparams``).
+
+    Materializes the full inner Hessian (p HVPs) and dense-solves — the
+    ground truth every approximate solver is scored against. ``rho=0.0``
+    (default) is the true implicit hypergradient; pass the solver's damping
+    to isolate sketch/truncation error from damping bias. Test-scale
+    problems only (cost is p HVPs + one p×p factorization).
+    """
+    from repro.core.solvers import ExactIHVP
+    return hypergrad_at(problem, ExactIHVP(rho=rho), params, hparams,
+                        inner_batch, outer_batch)
+
+
+def hypergrad_error(hg: PyTree, reference: PyTree) -> jax.Array:
+    """Relative L2 error ‖hg − ref‖ / ‖ref‖ over the flattened pytrees
+    (f32 accumulation; guards a zero-norm reference)."""
+    from repro.core.tree_util import tree_norm
+    num = tree_norm(jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                                 - b.astype(jnp.float32), hg, reference))
+    den = tree_norm(jax.tree.map(lambda b: b.astype(jnp.float32), reference))
+    return num / jnp.maximum(den, 1e-30)
+
+
+# ---------------------------------------------------------------------------
 # solve() — the single entry point
 # ---------------------------------------------------------------------------
 def solve(problem: BilevelProblem, config: HypergradConfig | Any = None, *,
@@ -227,7 +292,9 @@ def solve(problem: BilevelProblem, config: HypergradConfig | Any = None, *,
           reset_inner: bool | None = None, seed: int = 0,
           sketch_refresh_every: int | None = None,
           vmap_tasks: int | None = None, shared_sketch: bool = False,
-          log_every: int = 0, jit: bool = True) -> BilevelResult:
+          log_every: int = 0, jit: bool = True,
+          with_hypergrad_error: bool = False,
+          oracle_rho: float = 0.0) -> BilevelResult:
     """Optimize a :class:`BilevelProblem` end to end → :class:`BilevelResult`.
 
     Two drive modes:
@@ -250,9 +317,23 @@ def solve(problem: BilevelProblem, config: HypergradConfig | Any = None, *,
     None for the default Nyström configuration). Training hyperparameters
     (``inner_opt``/``outer_opt``/``steps_per_outer``/``batch_size``/
     ``reset_inner``) default from ``problem.defaults``.
+
+    ``with_hypergrad_error=True`` additionally scores the configured solver
+    against the exact-IHVP oracle at the *solved* state (one extra
+    hypergradient with each, on fresh step-``n_outer`` batches — p oracle
+    HVPs, so test-scale problems only) and records the relative error on
+    ``BilevelResult.hypergrad_error``; ``oracle_rho`` is the oracle's
+    damping (0.0 = the true implicit hypergradient). Not available on the
+    ``vmap_tasks`` meta path, whose per-task adapted parameters are
+    transient.
     """
     if config is None:
         config = HypergradConfig()
+    if with_hypergrad_error and vmap_tasks:
+        raise ValueError(
+            'with_hypergrad_error is not supported on the vmap_tasks meta '
+            'path (per-task adapted parameters are transient); measure via '
+            'repro.bench.observatory, which owns the population axis')
     d = resolved_defaults(problem, steps_per_outer=steps_per_outer,
                           batch_size=batch_size, reset_inner=reset_inner)
     solver = (config.build() if isinstance(config, HypergradConfig)
@@ -295,10 +376,19 @@ def solve(problem: BilevelProblem, config: HypergradConfig | Any = None, *,
                           reset_inner=d['reset_inner'])
     metrics = {name: float(fn(state.params, state.hparams))
                for name, fn in problem.metrics.items()}
+    hg_err = None
+    if with_hypergrad_error:
+        ib = problem.data.train_batch(n_outer, bs)
+        ob = problem.data.val_batch(n_outer, bs)
+        hg = hypergrad_at(problem, solver, state.params, state.hparams,
+                          ib, ob, rng=jax.random.fold_in(rng, n_outer))
+        ref = hypergrad_reference(problem, state.params, state.hparams,
+                                  ib, ob, rho=oracle_rho)
+        hg_err = float(hypergrad_error(hg, ref))
     return BilevelResult(problem=problem.name, params=state.params,
                          hparams=state.hparams, history=history,
                          metrics=metrics, hvp_count=hvps, seconds=seconds,
-                         state=state)
+                         state=state, hypergrad_error=hg_err)
 
 
 def _solve_meta(problem: BilevelProblem, solver, d: dict, *, n_outer: int,

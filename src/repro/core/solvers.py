@@ -793,7 +793,7 @@ SOLVERS = {
                           {'k': 'k', 'rho': 'rho', 'kappa': 'kappa',
                            'column_chunk': 'column_chunk',
                            'importance_sampling': 'importance_sampling',
-                           'refine': 'refine'},
+                           'refine': 'refine', 'stabilized': 'stabilized'},
                           builds_backend=True),
     'cg': SolverSpec(CGIHVP, {'k': 'iters', 'rho': 'rho'}),
     'neumann': SolverSpec(NeumannIHVP, {'k': 'iters', 'alpha': 'alpha'}),

@@ -89,15 +89,22 @@ def build_logreg_weight_decay(D: int = 100, n: int = 500,
 
 # ----------------------------------------------------------------- §5.2
 @register_problem('distillation')
-def build_distillation(n_per_class: int = 5, seed: int = 0) -> BilevelProblem:
-    """Dataset distillation (Tab. 2): φ = C synthetic images + labels fixed."""
-    task = DistillationTask(seed=seed)
+def build_distillation(n_per_class: int = 5, seed: int = 0,
+                       width: int = 64, image_size: int = 28,
+                       ) -> BilevelProblem:
+    """Dataset distillation (Tab. 2): φ = C synthetic images + labels fixed.
+
+    ``width``/``image_size`` scale the model and data down from the paper
+    protocol (defaults unchanged) — the observatory sweeps a toy size whose
+    exact-IHVP oracle is affordable.
+    """
+    task = DistillationTask(seed=seed, image_size=image_size)
     C = task.n_classes * n_per_class
     s = task.image_size
     Xt, yt = task.train()
     Xs, ys = task.test()
     distill_labels = jnp.tile(jnp.arange(task.n_classes), n_per_class)
-    sizes = (s * s, 64, task.n_classes)
+    sizes = (s * s, width, task.n_classes)
 
     def inner(params, hparams, batch):
         logits = mlp_apply(params, hparams['images'])
@@ -138,14 +145,17 @@ def build_distillation(n_per_class: int = 5, seed: int = 0) -> BilevelProblem:
 # ----------------------------------------------------------------- §5.3
 @register_problem('imaml')
 def build_imaml(n_way: int = 5, k_shot: int = 1, seed: int = 0,
-                reg: float = 1.0) -> BilevelProblem:
+                reg: float = 1.0, width: int = 64, image_size: int = 20,
+                ) -> BilevelProblem:
     """iMAML (Tab. 3): inner adapts to a task with a proximal term to the
     meta-initialization; outer moves the initialization. A meta-problem:
     drive it through ``solve(..., vmap_tasks=N)`` (its ``EpisodeSource``
-    has no flat train/val stream)."""
-    sampler = FewShotSampler(n_way=n_way, k_shot=k_shot, seed=seed)
+    has no flat train/val stream). ``width``/``image_size`` scale the model
+    and episodes down to observatory toy size (defaults unchanged)."""
+    sampler = FewShotSampler(n_way=n_way, k_shot=k_shot, seed=seed,
+                             image_size=image_size)
     s = sampler.image_size
-    sizes = (s * s, 64, 64, n_way)
+    sizes = (s * s, width, width, n_way)
 
     def inner(params, hparams, batch):
         sx, sy = batch
@@ -170,11 +180,15 @@ def build_imaml(n_way: int = 5, k_shot: int = 1, seed: int = 0,
 # ----------------------------------------------------------------- §5.4
 @register_problem('reweighting')
 def build_reweighting(imbalance: int = 100, seed: int = 0,
-                      d: int = 64) -> BilevelProblem:
-    """Data reweighting (Tab. 4/5/6): μ_φ maps per-example loss → weight."""
+                      d: int = 64, width: int = 128) -> BilevelProblem:
+    """Data reweighting (Tab. 4/5/6): μ_φ maps per-example loss → weight.
+
+    ``width`` scales the classifier down from the WRN-28 stand-in (default
+    unchanged) — the observatory's toy size keeps the oracle affordable.
+    """
     data = LongTailDataset(imbalance_factor=imbalance, seed=seed, d=d)
     n_cls = data.n_classes
-    sizes = (d, 128, 128, n_cls)           # stand-in for WRN-28 (DESIGN §6.3)
+    sizes = (d, width, width, n_cls)       # stand-in for WRN-28 (DESIGN §6.3)
 
     def weight_net(hparams, losses):
         h = ACT(losses[:, None] @ hparams['w1'] + hparams['b1'])

@@ -1,0 +1,98 @@
+"""benchmarks/common.py contract tests: row stamping, persistence, configs.
+
+The BENCH_*.json schema is what makes the perf trajectory diffable across
+sessions — these tests pin the v2 row contract (bench_row / write_bench),
+the $BENCH_OUT_DIR resolution, and the named solver-config table (including
+the nystrom-vs-nystrom_eq6 distinction that used to be silently collapsed).
+"""
+import json
+
+import pytest
+
+from benchmarks.common import (BENCH_SCHEMA_KEYS, BENCH_SCHEMA_VERSION,
+                               bench_row, solver_cfg, write_bench)
+
+
+def _row(**over):
+    base = dict(solver='nystrom', backend='tree', m=1, applies_per_sec=10.0,
+                wall_seconds=0.1, problem='logreg_wd', hvp_count=5)
+    base.update(over)
+    return bench_row(**base)
+
+
+class TestBenchRow:
+    def test_required_fields_stamped_and_typed(self):
+        row = _row()
+        for key in BENCH_SCHEMA_KEYS[BENCH_SCHEMA_VERSION]:
+            assert key in row
+        assert isinstance(row['m'], int)
+        assert isinstance(row['hvp_count'], int)
+        assert isinstance(row['applies_per_sec'], float)
+
+    def test_optional_fields_omitted_when_none(self):
+        row = _row()
+        assert 'hypergrad_error' not in row
+        assert 'grid' not in row
+
+    def test_optional_fields_included_when_given(self):
+        row = _row(hypergrad_error=0.25, grid={'k': 4, 'rho': 0.01})
+        assert row['hypergrad_error'] == 0.25
+        assert row['grid'] == {'k': 4, 'rho': 0.01}
+
+    def test_extra_fields_pass_through(self):
+        row = _row(imb=100, acc=0.91)
+        assert row['imb'] == 100 and row['acc'] == 0.91
+
+
+class TestWriteBench:
+    def test_writes_schema_stamped_doc_to_bench_out_dir(self, tmp_path,
+                                                        monkeypatch):
+        monkeypatch.setenv('BENCH_OUT_DIR', str(tmp_path))
+        path = write_bench('unit', [_row()], meta={'note': 'test'})
+        assert path == str(tmp_path / 'BENCH_unit.json')
+        doc = json.loads((tmp_path / 'BENCH_unit.json').read_text())
+        assert doc['schema_version'] == BENCH_SCHEMA_VERSION == 2
+        assert doc['name'] == 'unit' and doc['meta'] == {'note': 'test'}
+        assert len(doc['rows']) == 1
+
+    def test_explicit_out_dir_wins_over_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv('BENCH_OUT_DIR', str(tmp_path / 'env'))
+        (tmp_path / 'arg').mkdir()
+        path = write_bench('unit', [_row()], out_dir=str(tmp_path / 'arg'))
+        assert path == str(tmp_path / 'arg' / 'BENCH_unit.json')
+
+    def test_rejects_rows_missing_required_keys(self, tmp_path, monkeypatch):
+        monkeypatch.setenv('BENCH_OUT_DIR', str(tmp_path))
+        bad = _row()
+        del bad['problem'], bad['hvp_count']
+        with pytest.raises(ValueError, match='missing required keys'):
+            write_bench('unit', [bad])
+        assert not (tmp_path / 'BENCH_unit.json').exists()
+
+
+class TestSolverCfg:
+    def test_unknown_name_raises_with_known_set(self):
+        with pytest.raises(ValueError, match="unknown solver config 'sgd'"):
+            solver_cfg('sgd')
+        with pytest.raises(ValueError, match='nystrom_eq6'):
+            solver_cfg('sgd')      # the message lists the known names
+
+    def test_exact_entry_builds(self):
+        from repro.core.solvers import ExactIHVP
+        solver = solver_cfg('exact', rho=0.5).build()
+        assert isinstance(solver, ExactIHVP) and solver.rho == 0.5
+
+    def test_nystrom_eq6_is_the_literal_eq6_apply(self):
+        """Regression pin: solver_cfg('nystrom_eq6') used to return a config
+        identical to 'nystrom' — the eq6 variant must build the
+        unstabilized, no-refinement apply."""
+        eq6 = solver_cfg('nystrom_eq6', k=4).build()
+        prod = solver_cfg('nystrom', k=4).build()
+        assert eq6.stabilized is False and eq6.refine == 0
+        assert prod.stabilized is True
+        assert solver_cfg('nystrom_eq6') != solver_cfg('nystrom')
+
+    def test_stabilized_knob_is_nystrom_only(self):
+        from repro.core import HypergradConfig
+        with pytest.raises(ValueError, match='stabilized'):
+            HypergradConfig(solver='cg', stabilized=False).build()

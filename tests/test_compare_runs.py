@@ -1,0 +1,151 @@
+"""compare_runs contract tests: clean self-diff, named regressions, schema.
+
+The comparison layer is what turns persisted BENCH files into an
+enforceable trajectory, so its failure modes are pinned: identical runs
+diff clean (exit 0), each injected regression class exits nonzero *naming
+the offending cell*, and cross-schema comparisons refuse with a clear
+message instead of a KeyError deep in row access.
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks.common import bench_row
+from benchmarks.compare_runs import main as compare_main
+from repro.bench import CompareError, compare_docs, format_report
+
+
+def _doc(name='unit'):
+    rows = [
+        bench_row(solver='nystrom', backend='tree', m=1,
+                  applies_per_sec=100.0, wall_seconds=0.01,
+                  problem='logreg_wd:D=8', hvp_count=4,
+                  hypergrad_error=0.10, grid={'k': 4, 'rho': 0.01}),
+        bench_row(solver='cg', backend='tree', m=1,
+                  applies_per_sec=50.0, wall_seconds=0.02,
+                  problem='logreg_wd:D=8', hvp_count=8,
+                  hypergrad_error=0.001, grid={'k': 8, 'rho': 0.01}),
+    ]
+    return {'schema_version': 2, 'name': name, 'created_unix': 0.0,
+            'meta': {}, 'rows': rows}
+
+
+def _write(tmp_path, name, doc):
+    path = tmp_path / f'{name}.json'
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+class TestCompareDocs:
+    def test_identical_runs_diff_clean(self):
+        report = compare_docs(_doc(), _doc())
+        assert report.ok and not report.regressions and not report.missing
+
+    def test_wall_regression_beyond_tolerance_flags_cell(self):
+        new = _doc()
+        new['rows'][0]['wall_seconds'] *= 2.0
+        report = compare_docs(_doc(), new, tol_wall=0.25)
+        assert not report.ok
+        (reg,) = [d for d in report.regressions if d.field == 'wall_seconds']
+        assert 'solver=nystrom' in reg.cell and 'k=4' in reg.cell
+
+    def test_wall_within_tolerance_passes(self):
+        new = _doc()
+        new['rows'][0]['wall_seconds'] *= 1.1
+        new['rows'][0]['applies_per_sec'] /= 1.1
+        assert compare_docs(_doc(), new, tol_wall=0.25).ok
+
+    def test_no_wall_skips_timing_but_not_error(self):
+        new = _doc()
+        new['rows'][0]['wall_seconds'] *= 100.0
+        assert compare_docs(_doc(), new, check_wall=False).ok
+        new['rows'][1]['hypergrad_error'] *= 10.0
+        report = compare_docs(_doc(), new, check_wall=False)
+        (reg,) = report.regressions
+        assert reg.field == 'hypergrad_error' and 'solver=cg' in reg.cell
+
+    def test_error_regression_beyond_tolerance_flags_cell(self):
+        new = _doc()
+        new['rows'][1]['hypergrad_error'] = 0.5
+        report = compare_docs(_doc(), new, tol_error=0.25)
+        (reg,) = report.regressions
+        assert reg.field == 'hypergrad_error'
+        assert reg.base == pytest.approx(0.001)
+        assert reg.new == pytest.approx(0.5)
+
+    def test_atol_floor_forgives_near_zero_baselines(self):
+        base, new = _doc(), _doc()
+        base['rows'][1]['hypergrad_error'] = 0.0
+        new['rows'][1]['hypergrad_error'] = 1e-9
+        assert compare_docs(base, new, atol_error=1e-6).ok
+
+    def test_any_hvp_count_increase_regresses(self):
+        new = _doc()
+        new['rows'][0]['hvp_count'] += 1
+        report = compare_docs(_doc(), new)
+        (reg,) = report.regressions
+        assert reg.field == 'hvp_count'
+
+    def test_missing_baseline_cell_fails_named(self):
+        new = _doc()
+        del new['rows'][1]
+        report = compare_docs(_doc(), new)
+        assert not report.ok
+        (cell,) = report.missing
+        assert 'solver=cg' in cell
+        assert 'MISSING' in format_report(report)
+
+    def test_new_only_cells_are_additions_not_failures(self):
+        new = _doc()
+        new['rows'].append(bench_row(
+            solver='neumann', backend='tree', m=1, applies_per_sec=10.0,
+            wall_seconds=0.1, problem='logreg_wd:D=8', hvp_count=4))
+        report = compare_docs(_doc(), new)
+        assert report.ok and len(report.added) == 1
+
+    def test_schema_mismatch_is_a_clear_error_not_keyerror(self):
+        v1 = _doc()
+        v1['schema_version'] = 1
+        with pytest.raises(CompareError, match='schema_version mismatch'):
+            compare_docs(v1, _doc())
+
+    def test_duplicate_cells_refuse_to_diff(self):
+        dup = _doc()
+        dup['rows'].append(copy.deepcopy(dup['rows'][0]))
+        with pytest.raises(CompareError, match='duplicate cell'):
+            compare_docs(dup, _doc())
+
+
+class TestCli:
+    def test_identical_exit_zero(self, tmp_path, capsys):
+        base = _write(tmp_path, 'base', _doc())
+        assert compare_main([base, base]) == 0
+        assert 'clean' in capsys.readouterr().out
+
+    def test_injected_regression_exits_nonzero_naming_cell(self, tmp_path,
+                                                           capsys):
+        bad = _doc()
+        bad['rows'][0]['wall_seconds'] *= 3.0
+        rc = compare_main([_write(tmp_path, 'base', _doc()),
+                           _write(tmp_path, 'bad', bad)])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert 'REGRESSION' in out and 'solver=nystrom' in out
+
+    def test_no_wall_flag(self, tmp_path):
+        bad = _doc()
+        bad['rows'][0]['wall_seconds'] *= 3.0
+        base = _write(tmp_path, 'base', _doc())
+        new = _write(tmp_path, 'bad', bad)
+        assert compare_main([base, new]) == 1
+        assert compare_main([base, new, '--no-wall']) == 0
+
+    def test_v1_vs_v2_exits_two_with_message(self, tmp_path, capsys):
+        v1 = _doc()
+        v1['schema_version'] = 1
+        rc = compare_main([_write(tmp_path, 'v1', v1),
+                           _write(tmp_path, 'v2', _doc())])
+        out = capsys.readouterr().out
+        assert rc == 2
+        assert 'schema_version mismatch' in out and 'KeyError' not in out
