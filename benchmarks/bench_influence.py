@@ -8,6 +8,13 @@ sketch construction excluded — they amortize over every query), so the m
 sweep shows the amortization directly: Nyström's per-query cost falls with
 m while CG pays its full iteration chain per query.
 
+A second table measures attribution *quality*: on a separate problem sized
+so the exact IHVP is affordable (p HVPs — ``--quality-d/--quality-width``),
+each solver's top-k retrieved training examples are scored by Jaccard@k
+overlap against the exact solver's retrieval, per query, averaged. These
+rows carry ``jaccard_vs_exact`` (exact's own row is 1.0 by construction)
+and ``phase='quality'`` so compare_runs diffs them as their own cells.
+
 Rows are persisted as ``BENCH_influence.json`` (schema in
 benchmarks/common.py; validated by benchmarks/check_bench_schema.py).
 
@@ -21,8 +28,62 @@ from benchmarks.common import bench_row, emit, write_bench
 from repro.core import HypergradConfig, get_problem, influence
 
 
+def jaccard_at_k(a, b) -> float:
+    """|A ∩ B| / |A ∪ B| of two index sets (rows of retrieved indices)."""
+    sa, sb = set(int(i) for i in a), set(int(i) for i in b)
+    union = sa | sb
+    return len(sa & sb) / len(union) if union else 1.0
+
+
+def run_quality(m: int = 4, k: int = 8, top_k: int = 10,
+                train_steps: int = 50, d: int = 8, width: int = 8,
+                rho: float = 1e-1):
+    """Nyström-vs-CG-vs-exact retrieval agreement on one reweighting-substrate
+    influence problem, small enough that the exact oracle (p HVPs) runs in
+    CI. Returns quality rows keyed ``phase='quality'``.
+
+    Default ρ=1e-1: at non-converged params the Hessian has near-null
+    directions, and at tiny damping the *exact* inverse is dominated by
+    them — every approximate solver then disagrees with the oracle roughly
+    equally (Jaccard ≈ noise) and the table says nothing. Moderate damping
+    is the regime influence functions are actually run in, and where the
+    Nyström-vs-CG fidelity ordering is visible.
+    """
+    problem = get_problem('influence', d=d, width=width)
+    queries = problem.reference['queries'](m)
+    configs = {
+        'exact': HypergradConfig(solver='exact', rho=rho),
+        'nystrom': HypergradConfig(solver='nystrom', k=k, rho=rho),
+        'cg': HypergradConfig(solver='cg', k=k, rho=rho),
+    }
+    results, walls = {}, {}
+    params = None
+    for name, cfg in configs.items():
+        t0 = time.time()
+        res = influence(problem, cfg, queries, params=params,
+                        top_k=top_k, train_steps=train_steps)
+        walls[name] = time.time() - t0
+        params = res.params              # train once, share across solvers
+        results[name] = res
+    rows = []
+    for name, res in results.items():
+        jac = sum(jaccard_at_k(res.indices[q], results['exact'].indices[q])
+                  for q in range(m)) / m
+        rows.append(bench_row(
+            solver=name, backend='tree', m=m,
+            applies_per_sec=m / walls[name], wall_seconds=walls[name],
+            problem='influence', hvp_count=res.hvp_count,
+            phase='quality', jaccard_vs_exact=round(jac, 6),
+            top_k=top_k, k=k, d=d, width=width))
+        emit('bench_influence_quality', walls[name] * 1e6,
+             f'solver={name} m={m} top_k={top_k} '
+             f'jaccard_vs_exact={jac:.3f} hvps={res.hvp_count}')
+    return rows
+
+
 def run(m_values=(1, 8, 32), k: int = 16, top_k: int = 5,
-        train_steps: int = 100, d: int = 16):
+        train_steps: int = 100, d: int = 16, quality: bool = True,
+        quality_d: int = 8, quality_width: int = 8):
     problem = get_problem('influence', d=d)
     rows = []
     for solver_name in ('nystrom', 'cg'):
@@ -47,6 +108,9 @@ def run(m_values=(1, 8, 32), k: int = 16, top_k: int = 5,
             emit('bench_influence', wall * 1e6,
                  f'solver={solver_name} m={m} k={k} top_k={top_k} '
                  f'hvps={res.hvp_count} queries_per_s={m / wall:.1f}')
+    if quality:
+        rows += run_quality(k=min(k, 8), train_steps=min(train_steps, 50),
+                            d=quality_d, width=quality_width)
     write_bench('influence', rows,
                 meta=dict(train_steps=train_steps, d=d))
     return rows
@@ -60,9 +124,17 @@ def main(argv=None):
     ap.add_argument('--top-k', type=int, default=5)
     ap.add_argument('--train-steps', type=int, default=100)
     ap.add_argument('--d', type=int, default=16)
+    ap.add_argument('--no-quality', action='store_true',
+                    help='skip the Nyström-vs-CG-vs-exact Jaccard@k table')
+    ap.add_argument('--quality-d', type=int, default=8,
+                    help='input dim of the small quality problem (the exact '
+                         'oracle pays p HVPs, so keep p modest)')
+    ap.add_argument('--quality-width', type=int, default=8,
+                    help='MLP hidden width of the small quality problem')
     args = ap.parse_args(argv)
     run(m_values=tuple(args.m), k=args.k, top_k=args.top_k,
-        train_steps=args.train_steps, d=args.d)
+        train_steps=args.train_steps, d=args.d, quality=not args.no_quality,
+        quality_d=args.quality_d, quality_width=args.quality_width)
 
 
 if __name__ == '__main__':

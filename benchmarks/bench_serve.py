@@ -1,0 +1,138 @@
+"""Serving-tier benchmark: cold per-request influence vs the warm store path.
+
+Measures exactly the amortization the serving tier exists for. Two phases
+on one toy influence problem (trained once, shared):
+
+  cold   every query is a standalone ``influence()`` call — fresh sketch
+         (k HVPs), fresh jitted top-k scan, per query. What callers paid
+         before ``repro.serve``.
+  warm   queries go through :class:`repro.serve.InfluenceService`: the
+         sketch comes from the :class:`SketchStore` (ZERO build HVPs on
+         the request path — the warm rows pin ``hvp_count == 0``), the
+         top-k scan's jit caches persist across flushes, and queries ride
+         ``apply_matrix`` in (p, m) blocks. One warm row per ``--block-sizes``
+         entry; flushing is driven explicitly (submit-all-then-flush) so
+         flush counts — and therefore ``cache_hit_rate`` — are
+         deterministic and CI-gateable as cell identity.
+
+``meta.warm_vs_cold_qps`` records the best warm/cold throughput ratio (the
+PR 8 acceptance floor is 5× on this toy problem, tree backend, CPU).
+
+Rows are persisted as ``BENCH_serve.json``; latency percentiles and queue
+depths are measurement fields (waived across machines by compare_runs),
+while phase/m/cache_hit_rate are identity — a vanished warm cell or a
+changed hit rate fails the CI gate.
+
+CLI (CI bench-smoke runs this at toy size):
+  PYTHONPATH=src python -m benchmarks.bench_serve --queries 8 --k 4 \
+      --train-steps 10 --d 8 --width 8 --block-sizes 1 4
+"""
+import sys
+import time
+
+if __package__ in (None, ''):          # `python benchmarks/bench_serve.py`
+    import os
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, 'src')):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+from benchmarks.common import bench_row, emit, write_bench
+
+
+def run(queries: int = 8, k: int = 4, top_k: int = 5, train_steps: int = 10,
+        d: int = 8, width: int = 8, block_sizes=(1, 4), rho: float = 1e-2):
+    import jax
+
+    from repro.core import (HypergradConfig, get_problem, influence,
+                            train_influence_params)
+    from repro.serve import InfluenceService, SketchStore
+
+    problem = get_problem('influence', d=d, width=width)
+    params = train_influence_params(problem, train_steps=train_steps)
+    pool = problem.reference['queries'](queries)
+    cfg = HypergradConfig(solver='nystrom', k=k, rho=rho)
+    rows = []
+
+    # ---- cold: a fresh influence() call per query (no store) ----
+    t0 = time.perf_counter()
+    cold_hvps = 0
+    cold_indices = []
+    for q in range(queries):
+        one = jax.tree.map(lambda x: x[q:q + 1], pool)
+        res = influence(problem, cfg, one, params=params, top_k=top_k)
+        cold_hvps += res.hvp_count
+        cold_indices.append(res.indices[0])
+    cold_wall = time.perf_counter() - t0
+    cold_qps = queries / cold_wall
+    rows.append(bench_row(
+        solver='nystrom', backend='tree', m=1,
+        applies_per_sec=cold_qps, wall_seconds=cold_wall,
+        problem='influence', hvp_count=cold_hvps,
+        phase='cold', cache_hit_rate=0.0,
+        queries=queries, k=k, top_k=top_k, d=d, width=width))
+    emit('bench_serve', cold_wall * 1e6,
+         f'phase=cold queries={queries} k={k} hvps={cold_hvps} '
+         f'qps={cold_qps:.2f}')
+
+    # ---- warm: the serving tier, one row per block size ----
+    store = SketchStore()
+    service = InfluenceService(problem, cfg, params=params, store=store,
+                               top_k=top_k, max_delay=60.0,
+                               max_queue=max(64, queries))
+    service.prepare()                  # the ONE build; off the request path
+    warm_qps_by_m = {}
+    for bs in block_sizes:
+        service.batcher.block_size = int(bs)
+        service.reset_metrics()
+        tickets = [service.submit(jax.tree.map(lambda x: x[q], pool))
+                   for q in range(queries)]
+        service.flush()                # deterministic ceil(queries/bs) flushes
+        for q, t in enumerate(tickets):
+            resp = service.result(t)
+            assert not resp.degraded and resp.cache_hit
+        row = service.bench_rows(phase='warm')[0]
+        assert row['hvp_count'] == 0, (
+            f'warm path billed {row["hvp_count"]} HVPs — the store missed')
+        row['m'] = int(bs)             # the swept width, not the calibrated
+        rows.append(bench_row(**row, queries=queries, k=k, top_k=top_k,
+                              d=d, width=width))
+        warm_qps_by_m[int(bs)] = row['applies_per_sec']
+        emit('bench_serve', row['wall_seconds'] * 1e6,
+             f'phase=warm m={bs} queries={queries} hvps=0 '
+             f'hit_rate={row["cache_hit_rate"]:.3f} '
+             f'qps={row["applies_per_sec"]:.2f} '
+             f'p95={row["latency_p95_ms"]:.1f}ms')
+
+    ratio = max(warm_qps_by_m.values()) / cold_qps
+    emit('bench_serve', 0.0,
+         f'warm_vs_cold_qps={ratio:.1f}x (best warm m='
+         f'{max(warm_qps_by_m, key=warm_qps_by_m.get)})')
+    write_bench('serve', rows,
+                meta=dict(queries=queries, k=k, top_k=top_k, d=d,
+                          width=width, block_sizes=list(block_sizes),
+                          train_steps=train_steps,
+                          warm_vs_cold_qps=round(ratio, 3)))
+    return rows, ratio
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--queries', type=int, default=8,
+                    help='query pool size (each phase answers all of them)')
+    ap.add_argument('--k', type=int, default=4, help='sketch rank')
+    ap.add_argument('--top-k', type=int, default=5)
+    ap.add_argument('--train-steps', type=int, default=10)
+    ap.add_argument('--d', type=int, default=8, help='input dim')
+    ap.add_argument('--width', type=int, default=8, help='MLP hidden width')
+    ap.add_argument('--block-sizes', type=int, nargs='+', default=[1, 4],
+                    help='batcher block widths for the warm sweep')
+    args = ap.parse_args(argv)
+    run(queries=args.queries, k=args.k, top_k=args.top_k,
+        train_steps=args.train_steps, d=args.d, width=args.width,
+        block_sizes=tuple(args.block_sizes))
+
+
+if __name__ == '__main__':
+    main()

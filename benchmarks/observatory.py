@@ -41,6 +41,13 @@ def main(argv=None) -> int:
                          '(colons separate kwargs; registry names)')
     ap.add_argument('--solvers', default='nystrom,cg,neumann,exact',
                     help='comma-separated SOLVERS registry names')
+    ap.add_argument('--backends', default='tree',
+                    help="comma-separated backend grid axis (e.g. "
+                         "'tree,flat'); applies to solvers that build a "
+                         'backend (nystrom) — others measure once per grid '
+                         'point. Backend is part of compare_runs cell '
+                         'identity, so tree and flat cells diff '
+                         'independently')
     ap.add_argument('--grid', default=None,
                     help="accuracy knobs, 'k=2:5:10,rho=0.01' (commas "
                          'separate axes, colons values); default '
@@ -74,12 +81,13 @@ def main(argv=None) -> int:
         solvers=[s for s in args.solvers.split(',') if s],
         grid=parse_grid(args.grid) if args.grid else None,
         tasks=args.tasks,
+        backends=tuple(b for b in args.backends.split(',') if b),
         vary=parse_vary(args.vary) if args.vary else None,
         steps=args.steps_per_outer, batch_size=args.batch_size,
         seed=args.seed, oracle_rho=args.oracle_rho, reps=args.reps,
         max_oracle_p=args.max_oracle_p, progress=print)
 
-    rows = [bench_row(solver=c.solver, backend='tree', m=1,
+    rows = [bench_row(solver=c.solver, backend=c.backend, m=1,
                       applies_per_sec=c.applies_per_sec,
                       wall_seconds=c.wall_seconds, problem=c.problem,
                       hvp_count=c.hvp_count,

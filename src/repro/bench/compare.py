@@ -35,10 +35,16 @@ import json
 
 # Fields that are measured outcomes rather than cell identity. Includes the
 # legacy/extra measurement names some benches emit (err_max, seconds, ...)
-# so they never end up splitting cell identity.
+# so they never end up splitting cell identity. The serving tier's latency/
+# queue metrics are machine-varying measurements; its deterministic fields
+# (phase, cache_hit_rate) are deliberately NOT listed — they are identity,
+# so a changed hit rate or a vanished warm cell fails the diff as MISSING.
 MEASURE_KEYS = frozenset({
     'applies_per_sec', 'wall_seconds', 'hypergrad_error', 'hvp_count',
     'err_max', 'hvps', 'sketch_mb', 'seconds', 'us_per_apply',
+    'latency_mean_ms', 'latency_p50_ms', 'latency_p95_ms', 'latency_max_ms',
+    'queue_depth_mean', 'queue_depth_max', 'degraded_flushes',
+    'deadline_misses', 'jaccard_vs_exact',
 })
 
 
@@ -153,6 +159,17 @@ def compare_docs(base: dict, new: dict, *, tol_wall: float = 0.25,
                 cell, 'hypergrad_error', b['hypergrad_error'],
                 n['hypergrad_error'], n['hypergrad_error'] > limit,
                 note=f'limit={limit:.3e}'))
+        if 'jaccard_vs_exact' in b and 'jaccard_vs_exact' in n:
+            floor = b['jaccard_vs_exact'] * (1 - tol_error) - atol_error
+            diffs.append(CellDiff(
+                cell, 'jaccard_vs_exact', b['jaccard_vs_exact'],
+                n['jaccard_vs_exact'], n['jaccard_vs_exact'] < floor,
+                note=f'floor={floor:.3f} (retrieval quality vs exact)'))
+        if check_wall and 'latency_p95_ms' in b and 'latency_p95_ms' in n:
+            bad = n['latency_p95_ms'] > b['latency_p95_ms'] * (1 + tol_wall)
+            diffs.append(CellDiff(
+                cell, 'latency_p95_ms', b['latency_p95_ms'],
+                n['latency_p95_ms'], bad, note=f'tol={tol_wall:.0%}'))
         if 'hvp_count' in b and 'hvp_count' in n:
             diffs.append(CellDiff(
                 cell, 'hvp_count', b['hvp_count'], n['hvp_count'],

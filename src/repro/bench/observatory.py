@@ -294,12 +294,19 @@ class SweepCell:
     hvp_count: int
     wall_seconds: float
     applies_per_sec: float
+    backend: str = 'tree'
 
 
 def measure_cell(bundle: PopulationBundle, solver_name: str, point: dict,
-                 *, reps: int = 2) -> SweepCell:
-    """Measure one (solver, grid point) cell against a built population."""
-    solver = HypergradConfig(solver=solver_name, **point).build()
+                 *, backend: str = 'tree', reps: int = 2) -> SweepCell:
+    """Measure one (solver, grid point, backend) cell against a built
+    population. ``backend`` reaches the solver only when its ``SolverSpec``
+    declares ``builds_backend`` (Nyström's operand layouts); for the others
+    it is recorded as-is in the cell — they have no backend dial."""
+    cfg = dict(point)
+    if SOLVERS[solver_name].builds_backend:
+        cfg['backend'] = backend
+    solver = HypergradConfig(solver=solver_name, **cfg).build()
     fn = jax.jit(jax.vmap(
         lambda th, ph, ib, ob, key: hypergrad_at(
             bundle.problem, solver, th, ph, ib, ob, rng=key)))
@@ -317,28 +324,37 @@ def measure_cell(bundle: PopulationBundle, solver_name: str, point: dict,
         tasks=bundle.tasks, hypergrad_error=float(jnp.mean(errs)),
         err_max=float(jnp.max(errs)),
         hvp_count=accounted_hvps(solver, bundle.problem, 1),
-        wall_seconds=wall, applies_per_sec=bundle.tasks / max(wall, 1e-12))
+        wall_seconds=wall, applies_per_sec=bundle.tasks / max(wall, 1e-12),
+        backend=backend)
 
 
 def run_sweep(problem_specs=DEFAULT_PROBLEM_SPECS,
               solvers=('nystrom', 'cg', 'neumann', 'exact'),
               grid: dict[str, tuple] | None = None, *, tasks: int = 3,
+              backends: tuple[str, ...] = ('tree',),
               vary: tuple[str, tuple] | None = None, steps: int | None = None,
               batch_size: int | None = None, seed: int = 0,
               oracle_rho: float = 0.0, reps: int = 2,
               max_oracle_p: int = DEFAULT_MAX_ORACLE_P,
               progress: Callable[[str], None] | None = None,
               ) -> list[SweepCell]:
-    """The full sweep: problems × solvers × per-solver grid points.
+    """The full sweep: problems × solvers × per-solver grid points ×
+    backends.
 
     Unknown solver names raise before any measurement (the CLI's
     ``--solvers`` filter therefore selects exactly registry entries). The
-    population (adaptation + oracle) is built once per problem and shared
-    by all its cells.
+    ``backends`` axis applies only to solvers whose ``SolverSpec`` declares
+    ``builds_backend`` (Nyström); backend-less solvers measure each grid
+    point once, tagged 'tree'. The population (adaptation + oracle) is
+    built once per problem and shared by all its cells.
     """
     say = progress or (lambda msg: None)
     grid = DEFAULT_GRID if grid is None else grid
     points = {s: solver_grid_points(s, grid) for s in solvers}
+    for s in solvers:                     # validate before any measurement
+        if not SOLVERS[s].builds_backend and len(backends) > 1:
+            say(f'[observatory] note: {s} has no backend dial; measuring '
+                f"its cells once (tagged 'tree')")
     if vary is not None:
         tasks = len(vary[1])
     cells = []
@@ -350,11 +366,18 @@ def run_sweep(problem_specs=DEFAULT_PROBLEM_SPECS,
         say(f'[observatory] {spec}: population of {bundle.tasks} built '
             f'(p={bundle.p}, oracle rho={oracle_rho})')
         for solver_name in solvers:
+            solver_backends = (tuple(backends)
+                               if SOLVERS[solver_name].builds_backend
+                               else ('tree',))
             for point in points[solver_name]:
-                cell = measure_cell(bundle, solver_name, point, reps=reps)
-                cells.append(cell)
-                knobs = ','.join(f'{k}={v}' for k, v in point.items()) or '-'
-                say(f'[observatory]   {solver_name:<8} {knobs:<16} '
-                    f'err={cell.hypergrad_error:.3e} '
-                    f'hvps={cell.hvp_count} wall={cell.wall_seconds:.3f}s')
+                for backend in solver_backends:
+                    cell = measure_cell(bundle, solver_name, point,
+                                        backend=backend, reps=reps)
+                    cells.append(cell)
+                    knobs = ','.join(f'{k}={v}'
+                                     for k, v in point.items()) or '-'
+                    say(f'[observatory]   {solver_name:<8} {knobs:<16} '
+                        f'be={backend:<6} err={cell.hypergrad_error:.3e} '
+                        f'hvps={cell.hvp_count} '
+                        f'wall={cell.wall_seconds:.3f}s')
     return cells

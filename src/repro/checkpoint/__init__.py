@@ -1,3 +1,4 @@
-from repro.checkpoint.manager import CheckpointManager, restore, save
+from repro.checkpoint.manager import (CheckpointManager, params_digest,
+                                      restore, save)
 
-__all__ = ['CheckpointManager', 'save', 'restore']
+__all__ = ['CheckpointManager', 'params_digest', 'save', 'restore']

@@ -19,6 +19,7 @@ training-loop stall to the D2H copy (the standard async-checkpoint trick).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -37,6 +38,26 @@ def _flatten(tree) -> dict[str, np.ndarray]:
                        for p in path)
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
+
+
+def params_digest(tree: Any) -> str:
+    """Content digest of a parameter pytree (sha256 over path, shape, dtype
+    and raw bytes of every leaf, in deterministic path order).
+
+    The checkpoint-identity half of a serving-cache key: two trees digest
+    equal iff a checkpoint save/restore round-trip would reproduce one from
+    the other, so a cached solver state keyed on the digest is exactly as
+    reusable as the checkpoint it was prepared against. Costs one D2H copy
+    of the tree (the same copy ``save`` makes) plus a hash pass.
+    """
+    h = hashlib.sha256()
+    flat = _flatten(tree)
+    for key in sorted(flat):
+        arr = np.ascontiguousarray(flat[key])
+        h.update(key.encode())
+        h.update(repr((arr.shape, str(arr.dtype))).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()[:16]
 
 
 def save(directory: str, step: int, tree: Any, extra: dict | None = None):

@@ -28,12 +28,15 @@ from repro.core.problem import (BatchSource, BilevelProblem, BilevelResult,
                                 InfluenceProblem, InfluenceResult, PROBLEMS,
                                 accounted_hvps, get_problem, hypergrad_at,
                                 hypergrad_error, hypergrad_reference,
-                                influence, register_problem, solve)
+                                influence, influence_build_hvps,
+                                influence_curvature_hvp, make_topk_scanner,
+                                register_problem, solve,
+                                train_influence_params)
 from repro.core.solvers import (SOLVERS, CGIHVP, DenseFactor, ExactIHVP,
                                 IterativeOperator, NeumannIHVP, NystromIHVP,
                                 NystromSketch, SketchPolicy, SketchState,
                                 SolverSpec, nystrom_inverse_dense,
-                                query_width)
+                                query_width, solver_fingerprint, state_nbytes)
 from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_cast, tree_norm, tree_random_like,
                                   tree_scale, tree_size, tree_sub, tree_vdot,
@@ -43,8 +46,11 @@ __all__ = [
     'BACKENDS', 'BatchSource', 'BilevelProblem', 'BilevelResult',
     'BilevelState', 'BilevelTrainer', 'DenseFactor', 'PROBLEMS',
     'InfluenceProblem', 'InfluenceResult', 'influence',
+    'influence_build_hvps', 'influence_curvature_hvp', 'make_topk_scanner',
+    'train_influence_params',
     'accounted_hvps', 'get_problem', 'hypergrad_at', 'hypergrad_error',
     'hypergrad_reference', 'register_problem', 'solve',
+    'solver_fingerprint', 'state_nbytes',
     'FlatBackend', 'FlatShardedBackend', 'HypergradConfig',
     'IterativeOperator', 'PallasBackend', 'ShardedOperand', 'SOLVERS',
     'SketchPolicy', 'SketchState', 'SolverSpec', 'TreeBackend',

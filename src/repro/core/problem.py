@@ -519,11 +519,110 @@ def _per_example_grads(loss, params, batch):
     return jax.vmap(one)(batch)
 
 
+def make_topk_scanner(loss, params, source, batch_size: int):
+    """The streamed top-k scorer, factored so it amortizes across calls.
+
+    Returns ``scan(S, top_k) -> (vals, idxs)``: given the solved query block
+    S = (H+ρI)⁻¹∇L(q) (a param pytree with a trailing (m,) axis), sweeps the
+    ordered training stream in ``batch_size`` slices, folds each (m, b)
+    influence tile into a running ``jax.lax.top_k`` merge, and returns the
+    (m, top_k) descending scores plus matching global indices — the full
+    n_train × m score matrix never materializes.
+
+    The jitted tile/merge kernels close over (loss, params, source) ONCE and
+    take S as an argument, so a long-lived consumer — the influence *service*
+    (``repro.serve``), which answers many query flushes against one trained
+    model — pays tracing/compilation per block *width*, not per call.
+    ``influence()`` drives the same scanner for its one-shot path.
+    """
+    @jax.jit
+    def score_tile(S, batch):
+        """(m, b) influence tile for one ordered training slice."""
+        G = _per_example_grads(loss, params, batch)
+        parts = jax.tree.leaves(jax.tree.map(
+            lambda s, g: jnp.einsum('...m,b...->mb', s.astype(jnp.float32),
+                                    g.astype(jnp.float32)), S, G))
+        return -sum(parts)
+
+    @jax.jit
+    def merge(vals, idxs, tile, base):
+        m, b = tile.shape
+        gidx = base + jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32), (m, b))
+        cand_v = jnp.concatenate([vals, tile], axis=1)
+        cand_i = jnp.concatenate([idxs, gidx], axis=1)
+        v, sel = jax.lax.top_k(cand_v, vals.shape[1])
+        return v, jnp.take_along_axis(cand_i, sel, axis=1)
+
+    n = source.n_train
+
+    def scan(S, top_k: int):
+        m = jax.tree.leaves(S)[0].shape[-1]
+        kk = min(top_k, n)
+        vals = jnp.full((m, kk), -jnp.inf, jnp.float32)
+        idxs = jnp.full((m, kk), -1, jnp.int32)
+        for start in range(0, n, batch_size):
+            batch = source.train_slice(start, batch_size)
+            vals, idxs = merge(vals, idxs, score_tile(S, batch),
+                               jnp.int32(start))
+        return vals, idxs
+
+    return scan
+
+
+def train_influence_params(problem: InfluenceProblem, *,
+                           train_steps: int | None = None,
+                           batch_size: int | None = None,
+                           seed: int = 0) -> PyTree:
+    """Plain-SGD training of an :class:`InfluenceProblem`'s model — the
+    params every influence query is scored at. Factored out of
+    :func:`influence` so long-lived consumers (the serving tier, benchmark
+    sweeps) train once and share the result across many calls."""
+    from repro.optim import sgd
+    d = {**_TRAIN_DEFAULTS, **problem.defaults}
+    bs = batch_size if batch_size is not None else d['batch_size']
+    steps = (train_steps if train_steps is not None
+             else d.get('train_steps', 200))
+    params = problem.init_params(jax.random.PRNGKey(seed))
+    opt = sgd(d['inner_lr'])
+    ost = opt.init(params)
+
+    @jax.jit
+    def train_step(p, s, b, i):
+        g = jax.grad(problem.loss)(p, b)
+        return opt.apply(g, s, p, i)
+
+    for i in range(steps):
+        params, ost = train_step(params, ost,
+                                 problem.data.train_batch(i, bs),
+                                 jnp.int32(i))
+    return params
+
+
+def influence_curvature_hvp(problem: InfluenceProblem, params: PyTree,
+                            source: Any, batch_size: int):
+    """The curvature HVP every influence apply solves against: the loss
+    Hessian at ``params`` over one large ordered training slice (shared by
+    :func:`influence` and the serving tier so both linearize identically)."""
+    from repro.core.hvp import make_hvp
+    n = source.n_train
+    curv = source.train_slice(0, min(n, max(batch_size, 1024)))
+    return make_hvp(lambda p, hp, b: problem.loss(p, b), params, None, curv)
+
+
+def influence_build_hvps(solver, params: PyTree) -> int:
+    """HVPs one state build bills: k (Nyström) or p (exact column scan)."""
+    hvps = getattr(solver, 'k', None)
+    if hvps is None:
+        hvps = sum(int(math.prod(l.shape)) for l in jax.tree.leaves(params))
+    return int(hvps)
+
+
 def influence(problem: InfluenceProblem, config: HypergradConfig | Any = None,
               queries: Any = None, source: Any = None, *,
               params: PyTree | None = None, top_k: int = 10,
               batch_size: int | None = None, train_steps: int | None = None,
-              self_influence: bool = False, seed: int = 0) -> InfluenceResult:
+              self_influence: bool = False, seed: int = 0,
+              store: Any = None) -> InfluenceResult:
     """Score training examples against m queries with one prepared sketch.
 
     For each query example q (a row of ``queries``, a batch pytree with
@@ -535,17 +634,23 @@ def influence(problem: InfluenceProblem, config: HypergradConfig | Any = None,
     and returns the top-``top_k`` (score, index) pairs per query. The m
     query IHVPs sᵩ = (H+ρI)⁻¹∇L(q) ride ``solver.apply_matrix`` as ONE
     (p, m) block — k sketch HVPs total, then two GEMM passes — and the
-    training sweep is a streamed contraction: per ``batch_size`` slice, an
-    (m, b) score tile is folded into a running ``jax.lax.top_k`` merge, so
-    the full n_train × m score matrix never materializes.
+    training sweep is a streamed contraction (:func:`make_topk_scanner`):
+    per ``batch_size`` slice, an (m, b) score tile is folded into a running
+    ``jax.lax.top_k`` merge, so the full n_train × m score matrix never
+    materializes.
 
     ``params=None`` first trains the model (plain SGD, ``train_steps``
     steps on ``problem.data.train_batch``); pass trained params to skip.
     ``config`` is a HypergradConfig or built solver (uniform protocol).
+
+    ``store``: an optional :class:`repro.serve.SketchStore`. When given (and
+    the solver is amortizable), the prepared state is fetched by content key
+    — a digest of ``params`` plus the solver's state fingerprint — instead
+    of rebuilt: a warm hit answers all m queries with ZERO sketch-build HVPs
+    (``result.hvp_count == 0``), which is the serving tier's whole point.
+    The key is ρ-free, so one cached sketch serves a damping sweep.
     """
-    from repro.core.hvp import make_hvp
     from repro.core.tree_util import PyTreeIndexer
-    from repro.optim import sgd
 
     if config is None:
         config = HypergradConfig()
@@ -562,31 +667,25 @@ def influence(problem: InfluenceProblem, config: HypergradConfig | Any = None,
                 f'{type(source).__name__} lacks {attr!r}')
     d = {**_TRAIN_DEFAULTS, **problem.defaults}
     bs = batch_size if batch_size is not None else d['batch_size']
-    steps = (train_steps if train_steps is not None
-             else d.get('train_steps', 200))
     rng = jax.random.PRNGKey(seed)
 
     t0 = time.time()
     if params is None:
-        params = problem.init_params(rng)
-        opt = sgd(d['inner_lr'])
-        ost = opt.init(params)
-
-        @jax.jit
-        def train_step(p, s, b, i):
-            g = jax.grad(problem.loss)(p, b)
-            return opt.apply(g, s, p, i)
-
-        for i in range(steps):
-            params, ost = train_step(params, ost,
-                                     problem.data.train_batch(i, bs),
-                                     jnp.int32(i))
+        params = train_influence_params(problem, train_steps=train_steps,
+                                        batch_size=bs, seed=seed)
 
     # curvature at the trained params, over one large ordered slice
-    n = source.n_train
-    curv = source.train_slice(0, min(n, max(bs, 1024)))
-    hvp = make_hvp(lambda p, hp, b: problem.loss(p, b), params, None, curv)
-    state = solver.prepare(hvp, PyTreeIndexer(params), rng)
+    hvp = influence_curvature_hvp(problem, params, source, bs)
+    amortizable = getattr(type(solver), 'amortizable', False)
+    built = True
+    if store is not None and amortizable:
+        from repro.serve import sketch_key
+        key = sketch_key(params, solver)
+        state, built = store.get_or_build(
+            key, lambda: solver.prepare(hvp, PyTreeIndexer(params), rng),
+            build_hvps=influence_build_hvps(solver, params))
+    else:
+        state = solver.prepare(hvp, PyTreeIndexer(params), rng)
 
     # m query gradients → one (p, m) block → one apply_matrix
     G_q = _per_example_grads(problem.loss, params, queries)
@@ -600,38 +699,13 @@ def influence(problem: InfluenceProblem, config: HypergradConfig | Any = None,
             lambda v, s: jnp.einsum('...m,...m->m', v.astype(jnp.float32),
                                     s.astype(jnp.float32)), V, S)))
 
-    @jax.jit
-    def score_tile(batch):
-        """(m, b) influence tile for one ordered training slice."""
-        G = _per_example_grads(problem.loss, params, batch)
-        parts = jax.tree.leaves(jax.tree.map(
-            lambda s, g: jnp.einsum('...m,b...->mb', s.astype(jnp.float32),
-                                    g.astype(jnp.float32)), S, G))
-        return -sum(parts)
+    scan = make_topk_scanner(problem.loss, params, source, bs)
+    vals, idxs = scan(S, top_k)
 
-    @jax.jit
-    def merge(vals, idxs, tile, base):
-        b = tile.shape[1]
-        gidx = base + jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32),
-                                       (m, b))
-        cand_v = jnp.concatenate([vals, tile], axis=1)
-        cand_i = jnp.concatenate([idxs, gidx], axis=1)
-        v, sel = jax.lax.top_k(cand_v, vals.shape[1])
-        return v, jnp.take_along_axis(cand_i, sel, axis=1)
-
-    kk = min(top_k, n)
-    vals = jnp.full((m, kk), -jnp.inf, jnp.float32)
-    idxs = jnp.full((m, kk), -1, jnp.int32)
-    for start in range(0, n, bs):
-        batch = source.train_slice(start, bs)
-        vals, idxs = merge(vals, idxs, score_tile(batch), jnp.int32(start))
-
-    if getattr(type(solver), 'amortizable', False):
-        # one state build amortized over all m queries and the whole sweep
-        hvps = getattr(solver, 'k', None)
-        if hvps is None:                        # ExactIHVP: full column scan
-            hvps = sum(int(math.prod(l.shape))
-                       for l in jax.tree.leaves(params))
+    if amortizable:
+        # one state build amortized over all m queries and the whole sweep;
+        # a warm store hit ran no build at all — the bill is genuinely zero
+        hvps = influence_build_hvps(solver, params) if built else 0
     else:
         hvps = getattr(solver, 'iters', 0) * m  # per-query iterative solves
     return InfluenceResult(problem=problem.name, scores=vals, indices=idxs,

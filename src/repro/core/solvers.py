@@ -672,6 +672,93 @@ class ExactIHVP:
 
 
 # ---------------------------------------------------------------------------
+# State sizing + identity — what a serving cache needs from a solver
+# ---------------------------------------------------------------------------
+def state_nbytes(state) -> int:
+    """Byte footprint of a prepared solver state (its pytree-of-arrays leaves).
+
+    The sketch-size accounting a byte-budgeted cache
+    (:class:`repro.serve.SketchStore`) evicts against: a NystromSketch is
+    dominated by its C/B operands (~2 · k · p · itemsize with the whitened
+    form), a DenseFactor by its p×p Hessian. Trace-local states
+    (:class:`IterativeOperator`) have no array footprint to account and are
+    rejected — they cannot outlive their trace, let alone sit in a cache.
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core.hvp import make_hvp
+    >>> from repro.core.tree_util import PyTreeIndexer
+    >>> params = {'w': jnp.zeros((6,))}
+    >>> hvp = make_hvp(lambda p, hp, b: jnp.sum(p['w'] ** 2), params,
+    ...                None, None)
+    >>> s = NystromIHVP(k=4, backend='flat').prepare(
+    ...     hvp, PyTreeIndexer(params), jax.random.PRNGKey(0))
+    >>> state_nbytes(s) >= 4 * 6 * 4      # at least the (k, p) f32 buffer
+    True
+    """
+    total = 0
+    for leaf in jax.tree.leaves(state):
+        nbytes = getattr(leaf, 'nbytes', None)
+        if nbytes is None:
+            raise TypeError(
+                f'{type(state).__name__} holds a non-array leaf '
+                f'({type(leaf).__name__}) — only amortizable solver states '
+                '(pytrees of arrays) have a byte footprint; trace-local '
+                'IterativeOperator states cannot be sized or cached')
+        total += int(nbytes)
+    return total
+
+
+def _backend_tag(backend) -> str:
+    """A stable content tag for a backend selection (string or instance)."""
+    if isinstance(backend, str):
+        return backend
+    tag = getattr(backend, 'name', type(backend).__name__)
+    dtype = getattr(backend, 'sketch_dtype', None)
+    if dtype is not None:
+        tag += f':{jnp.dtype(dtype).name}'
+    return tag
+
+
+def solver_fingerprint(solver) -> str:
+    """Content fingerprint of the *prepared-state identity* of a solver.
+
+    Two solvers with equal fingerprints prepare interchangeable states from
+    the same (params, data) point — the solver half of a serving-cache key
+    (:func:`repro.serve.sketch_key`). Fields that do not change the prepared
+    state are deliberately excluded:
+
+    * ``rho`` — sketches and dense factors are ρ-free (every apply re-solves
+      the k×k system against the *applying* solver's damping), so one cached
+      state serves a whole damping sweep;
+    * ``refine`` — apply-time residual sweeps, not state content.
+
+    Iterative solvers raise: their prepared state is trace-local, so it has
+    no cacheable identity.
+
+    >>> solver_fingerprint(NystromIHVP(k=8, rho=1e-3)) == \\
+    ...     solver_fingerprint(NystromIHVP(k=8, rho=1e-1))
+    True
+    >>> solver_fingerprint(NystromIHVP(k=8)) == \\
+    ...     solver_fingerprint(NystromIHVP(k=16))
+    False
+    """
+    if not getattr(type(solver), 'amortizable', False):
+        raise TypeError(
+            f'{type(solver).__name__} prepares a trace-local state — it has '
+            'no cacheable identity (nothing survives the trace to cache)')
+    rho_free = {'rho', 'refine'}
+    parts = [type(solver).__name__]
+    for f in sorted(dataclasses.fields(solver), key=lambda f: f.name):
+        if f.name in rho_free:
+            continue
+        value = getattr(solver, f.name)
+        if f.name == 'backend':
+            value = _backend_tag(value)
+        parts.append(f'{f.name}={value!r}')
+    return ';'.join(parts)
+
+
+# ---------------------------------------------------------------------------
 # Sketch lifecycle — build / refresh / invalidate of amortizable states
 # ---------------------------------------------------------------------------
 @jax.tree_util.register_dataclass

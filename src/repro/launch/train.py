@@ -65,6 +65,8 @@ def _run_problem(args):
         defaults={'k': 8, 'rho': 1e-2})
     problem = get_problem(args.problem)
     if isinstance(problem, InfluenceProblem):
+        if args.serve:
+            return _serve_problem(problem, hg_cfg, args)
         queries = problem.reference['queries'](args.queries)
         print(f'[train] influence problem={problem.name} '
               f'solver={args.solver} m={args.queries} top_k={args.top_k}')
@@ -87,6 +89,55 @@ def _run_problem(args):
           f'outer_loss={result.history["outer_loss"][-1]:.4f} '
           f'hvps={result.hvp_count} wall_s={result.seconds:.1f} {metrics}')
     return result
+
+
+def _serve_problem(problem, hg_cfg, args):
+    """``--problem influence --serve``: stand up the serving tier
+    (``repro.serve``) instead of a one-shot ``influence()`` call. Trains
+    once, calibrates the batcher's block size from a warmup sweep, then
+    answers ``--queries`` queries TWICE — a cold pass (first flush builds
+    the sketch into the store) and a warm pass (every flush hits the store,
+    zero build HVPs) — and prints the per-pass service stats, so the
+    amortization the store buys is visible from the CLI."""
+    import jax as _jax
+
+    from repro.serve import InfluenceService, SketchStore
+
+    store = SketchStore()
+    service = InfluenceService(problem, hg_cfg, store=store,
+                               top_k=args.top_k, train_steps=args.steps,
+                               max_delay=0.0)
+    print(f'[serve] influence problem={problem.name} solver={args.solver} '
+          f'queries={args.queries} top_k={args.top_k}')
+    rates = service.warmup()
+    print(f'[serve] calibrated block_size={service.batcher.block_size} '
+          + ' '.join(f'm={m}:{r:.1f}q/s' for m, r in sorted(rates.items())))
+    pool = problem.reference['queries'](args.queries)
+    for phase in ('cold', 'warm'):
+        if phase == 'cold':
+            store.clear()                      # forget the warmup's sketch
+        service.reset_metrics()                # per-pass latency/HVP stats
+        hits0, misses0 = store.hits, store.misses
+        tickets = []
+        for q in range(args.queries):
+            tickets.append(service.submit(
+                _jax.tree.map(lambda x: x[q], pool)))
+            service.pump()
+        service.flush()
+        for q, t in enumerate(tickets):
+            resp = service.result(t)
+            pairs = ' '.join(f'{int(i)}:{float(s):+.4f}'
+                             for s, i in zip(resp.scores, resp.indices))
+            print(f'[serve:{phase}] query {q} ({resp.latency_s*1e3:.1f}ms '
+                  f'm={resp.batched_m} hit={resp.cache_hit}): {pairs}')
+        s = service.stats()
+        lookups = (store.hits - hits0) + (store.misses - misses0)
+        rate = (store.hits - hits0) / lookups if lookups else 0.0
+        print(f'[serve:{phase}] p50={s["latency_p50_ms"]:.1f}ms '
+              f'p95={s["latency_p95_ms"]:.1f}ms '
+              f'hvps={s["build_hvps"] + s["fallback_hvps"]} '
+              f'hit_rate={rate:.2f}')
+    return service
 
 
 def main(argv=None):
@@ -118,6 +169,12 @@ def main(argv=None):
                     help='influence problems: query-block width m')
     ap.add_argument('--top-k', type=int, default=10,
                     help='influence problems: top-k examples per query')
+    ap.add_argument('--serve', action='store_true',
+                    help='influence problems: stand up the serving tier '
+                         '(sketch store + query batcher, repro.serve) and '
+                         'answer --queries queries cold then warm, printing '
+                         'latency/cache stats, instead of one influence() '
+                         'call')
     ap.add_argument('--ckpt-dir', default=None)
     ap.add_argument('--ckpt-every', type=int, default=100)
     ap.add_argument('--production-mesh', action='store_true')

@@ -1,0 +1,30 @@
+"""repro.serve — the influence serving tier.
+
+The paper's amortization story, taken to its operational conclusion: a
+Nyström sketch is k HVPs to build and then answers IHVP queries as pure
+matrix arithmetic, so a *serving* layer should build it once and reuse it
+across every query that shares a linearization point. Three layers:
+
+  SketchStore       content-addressed LRU cache of prepared solver states,
+                    keyed by (params digest, solver fingerprint) — a warm
+                    hit answers queries with ZERO build HVPs
+  QueryBatcher      adaptive micro-batching of single query vectors into
+                    the (p, m) blocks ``apply_matrix`` is throughput-
+                    optimal at, flushing on deadline or block-size
+  InfluenceService  an in-process request/response loop over both, with
+                    bounded-queue backpressure, per-request deadlines,
+                    CG degradation on sketch-build failure, and schema-v2
+                    bench metrics
+
+See docs/serving.md for the quickstart and the metrics schema.
+"""
+from repro.serve.batcher import PendingQuery, QueryBatcher, calibrate_block_size
+from repro.serve.service import (InfluenceRequest, InfluenceResponse,
+                                 InfluenceService, ServiceOverloaded)
+from repro.serve.store import CacheEntry, SketchKey, SketchStore, sketch_key
+
+__all__ = [
+    'CacheEntry', 'InfluenceRequest', 'InfluenceResponse', 'InfluenceService',
+    'PendingQuery', 'QueryBatcher', 'ServiceOverloaded', 'SketchKey',
+    'SketchStore', 'calibrate_block_size', 'sketch_key',
+]

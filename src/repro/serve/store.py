@@ -1,0 +1,204 @@
+"""SketchStore: a content-addressed cache of prepared solver states.
+
+The cache key is *content*, not identity: the params half is a sha256
+digest of the parameter pytree (``repro.checkpoint.params_digest`` — the
+same bytes a checkpoint save would write), and the solver half is
+``repro.core.solver_fingerprint`` — the subset of solver config that
+changes the prepared state (k, backend, sketch_dtype, ...). Crucially the
+fingerprint is ρ-free: the whitened Woodbury apply retargets one sketch
+across damping values, so a store hit survives a ρ sweep.
+
+Eviction is LRU under a byte budget, with byte accounting from
+``repro.core.state_nbytes`` (a NystromSketch is ~2·k·p·itemsize; a
+DenseFactor p²). Staleness is serve-count based: entries wired to a
+``SketchPolicy`` inherit its ``refresh_every`` as a max-serves bound, so
+"rebuild every N uses" means the same thing in the trainer loop and the
+serving tier.
+
+Everything here is bookkeeping — no JAX tracing, no HVPs. The only
+expensive call the store ever makes is the ``build`` thunk handed to
+``get_or_build``, and the hit/miss counters plus per-entry ``build_hvps``
+make the amortization auditable: a warm hit bills zero HVPs, and the
+regression test in tests/test_serve.py pins that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable
+
+from repro.checkpoint import params_digest
+from repro.core.solvers import SketchPolicy, solver_fingerprint, state_nbytes
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchKey:
+    """Content address of a prepared solver state.
+
+    ``params``: 16-hex digest of the parameter pytree (checkpoint identity).
+    ``solver``: fingerprint of the solver's prepared-state config (ρ-free).
+    """
+    params: str
+    solver: str
+
+    def __str__(self) -> str:
+        return f'{self.params}/{self.solver}'
+
+
+def sketch_key(params: Any, solver: Any) -> SketchKey:
+    """The cache key for ``solver.prepare(...)`` at ``params``.
+
+    Raises TypeError for non-amortizable solvers (their "state" is a
+    trace-local operator — there is nothing to cache).
+    """
+    return SketchKey(params=params_digest(params),
+                     solver=solver_fingerprint(solver))
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One cached state plus its accounting."""
+    state: Any
+    nbytes: int
+    build_hvps: int
+    serves: int = 0
+
+
+class SketchStore:
+    """LRU cache of prepared solver states under a byte budget.
+
+    Parameters
+    ----------
+    byte_budget:
+        Soft ceiling on total cached bytes. Inserting past it evicts
+        least-recently-used entries until the new total fits; the entry
+        being inserted is always kept, even if it alone exceeds the budget
+        (a cache that cannot hold one sketch would silently disable
+        amortization — better to hold exactly one).
+    max_serves:
+        Optional staleness bound: an entry that has answered this many
+        ``get_or_build`` hits is discarded and rebuilt on the next request.
+        ``None`` (default) means entries never age out by use.
+    policy:
+        Optional :class:`~repro.core.SketchPolicy`; wiring one in adopts its
+        ``refresh_every`` as ``max_serves`` (unless ``refresh_every == 1``,
+        the always-fresh trainer cadence, which would defeat caching — the
+        store treats it as "no staleness bound" and leaves invalidation to
+        the explicit hooks). This keeps ONE definition of "stale" across
+        the trainer loop and the serving tier.
+
+    Counters (``hits``/``misses``/``evictions``/``invalidations``/
+    ``expirations``) and ``hit_rate`` feed the schema-v2 bench rows.
+    """
+
+    def __init__(self, byte_budget: int = 1 << 30, *,
+                 max_serves: int | None = None,
+                 policy: SketchPolicy | None = None):
+        if byte_budget <= 0:
+            raise ValueError(f'byte_budget must be positive, got {byte_budget}')
+        if policy is not None and max_serves is None and policy.refresh_every > 1:
+            max_serves = policy.refresh_every
+        if max_serves is not None and max_serves < 1:
+            raise ValueError(f'max_serves must be >= 1, got {max_serves}')
+        self.byte_budget = byte_budget
+        self.max_serves = max_serves
+        self._entries: OrderedDict[SketchKey, CacheEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+        self.expirations = 0
+
+    # ------------------------------------------------------------ lookup
+    def get_or_build(self, key: SketchKey, build: Callable[[], Any], *,
+                     build_hvps: int = 0) -> tuple[Any, bool]:
+        """Return ``(state, built)`` for ``key``.
+
+        On a hit: moves the entry to most-recently-used, bumps its serve
+        count, returns ``(state, False)`` — zero HVPs ran. On a miss (or a
+        stale hit past ``max_serves``): calls ``build()`` (the k sketch
+        HVPs), inserts under the byte budget, returns ``(state, True)``.
+        A failed ``build`` propagates and caches nothing.
+        """
+        entry = self._entries.get(key)
+        if entry is not None:
+            if self.max_serves is not None and entry.serves >= self.max_serves:
+                del self._entries[key]
+                self.expirations += 1
+            else:
+                self._entries.move_to_end(key)
+                entry.serves += 1
+                self.hits += 1
+                return entry.state, False
+        self.misses += 1
+        state = build()
+        self._insert(key, CacheEntry(state=state, nbytes=state_nbytes(state),
+                                     build_hvps=int(build_hvps), serves=1))
+        return state, True
+
+    def _insert(self, key: SketchKey, entry: CacheEntry) -> None:
+        self._entries.pop(key, None)
+        self._entries[key] = entry
+        while (self.total_bytes > self.byte_budget
+               and next(iter(self._entries)) is not key):
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    # ------------------------------------------------------- invalidation
+    def invalidate(self, key: SketchKey) -> bool:
+        """Drop one entry (e.g. its params were re-trained). Returns whether
+        anything was dropped."""
+        if self._entries.pop(key, None) is not None:
+            self.invalidations += 1
+            return True
+        return False
+
+    def invalidate_params(self, digest: str) -> int:
+        """Drop every entry prepared at the given params digest — the hook a
+        checkpoint refresh calls: new params, every sketch at the old ones
+        is wrong regardless of solver config. Returns the count dropped."""
+        doomed = [k for k in self._entries if k.params == digest]
+        for k in doomed:
+            del self._entries[k]
+        self.invalidations += len(doomed)
+        return len(doomed)
+
+    def clear(self) -> int:
+        """Drop everything (counts as invalidations). Returns count."""
+        n = len(self._entries)
+        self._entries.clear()
+        self.invalidations += n
+        return n
+
+    # ------------------------------------------------------------- stats
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def keys(self) -> list[SketchKey]:
+        """Cached keys, least-recently-used first (eviction order)."""
+        return list(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: SketchKey) -> bool:
+        return key in self._entries
+
+    def stats(self) -> dict[str, Any]:
+        """Counter snapshot for bench rows / logs."""
+        return {
+            'entries': len(self._entries),
+            'total_bytes': self.total_bytes,
+            'hits': self.hits,
+            'misses': self.misses,
+            'hit_rate': self.hit_rate,
+            'evictions': self.evictions,
+            'invalidations': self.invalidations,
+            'expirations': self.expirations,
+        }

@@ -231,7 +231,7 @@ def build_reweighting(imbalance: int = 100, seed: int = 0,
 # -------------------------------------------------- influence functions
 @register_problem('influence')
 def build_influence(imbalance: int = 100, seed: int = 0,
-                    d: int = 64) -> InfluenceProblem:
+                    d: int = 64, width: int = 128) -> InfluenceProblem:
     """Influence queries over the long-tail classification substrate.
 
     The single-level counterpart of ``reweighting``: the same MLP and
@@ -239,10 +239,13 @@ def build_influence(imbalance: int = 100, seed: int = 0,
     examples move a query's loss, scored by
     ``repro.core.problem.influence`` through one Nyström sketch. The val
     split is the natural query pool (``reference['queries'](m)`` draws the
-    first m val examples as a query batch).
+    first m val examples as a query batch). ``width`` sets the MLP hidden
+    size — shrink it (with ``d``) when an exact-IHVP oracle must be
+    affordable (its cost is p HVPs), e.g. the attribution-quality
+    benchmark and the serving smoke tests.
     """
     data = LongTailDataset(imbalance_factor=imbalance, seed=seed, d=d)
-    sizes = (d, 128, 128, data.n_classes)
+    sizes = (d, width, width, data.n_classes)
 
     def queries(m: int):
         return data.Xv[:m], data.yv[:m]

@@ -117,6 +117,64 @@ class TestCompareDocs:
             compare_docs(dup, _doc())
 
 
+class TestServingIdentity:
+    """The serving/quality fields split into identity vs measurement the
+    way CI gating needs: backend / phase / cache_hit_rate distinguish
+    cells (a drift fails as MISSING, never a silent tolerance pass), while
+    latency percentiles are machine-varying measurements waived by
+    --no-wall."""
+
+    def test_backend_is_cell_identity(self):
+        base = _doc()
+        base['rows'].append(bench_row(
+            solver='nystrom', backend='flat', m=1, applies_per_sec=120.0,
+            wall_seconds=0.008, problem='logreg_wd:D=8', hvp_count=4,
+            hypergrad_error=0.10, grid={'k': 4, 'rho': 0.01}))
+        assert compare_docs(base, copy.deepcopy(base)).ok
+        new = copy.deepcopy(base)
+        del new['rows'][-1]            # flat cell vanished, tree cell kept
+        report = compare_docs(base, new)
+        assert not report.ok
+        (cell,) = report.missing
+        assert 'backend=flat' in cell
+
+    def test_cache_hit_rate_drift_is_missing_not_tolerance(self):
+        base = _doc()
+        base['rows'][0]['cache_hit_rate'] = 0.9
+        base['rows'][0]['phase'] = 'warm'
+        new = copy.deepcopy(base)
+        new['rows'][0]['cache_hit_rate'] = 0.5
+        report = compare_docs(base, new)
+        assert not report.ok
+        (cell,) = report.missing       # old identity gone...
+        assert 'cache_hit_rate=0.9' in cell
+        (added,) = report.added        # ...new identity is an addition
+        assert 'cache_hit_rate=0.5' in added
+
+    def test_latency_p95_gated_only_under_check_wall(self):
+        base = _doc()
+        base['rows'][0]['latency_p95_ms'] = 10.0
+        new = copy.deepcopy(base)
+        new['rows'][0]['latency_p95_ms'] = 100.0
+        report = compare_docs(base, new, tol_wall=0.25)
+        (reg,) = [d for d in report.regressions
+                  if d.field == 'latency_p95_ms']
+        assert 'solver=nystrom' in reg.cell
+        assert compare_docs(base, new, check_wall=False).ok
+
+    def test_jaccard_floor_flags_retrieval_quality_loss(self):
+        base = _doc()
+        base['rows'][0]['jaccard_vs_exact'] = 0.8
+        new = copy.deepcopy(base)
+        new['rows'][0]['jaccard_vs_exact'] = 0.2
+        report = compare_docs(base, new, tol_error=0.25)
+        (reg,) = report.regressions
+        assert reg.field == 'jaccard_vs_exact'
+        assert reg.base == pytest.approx(0.8)
+        new['rows'][0]['jaccard_vs_exact'] = 0.75   # within the floor
+        assert compare_docs(base, new, tol_error=0.25).ok
+
+
 class TestCli:
     def test_identical_exit_zero(self, tmp_path, capsys):
         base = _write(tmp_path, 'base', _doc())

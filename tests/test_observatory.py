@@ -158,6 +158,46 @@ class TestSolveIntegration:
                   with_hypergrad_error=True)
 
 
+class TestBackendAxis:
+    """--backends fans out per-backend cells, but only for solvers that
+    actually build a contraction backend (Nyström); the others have no
+    backend dial and must appear exactly once, tagged 'tree'."""
+
+    @pytest.fixture(scope='class')
+    def backend_cells(self):
+        return run_sweep((SPEC,), ('nystrom', 'cg'),
+                         {'k': (4,), 'rho': (RHO,)}, tasks=2,
+                         oracle_rho=RHO, reps=1, seed=0,
+                         backends=('tree', 'flat'))
+
+    def test_backend_fanout_only_for_backend_building_solvers(
+            self, backend_cells):
+        nystrom = sorted(c.backend for c in backend_cells
+                         if c.solver == 'nystrom')
+        assert nystrom == ['flat', 'tree']
+        cg = [c.backend for c in backend_cells if c.solver == 'cg']
+        assert cg == ['tree']           # no dial → one cell, tree-tagged
+
+    def test_backends_agree_on_error_and_bill(self, backend_cells):
+        tree, flat = [c for c in backend_cells if c.solver == 'nystrom']
+        if tree.backend != 'tree':
+            tree, flat = flat, tree
+        # same sketch math, different operand layout: identical analytic
+        # bill, errors equal to layout roundoff
+        assert tree.hvp_count == flat.hvp_count == 4
+        assert flat.hypergrad_error == pytest.approx(
+            tree.hypergrad_error, rel=1e-3, abs=1e-6)
+
+    def test_measure_cell_records_requested_backend(self):
+        bundle = build_population(SPEC, tasks=1)
+        cell = measure_cell(bundle, 'nystrom', {'k': 2, 'rho': RHO},
+                            backend='flat', reps=1)
+        assert cell.backend == 'flat'
+        # backend-less solver: the tag is recorded but nothing is routed
+        cell = measure_cell(bundle, 'cg', {'k': 2, 'rho': RHO}, reps=1)
+        assert cell.backend == 'tree'
+
+
 class TestPopulation:
     def test_oracle_guard_refuses_large_p(self):
         with pytest.raises(ValueError, match='max_oracle_p'):

@@ -1,0 +1,454 @@
+"""Serving tier: sketch store, query batcher, and the service loop.
+
+What is pinned here, layer by layer:
+
+  SketchStore    content keying (params digest × ρ-free solver fingerprint),
+                 hit/miss accounting, LRU eviction ORDER under the byte
+                 budget, explicit invalidation, and policy-wired staleness
+                 (refresh_every as max-serves);
+  QueryBatcher   stack/split roundtrip is exact; a single query flushed
+                 through a (p, 1) block is BITWISE-equal to the vector
+                 apply (the same m=1 static dispatch tests/test_block_apply
+                 pins); interleaved submissions through a batched (p, m)
+                 flush match per-vector applies column by column; deadline
+                 and block-full flush triggers under an injected clock;
+  InfluenceService  the PR's headline regression test — a second
+                 influence() call with identical params/config bills ZERO
+                 sketch-build HVPs through the store — plus backpressure
+                 (bounded queue raises), graceful degradation (failing
+                 prepare falls back to CG with a warning logged), and
+                 schema-valid bench rows.
+"""
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CGIHVP, NystromIHVP, PyTreeIndexer, SketchPolicy,
+                        get_problem, influence, make_hvp, solver_fingerprint,
+                        state_nbytes, train_influence_params,
+                        tree_random_like)
+from repro.core.solvers import ExactIHVP
+from repro.serve import (InfluenceService, QueryBatcher, ServiceOverloaded,
+                         SketchKey, SketchStore, sketch_key)
+from repro.serve.batcher import split_block, stack_block
+
+PARAMS = {'w': jnp.zeros((8,)), 'm': jnp.zeros((13, 7)), 's': jnp.zeros(())}
+
+
+def _quadratic(seed=0):
+    from repro.core import flatten_vec
+    idxr = PyTreeIndexer(PARAMS)
+    p = idxr.total
+    B = jax.random.normal(jax.random.PRNGKey(seed), (p, 16))
+    Hm = B @ B.T / p + 0.5 * jnp.eye(p)
+
+    def loss(prm, hp, batch):
+        th = flatten_vec(prm)
+        return 0.5 * th @ Hm @ th
+
+    return idxr, make_hvp(loss, PARAMS, None, None)
+
+
+def _prepared(seed=0, k=6):
+    idxr, hvp = _quadratic(seed)
+    solver = NystromIHVP(k=k, rho=1e-2)
+    return solver, solver.prepare(hvp, idxr, jax.random.PRNGKey(seed))
+
+
+@pytest.fixture(scope='module')
+def toy():
+    """One tiny trained influence problem shared by the service tests."""
+    problem = get_problem('influence', d=8, width=8)
+    params = train_influence_params(problem, train_steps=5)
+    return problem, params
+
+
+# ---------------------------------------------------------------------------
+# SketchKey / fingerprints
+# ---------------------------------------------------------------------------
+class TestSketchKey:
+    def test_content_addressed_not_identity(self):
+        a = {'w': jnp.ones((3,))}
+        b = {'w': jnp.ones((3,))}          # distinct object, same content
+        s = NystromIHVP(k=4)
+        assert sketch_key(a, s) == sketch_key(b, s)
+
+    def test_params_change_changes_key(self):
+        s = NystromIHVP(k=4)
+        assert (sketch_key({'w': jnp.ones((3,))}, s)
+                != sketch_key({'w': jnp.zeros((3,))}, s))
+
+    def test_rho_free(self):
+        """One sketch serves a damping sweep: rho is NOT part of the key."""
+        p = {'w': jnp.ones((3,))}
+        assert (sketch_key(p, NystromIHVP(k=4, rho=1e-3))
+                == sketch_key(p, NystromIHVP(k=4, rho=10.0)))
+
+    def test_k_and_backend_split_keys(self):
+        p = {'w': jnp.ones((3,))}
+        base = sketch_key(p, NystromIHVP(k=4))
+        assert sketch_key(p, NystromIHVP(k=8)) != base
+        assert sketch_key(p, NystromIHVP(k=4, backend='flat')) != base
+
+    def test_iterative_solver_rejected(self):
+        with pytest.raises(TypeError, match='trace-local'):
+            sketch_key({'w': jnp.ones((3,))}, CGIHVP(iters=5))
+
+    def test_fingerprint_distinguishes_solver_types(self):
+        assert (solver_fingerprint(ExactIHVP(rho=1e-2))
+                != solver_fingerprint(NystromIHVP(k=4, rho=1e-2)))
+
+
+# ---------------------------------------------------------------------------
+# SketchStore
+# ---------------------------------------------------------------------------
+def _key(tag: str) -> SketchKey:
+    return SketchKey(params=tag, solver='nystrom;k=4')
+
+
+class TestSketchStore:
+    def test_miss_builds_hit_reuses(self):
+        _, state = _prepared()
+        store = SketchStore()
+        calls = []
+        build = lambda: (calls.append(1), state)[1]
+        s1, built1 = store.get_or_build(_key('a'), build, build_hvps=6)
+        s2, built2 = store.get_or_build(_key('a'), build, build_hvps=6)
+        assert built1 and not built2
+        assert len(calls) == 1             # the hit ran NO build
+        assert s1 is s2
+        assert (store.hits, store.misses) == (1, 1)
+        assert store.hit_rate == 0.5
+
+    def test_lru_eviction_order(self):
+        """Oldest-touched entry goes first; a hit refreshes recency."""
+        _, state = _prepared()
+        nbytes = state_nbytes(state)
+        store = SketchStore(byte_budget=3 * nbytes)
+        for tag in ('a', 'b', 'c'):
+            store.get_or_build(_key(tag), lambda: state)
+        store.get_or_build(_key('a'), lambda: state)   # touch a → b is LRU
+        store.get_or_build(_key('d'), lambda: state)   # over budget: evict b
+        assert store.evictions == 1
+        assert _key('b') not in store
+        assert store.keys() == [_key('c'), _key('a'), _key('d')]
+
+    def test_single_entry_over_budget_is_kept(self):
+        _, state = _prepared()
+        store = SketchStore(byte_budget=1)   # smaller than any sketch
+        store.get_or_build(_key('a'), lambda: state)
+        assert _key('a') in store            # never evict the only entry
+        _, built = store.get_or_build(_key('a'), lambda: state)
+        assert not built
+
+    def test_invalidate_forces_rebuild(self):
+        _, state = _prepared()
+        store = SketchStore()
+        store.get_or_build(_key('a'), lambda: state)
+        assert store.invalidate(_key('a'))
+        assert not store.invalidate(_key('a'))      # already gone
+        _, built = store.get_or_build(_key('a'), lambda: state)
+        assert built
+        assert store.invalidations == 1
+
+    def test_invalidate_params_drops_all_solver_variants(self):
+        """The checkpoint-refresh hook: new params digest kills every sketch
+        prepared at the old one, whatever the solver config."""
+        _, state = _prepared()
+        store = SketchStore()
+        store.get_or_build(SketchKey('old', 'k=4'), lambda: state)
+        store.get_or_build(SketchKey('old', 'k=8'), lambda: state)
+        store.get_or_build(SketchKey('new', 'k=4'), lambda: state)
+        assert store.invalidate_params('old') == 2
+        assert store.keys() == [SketchKey('new', 'k=4')]
+
+    def test_policy_refresh_every_is_max_serves(self):
+        """invalidation-on-refresh: a policy with refresh_every=N ages a
+        cached state out after N serves, same definition of stale as the
+        trainer loop."""
+        solver, state = _prepared()
+        policy = SketchPolicy(solver=solver, inner_loss=lambda p, h, b: 0.0,
+                              refresh_every=2)
+        store = SketchStore(policy=policy)
+        assert store.max_serves == 2
+        _, b1 = store.get_or_build(_key('a'), lambda: state)
+        _, b2 = store.get_or_build(_key('a'), lambda: state)   # serve 2
+        _, b3 = store.get_or_build(_key('a'), lambda: state)   # stale → build
+        assert (b1, b2, b3) == (True, False, True)
+        assert store.expirations == 1
+
+    def test_always_fresh_policy_does_not_disable_caching(self):
+        solver, _ = _prepared()
+        policy = SketchPolicy(solver=solver, inner_loss=lambda p, h, b: 0.0,
+                              refresh_every=1)
+        assert SketchStore(policy=policy).max_serves is None
+
+    def test_failed_build_caches_nothing(self):
+        store = SketchStore()
+
+        def boom():
+            raise RuntimeError('numerical fire')
+
+        with pytest.raises(RuntimeError):
+            store.get_or_build(_key('a'), boom)
+        assert len(store) == 0 and store.misses == 1
+
+    def test_bytes_accounting_matches_state_nbytes(self):
+        _, state = _prepared()
+        store = SketchStore()
+        store.get_or_build(_key('a'), lambda: state)
+        assert store.total_bytes == state_nbytes(state)
+
+
+# ---------------------------------------------------------------------------
+# QueryBatcher
+# ---------------------------------------------------------------------------
+class TestQueryBatcher:
+    def test_stack_split_roundtrip_bitwise(self):
+        cols = [tree_random_like(k, PARAMS)
+                for k in jax.random.split(jax.random.PRNGKey(0), 5)]
+        back = split_block(stack_block(cols), 5)
+        for orig, rt in zip(cols, back):
+            for a, b in zip(jax.tree.leaves(orig), jax.tree.leaves(rt)):
+                np.testing.assert_array_equal(a, b)
+
+    def test_m1_flush_bitwise_matches_vector_apply(self):
+        """A single query through the batcher's (p, 1) block == the direct
+        vector apply, bit for bit (the m=1 static dispatch)."""
+        solver, state = _prepared(seed=7)
+        batcher = QueryBatcher(block_size=4, max_delay=0.0)
+        v = tree_random_like(jax.random.PRNGKey(8), PARAMS)
+        batcher.submit(v)
+        block, taken = batcher.take_block()
+        assert len(taken) == 1
+        [u_col] = split_block(solver.apply_matrix(state, block), 1)
+        u_vec = solver.apply(state, v)
+        for a, b in zip(jax.tree.leaves(u_col), jax.tree.leaves(u_vec)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_interleaved_submissions_match_per_vector_applies(self):
+        """Queries submitted one by one, answered through one batched (p, m)
+        flush, match applying each vector individually — the batcher adds
+        batching, not error. Whitened-path block algebra is exact per
+        column here; the shared assertion is the block-apply contract's
+        f32-roundoff bound."""
+        solver, state = _prepared(seed=9)
+        batcher = QueryBatcher(block_size=4, max_delay=10.0)
+        vecs = [tree_random_like(k, PARAMS)
+                for k in jax.random.split(jax.random.PRNGKey(10), 4)]
+        for v in vecs:
+            batcher.submit(v)
+        assert batcher.due()               # full block
+        block, taken = batcher.take_block()
+        assert [q.ticket for q in taken] == [0, 1, 2, 3]
+        cols = split_block(solver.apply_matrix(state, block), 4)
+        from repro.core import flatten_vec
+        for v, got in zip(vecs, cols):
+            want = solver.apply(state, v)
+            np.testing.assert_allclose(
+                np.asarray(flatten_vec(got)), np.asarray(flatten_vec(want)),
+                rtol=2e-4, atol=2e-3)
+
+    def test_flush_triggers_under_injected_clock(self):
+        now = [0.0]
+        batcher = QueryBatcher(block_size=3, max_delay=1.0,
+                               clock=lambda: now[0])
+        v = tree_random_like(jax.random.PRNGKey(0), PARAMS)
+        assert not batcher.due()           # empty
+        batcher.submit(v)
+        assert not batcher.due()           # young, not full
+        now[0] = 0.5
+        assert not batcher.due()
+        now[0] = 1.0                       # oldest aged out
+        assert batcher.due()
+        assert batcher.next_due_at() == 1.0
+        batcher.take_block()
+        # deadline flush: due the moment (deadline - slack) passes, even
+        # though max_delay has not elapsed
+        batcher.deadline_slack = 0.25
+        batcher.submit(v, deadline=now[0] + 0.5)
+        assert not batcher.due()
+        now[0] += 0.25
+        assert batcher.due()
+
+    def test_block_full_flushes_regardless_of_clock(self):
+        batcher = QueryBatcher(block_size=2, max_delay=1e9)
+        v = tree_random_like(jax.random.PRNGKey(0), PARAMS)
+        batcher.submit(v)
+        assert not batcher.due()
+        batcher.submit(v)
+        assert batcher.due()
+        block, taken = batcher.take_block()
+        assert len(taken) == 2 and len(batcher) == 0
+
+    def test_take_block_pops_oldest_first(self):
+        batcher = QueryBatcher(block_size=2, max_delay=0.0)
+        v = tree_random_like(jax.random.PRNGKey(0), PARAMS)
+        tickets = [batcher.submit(v) for _ in range(3)]
+        _, taken = batcher.take_block()
+        assert [q.ticket for q in taken] == tickets[:2]
+        assert len(batcher) == 1
+
+    def test_empty_take_rejected(self):
+        with pytest.raises(ValueError, match='empty'):
+            QueryBatcher().take_block()
+
+
+# ---------------------------------------------------------------------------
+# influence() through the store — the warm-path-zero-HVPs regression test
+# ---------------------------------------------------------------------------
+class TestInfluenceThroughStore:
+    def test_warm_call_bills_zero_build_hvps(self, toy):
+        """THE satellite fix: repeated influence() with identical params and
+        config used to silently redo the k sketch HVPs; through the store
+        the second call is a warm hit and bills hvp_count == 0."""
+        problem, params = toy
+        solver = NystromIHVP(k=4, rho=1e-2)
+        store = SketchStore()
+        queries = problem.reference['queries'](2)
+        cold = influence(problem, solver, queries, params=params, top_k=5,
+                         store=store)
+        warm = influence(problem, solver, queries, params=params, top_k=5,
+                         store=store)
+        assert cold.hvp_count == 4         # one k-HVP build
+        assert warm.hvp_count == 0         # the whole point of the store
+        assert (store.hits, store.misses) == (1, 1)
+        np.testing.assert_array_equal(np.asarray(cold.scores),
+                                      np.asarray(warm.scores))
+        np.testing.assert_array_equal(np.asarray(cold.indices),
+                                      np.asarray(warm.indices))
+
+    def test_rho_sweep_reuses_one_sketch(self, toy):
+        """ρ-free keying end to end: a damping sweep pays ONE build."""
+        problem, params = toy
+        store = SketchStore()
+        queries = problem.reference['queries'](1)
+        for rho in (1e-3, 1e-2, 1e-1):
+            influence(problem, NystromIHVP(k=4, rho=rho), queries,
+                      params=params, top_k=5, store=store)
+        assert store.misses == 1 and store.hits == 2
+
+    def test_iterative_solver_bypasses_store(self, toy):
+        problem, params = toy
+        store = SketchStore()
+        res = influence(problem, CGIHVP(iters=3, rho=1e-2),
+                        problem.reference['queries'](2), params=params,
+                        top_k=5, store=store)
+        assert len(store) == 0             # nothing cacheable
+        assert res.hvp_count == 6          # iters × m, as before
+
+
+# ---------------------------------------------------------------------------
+# InfluenceService
+# ---------------------------------------------------------------------------
+class TestInfluenceService:
+    def test_batched_answers_match_oneshot_influence(self, toy):
+        problem, params = toy
+        solver = NystromIHVP(k=4, rho=1e-2)
+        queries = problem.reference['queries'](3)
+        ref = influence(problem, solver, queries, params=params, top_k=5)
+        svc = InfluenceService(problem, solver, params=params, top_k=5,
+                               block_size=3, max_delay=60.0)
+        tickets = [svc.submit(jax.tree.map(lambda x: x[q], queries))
+                   for q in range(3)]
+        assert svc.pump() == 3             # block full → one flush
+        for q, t in enumerate(tickets):
+            resp = svc.result(t)
+            assert resp.batched_m == 3
+            # query grads are computed per request (not vmapped as a batch),
+            # so scores agree to f32 roundoff; top-k identity is exact
+            np.testing.assert_allclose(np.asarray(resp.scores),
+                                       np.asarray(ref.scores[q]), rtol=1e-4)
+            np.testing.assert_array_equal(np.asarray(resp.indices),
+                                          np.asarray(ref.indices[q]))
+
+    def test_warm_requests_run_zero_build_hvps(self, toy):
+        problem, params = toy
+        svc = InfluenceService(problem, NystromIHVP(k=4, rho=1e-2),
+                               params=params, top_k=5, block_size=1)
+        svc.prepare()                      # the one build, off-path
+        svc.reset_metrics()
+        q = jax.tree.map(lambda x: x[0], problem.reference['queries'](1))
+        for _ in range(3):
+            svc.submit(q)
+            svc.flush()
+        row = svc.bench_rows(phase='warm')[0]
+        assert row['hvp_count'] == 0
+        assert svc.store.hits == 3
+
+    def test_backpressure(self, toy):
+        problem, params = toy
+        svc = InfluenceService(problem, NystromIHVP(k=4, rho=1e-2),
+                               params=params, top_k=5, block_size=8,
+                               max_delay=60.0, max_queue=2)
+        q = jax.tree.map(lambda x: x[0], problem.reference['queries'](1))
+        svc.submit(q)
+        svc.submit(q)
+        with pytest.raises(ServiceOverloaded, match='queue full'):
+            svc.submit(q)
+        svc.flush()                        # draining restores capacity
+        svc.submit(q)
+
+    def test_degrades_to_cg_on_build_failure(self, toy, caplog):
+        problem, params = toy
+
+        @dataclasses.dataclass(frozen=True)
+        class Broken(NystromIHVP):
+            def prepare(self, *a, **k):
+                raise RuntimeError('sketch factorization blew up')
+
+        svc = InfluenceService(problem, Broken(k=4, rho=1e-2), params=params,
+                               top_k=5, block_size=1)
+        q = jax.tree.map(lambda x: x[0], problem.reference['queries'](1))
+        with caplog.at_level(logging.WARNING, logger='repro.serve.service'):
+            t = svc.submit(q)
+            svc.flush()
+        assert any('degrading' in r.message for r in caplog.records)
+        resp = svc.result(t)
+        assert resp.degraded and not resp.cache_hit
+        assert resp.scores.shape == (5,)   # still answered
+        assert svc.degraded_flushes == 1
+        assert svc.bench_rows()[0]['hvp_count'] == svc._fallback.iters
+
+    def test_deadline_miss_is_recorded(self, toy):
+        problem, params = toy
+        now = [0.0]
+        svc = InfluenceService(problem, NystromIHVP(k=4, rho=1e-2),
+                               params=params, top_k=5, block_size=1,
+                               clock=lambda: now[0])
+        q = jax.tree.map(lambda x: x[0], problem.reference['queries'](1))
+        t = svc.submit(q, deadline_s=0.5)
+        now[0] = 1.0                       # the deadline passes unanswered
+        svc.flush()
+        assert svc.result(t).deadline_missed and svc.deadline_misses == 1
+
+    def test_bench_rows_are_schema_valid(self, toy):
+        from benchmarks.common import BENCH_V2_REQUIRED_KEYS
+        problem, params = toy
+        svc = InfluenceService(problem, NystromIHVP(k=4, rho=1e-2),
+                               params=params, top_k=5, block_size=1)
+        q = jax.tree.map(lambda x: x[0], problem.reference['queries'](1))
+        svc.submit(q)
+        svc.flush()
+        [row] = svc.bench_rows()
+        for key in BENCH_V2_REQUIRED_KEYS:
+            assert key in row, key
+        assert row['phase'] == 'serve'
+        assert 0.0 <= row['cache_hit_rate'] <= 1.0
+        assert row['latency_p95_ms'] >= row['latency_p50_ms'] >= 0.0
+
+    def test_result_before_flush_raises(self, toy):
+        problem, params = toy
+        svc = InfluenceService(problem, NystromIHVP(k=4, rho=1e-2),
+                               params=params, top_k=5, block_size=4,
+                               max_delay=60.0)
+        q = jax.tree.map(lambda x: x[0], problem.reference['queries'](1))
+        t = svc.submit(q)
+        with pytest.raises(KeyError, match='not answered'):
+            svc.result(t)
+        svc.flush()
+        svc.result(t)
