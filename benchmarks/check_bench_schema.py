@@ -7,7 +7,9 @@ moment a bench drifts from the row contract in benchmarks/common.py.
 Both schema versions validate (``BENCH_SCHEMA_KEYS``): v1 rows carry
 solver/backend/m/applies_per_sec/wall_seconds; v2 rows additionally carry
 ``problem`` and ``hvp_count``, plus type-checked optional
-``hypergrad_error`` / ``grid`` fields (the observatory's accuracy cells).
+``hypergrad_error`` / ``grid`` fields (the observatory's accuracy cells)
+and ``collective_count`` / ``accum_dtype_ok`` (its ``--audit``
+program-structure fields).
 Old baselines therefore stay checkable after the bump — only
 ``compare_runs.py`` insists both sides of a diff share one version.
 
@@ -79,6 +81,15 @@ def _check_v2_row(i: int, row: dict) -> list[str]:
     if 'grid' in row and not isinstance(row['grid'], dict):
         errs.append(f"row {i}: grid={row['grid']!r} must be a dict of "
                     'accuracy-knob values')
+    if 'collective_count' in row:
+        v = row['collective_count']
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            errs.append(f'row {i}: collective_count={v!r} must be an '
+                        'int >= 0')
+    if 'accum_dtype_ok' in row and not isinstance(row['accum_dtype_ok'],
+                                                  bool):
+        errs.append(f"row {i}: accum_dtype_ok={row['accum_dtype_ok']!r} "
+                    'must be a bool')
     return errs
 
 

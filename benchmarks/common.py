@@ -81,7 +81,10 @@ def bench_row(*, solver: str, backend: str, m: int, applies_per_sec: float,
     HVP bill (0 when the timed region runs no HVPs). ``hypergrad_error`` and
     ``grid`` are the observatory's per-cell accuracy fields (omitted from
     the row when None). ``extra`` carries bench-specific fields (p, k, leaf
-    count, ...).
+    count, ...) — including, for audited observatory runs (``--audit``),
+    the typed-optional program-structure measurements ``collective_count``
+    and ``accum_dtype_ok`` that ``compare_runs.py`` diffs when both runs
+    carry them.
     """
     row = dict(solver=solver, backend=backend, m=int(m),
                applies_per_sec=float(applies_per_sec),

@@ -72,6 +72,13 @@ def main(argv=None) -> int:
     ap.add_argument('--max-oracle-p', type=int, default=DEFAULT_MAX_ORACLE_P,
                     help='refuse problems whose oracle needs more than this '
                          'many HVPs per task')
+    ap.add_argument('--audit', action='store_true',
+                    help='audit each cell\'s timed program '
+                         '(repro.analysis.audit) and record '
+                         'collective_count / accum_dtype_ok in its row, so '
+                         'compare_runs.py flags program-structure '
+                         'regressions; rows written without --audit omit '
+                         'the fields and still diff cleanly')
     ap.add_argument('--out', default='observatory',
                     help='artifact name: writes BENCH_<out>.json')
     args = ap.parse_args(argv)
@@ -85,14 +92,17 @@ def main(argv=None) -> int:
         vary=parse_vary(args.vary) if args.vary else None,
         steps=args.steps_per_outer, batch_size=args.batch_size,
         seed=args.seed, oracle_rho=args.oracle_rho, reps=args.reps,
-        max_oracle_p=args.max_oracle_p, progress=print)
+        max_oracle_p=args.max_oracle_p, audit=args.audit, progress=print)
 
     rows = [bench_row(solver=c.solver, backend=c.backend, m=1,
                       applies_per_sec=c.applies_per_sec,
                       wall_seconds=c.wall_seconds, problem=c.problem,
                       hvp_count=c.hvp_count,
                       hypergrad_error=c.hypergrad_error, grid=c.grid,
-                      err_max=c.err_max, tasks=c.tasks)
+                      err_max=c.err_max, tasks=c.tasks,
+                      **({'collective_count': c.collective_count,
+                          'accum_dtype_ok': c.accum_dtype_ok}
+                         if c.collective_count is not None else {}))
             for c in cells]
     write_bench(args.out, rows,
                 meta={'argv': list(argv if argv is not None else sys.argv[1:]),

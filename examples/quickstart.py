@@ -74,7 +74,9 @@ def main():
               f'val={float(val):.4f} (pre-update)')
 
     if args.legacy_check:
-        rng = jax.random.PRNGKey(0)
+        # distinct from the hparam-init key: both paths below share THIS rng
+        # (that sameness is the point), but neither should reuse the init key
+        rng = jax.random.PRNGKey(1234)
         theta = inner_solver(phi, problem.data.train)
         new = jax.grad(lambda p: problem.outer_loss(
             solve(p, problem.data.train, rng=rng), p, problem.data.val))(phi)

@@ -1,0 +1,31 @@
+"""Static analysis over the programs this repo compiles.
+
+Three instruments (design doc: docs/static-analysis.md):
+
+  * the **program auditor** — ``audit(fn, *args)`` walks jaxpr +
+    StableHLO (+ compiled HLO) into a :class:`ProgramReport`; a
+    declarative :class:`Contract` checks it and renders precise
+    violations (``repro.analysis.auditor``);
+  * the **retrace sentinel** — :class:`CompileMonitor` /
+    :func:`assert_compiles` pin compile-once guarantees on hot loops
+    (``repro.analysis.sentinel``);
+  * the **repo AST lint** — rules for PRNG key reuse, traced host syncs,
+    hand-rolled bench rows, and SOLVERS protocol drift, with
+    ``# repro: allow[rule]`` suppressions (``repro.analysis.astlint``;
+    CLI: ``tools/lint.py``).
+"""
+from repro.analysis.auditor import (Contract, ContractViolation, DotRecord,
+                                    OpRecord, ProgramReport, TransferRecord,
+                                    Violation, audit, audit_jaxpr,
+                                    canonical_collective)
+from repro.analysis.sentinel import (CompileMonitor, RetraceError,
+                                     assert_compiles, count_compiles)
+from repro.analysis.astlint import Finding, lint_file, lint_paths, lint_source
+
+__all__ = [
+    'Contract', 'ContractViolation', 'DotRecord', 'OpRecord',
+    'ProgramReport', 'TransferRecord', 'Violation', 'audit', 'audit_jaxpr',
+    'canonical_collective',
+    'CompileMonitor', 'RetraceError', 'assert_compiles', 'count_compiles',
+    'Finding', 'lint_file', 'lint_paths', 'lint_source',
+]

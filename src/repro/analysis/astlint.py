@@ -1,0 +1,327 @@
+"""Repo-rule AST lint: the checks generic linters cannot know to make.
+
+Four rules, each encoding a correctness convention this codebase relies
+on (ruff carries the generic floor — see pyproject ``[tool.ruff]``):
+
+``prng-key-reuse``
+    The same PRNG key constructed twice in one scope
+    (``jax.random.PRNGKey(0)`` ... ``jax.random.PRNGKey(0)``): two
+    consumers of one key produce correlated randomness. Split or fold_in
+    instead.
+``traced-host-sync``
+    ``float()`` / ``int()`` / ``.item()`` / ``np.asarray`` inside a
+    jit-decorated function or a ``lax.scan``/``while_loop``/``fori_loop``/
+    ``cond`` body: a host sync inside a traced region either fails under
+    trace or (at top level of a re-entered jit) silently serializes the
+    dispatch pipeline.
+``bench-row-literal``
+    A hand-rolled dict literal with the bench-row identity keys
+    (``solver``/``backend``/``applies_per_sec``): rows must go through
+    ``benchmarks.common.bench_row`` so schema-v2 required keys and typing
+    stay enforced in one place.
+``solver-protocol``
+    A ``SOLVERS`` registry entry whose class is missing the solver
+    protocol: ``prepare`` / ``apply`` / ``apply_matrix`` methods and the
+    ``amortizable`` class flag — the registry is only useful if every
+    entry honors the protocol ``SketchPolicy``/the store dispatch on.
+
+Suppression: append ``# repro: allow[rule-id]`` (with a reason!) to the
+flagged line; ``allow[*]`` waives all rules on that line. Findings print
+as ``path:line:col: [rule] message``; ``tools/lint.py`` is the CLI.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable
+
+__all__ = ['Finding', 'RULES', 'lint_source', 'lint_file', 'lint_paths']
+
+RULES = {
+    'prng-key-reuse': 'same PRNG key constructed twice in one scope',
+    'traced-host-sync': 'host sync (float/int/.item/np.asarray) inside a '
+                        'traced/scan body',
+    'bench-row-literal': 'hand-rolled bench row dict; use '
+                         'benchmarks.common.bench_row()',
+    'solver-protocol': 'SOLVERS entry missing prepare/apply/apply_matrix/'
+                       'amortizable',
+    'parse-error': 'file does not parse',
+}
+
+_ALLOW_RE = re.compile(r'#\s*repro:\s*allow\[([\w*,\s-]+)\]')
+
+_HOST_SYNC_NAMES = {'float', 'int', 'bool'}
+_HOST_SYNC_ATTRS = {'item', 'tolist'}
+_HOST_SYNC_NP = {'asarray', 'array'}
+_CONTROL_FLOW = {'scan', 'while_loop', 'fori_loop', 'cond', 'switch', 'map'}
+_BENCH_ROW_KEYS = {'solver', 'backend', 'applies_per_sec'}
+_SOLVER_PROTOCOL_METHODS = ('prepare', 'apply', 'apply_matrix')
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f'{self.path}:{self.line}:{self.col}: [{self.rule}] ' \
+               f'{self.message}'
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.random.PRNGKey' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return '.'.join(reversed(parts))
+    return ''
+
+
+def _is_jit(node: ast.AST) -> bool:
+    """Does this decorator/callee expression name a jit transform?"""
+    dotted = _dotted(node)
+    if dotted.split('.')[-1] == 'jit':
+        return True
+    if isinstance(node, ast.Call):           # partial(jax.jit, ...) / jit(...)
+        if _is_jit(node.func):
+            return True
+        if _dotted(node.func).split('.')[-1] == 'partial' and node.args:
+            return _is_jit(node.args[0])
+    return False
+
+
+# ---------------------------------------------------------------------------
+# rule: prng-key-reuse
+# ---------------------------------------------------------------------------
+def _check_prng_reuse(tree: ast.AST, path: str) -> list[Finding]:
+    findings = []
+    seen: dict[tuple[int, str], ast.Call] = {}
+
+    def visit(node: ast.AST, scope: int) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            scope = id(node)
+        if (isinstance(node, ast.Call)
+                and _dotted(node.func).split('.')[-1] == 'PRNGKey'
+                and node.args):
+            sig = (scope, ast.dump(node.args[0]))
+            if sig in seen:
+                first = seen[sig]
+                findings.append(Finding(
+                    path, node.lineno, node.col_offset, 'prng-key-reuse',
+                    f'PRNGKey({ast.unparse(node.args[0])}) already '
+                    f'constructed at line {first.lineno} in this scope — '
+                    'two consumers of one key correlate; split or fold_in'))
+            else:
+                seen[sig] = node
+        for child in ast.iter_child_nodes(node):
+            visit(child, scope)
+
+    visit(tree, 0)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: traced-host-sync
+# ---------------------------------------------------------------------------
+def _traced_bodies(tree: ast.AST) -> list[ast.AST]:
+    """Function/lambda nodes whose bodies execute under trace: jit-decorated
+    defs, plus lambdas/named functions handed to lax control flow."""
+    defs_by_name: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, node)
+    traced: list[ast.AST] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit(d) for d in node.decorator_list):
+                traced.append(node)
+        elif isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            parts = dotted.split('.')
+            # require an explicit `lax` component: jax.lax.scan / lax.scan
+            # trace their bodies, jax.tree.map / builtins.map do not
+            if parts[-1] in _CONTROL_FLOW and 'lax' in parts[:-1]:
+                for arg in node.args:
+                    if isinstance(arg, ast.Lambda):
+                        traced.append(arg)
+                    elif (isinstance(arg, ast.Name)
+                          and arg.id in defs_by_name):
+                        traced.append(defs_by_name[arg.id])
+    return traced
+
+
+def _check_host_sync(tree: ast.AST, path: str) -> list[Finding]:
+    findings = []
+    for body in _traced_bodies(tree):
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            label = None
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _HOST_SYNC_NAMES and node.args):
+                label = f'{node.func.id}()'
+            elif isinstance(node.func, ast.Attribute):
+                dotted = _dotted(node.func)
+                head, _, tail = dotted.rpartition('.')
+                if tail in _HOST_SYNC_ATTRS:
+                    label = f'.{tail}()'
+                elif (tail in _HOST_SYNC_NP
+                        and head.split('.')[-1] in ('np', 'numpy', 'onp')):
+                    label = dotted
+                elif dotted.endswith('device_get'):
+                    label = dotted
+            if label:
+                findings.append(Finding(
+                    path, node.lineno, node.col_offset, 'traced-host-sync',
+                    f'{label} inside a traced/scan body forces a host '
+                    'sync (or fails under trace); keep values on device'))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: bench-row-literal
+# ---------------------------------------------------------------------------
+def _check_bench_row(tree: ast.AST, path: str) -> list[Finding]:
+    if os.path.basename(path) == 'common.py':
+        return []                            # bench_row's own home
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Dict):
+            continue
+        keys = {k.value for k in node.keys
+                if isinstance(k, ast.Constant) and isinstance(k.value, str)}
+        if _BENCH_ROW_KEYS <= keys:
+            findings.append(Finding(
+                path, node.lineno, node.col_offset, 'bench-row-literal',
+                'dict literal with bench-row identity keys '
+                f'({sorted(_BENCH_ROW_KEYS)}); build rows with '
+                'benchmarks.common.bench_row() so the schema stays '
+                'enforced in one place'))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: solver-protocol
+# ---------------------------------------------------------------------------
+def _class_members(cls: ast.ClassDef) -> tuple[set, set]:
+    methods, attrs = set(), set()
+    for stmt in cls.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            methods.add(stmt.name)
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                            ast.Name):
+            attrs.add(stmt.target.id)
+        elif isinstance(stmt, ast.Assign):
+            attrs.update(t.id for t in stmt.targets
+                         if isinstance(t, ast.Name))
+    return methods, attrs
+
+
+def _check_solver_protocol(tree: ast.AST, path: str) -> list[Finding]:
+    classes = {n.name: n for n in ast.walk(tree)
+               if isinstance(n, ast.ClassDef)}
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == 'SOLVERS'
+                        for t in node.targets)
+                and isinstance(node.value, ast.Dict)):
+            continue
+        for key, value in zip(node.value.keys, node.value.values):
+            if not (isinstance(value, ast.Call) and value.args
+                    and isinstance(value.args[0], ast.Name)):
+                continue
+            cls_name = value.args[0].id
+            cls = classes.get(cls_name)
+            if cls is None:
+                continue                     # defined elsewhere: not checkable
+            methods, attrs = _class_members(cls)
+            entry = (key.value if isinstance(key, ast.Constant)
+                     else cls_name)
+            missing = [m for m in _SOLVER_PROTOCOL_METHODS
+                       if m not in methods]
+            if 'amortizable' not in attrs and 'amortizable' not in methods:
+                missing.append('amortizable')
+            if missing:
+                findings.append(Finding(
+                    path, value.lineno, value.col_offset, 'solver-protocol',
+                    f'SOLVERS[{entry!r}] class {cls_name} is missing '
+                    f'protocol member(s): {missing}'))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+_CHECKS = (_check_prng_reuse, _check_host_sync, _check_bench_row,
+           _check_solver_protocol)
+
+
+def _suppressed(finding: Finding, lines: list[str]) -> bool:
+    """True when the flagged line — or the contiguous block of comment
+    lines directly above it — carries a matching ``# repro: allow[rule]``
+    marker."""
+    def matches(line: str) -> bool:
+        m = _ALLOW_RE.search(line)
+        if not m:
+            return False
+        allowed = {part.strip() for part in m.group(1).split(',')}
+        return '*' in allowed or finding.rule in allowed
+
+    if 1 <= finding.line <= len(lines) and matches(lines[finding.line - 1]):
+        return True
+    lineno = finding.line - 1
+    while 1 <= lineno <= len(lines) and lines[lineno - 1].lstrip().startswith('#'):
+        if matches(lines[lineno - 1]):
+            return True
+        lineno -= 1
+    return False
+
+
+def lint_source(source: str, path: str = '<source>') -> list[Finding]:
+    """All unsuppressed findings for one source text."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, e.offset or 0, 'parse-error',
+                        str(e.msg))]
+    lines = source.splitlines()
+    findings: list[Finding] = []
+    for check in _CHECKS:
+        findings.extend(check(tree, path))
+    findings = [f for f in findings if not _suppressed(f, lines)]
+    return sorted(findings, key=lambda f: (f.line, f.col, f.rule))
+
+
+def lint_file(path: str) -> list[Finding]:
+    with open(path, encoding='utf-8') as f:
+        return lint_source(f.read(), path)
+
+
+def lint_paths(paths: Iterable[str]) -> list[Finding]:
+    """Lint every ``*.py`` under the given files/directories (sorted,
+    __pycache__ and hidden dirs skipped)."""
+    files: list[str] = []
+    for path in paths:
+        if os.path.isdir(path):
+            for root, dirs, names in os.walk(path):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith('.')
+                                 and d != '__pycache__')
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith('.py'))
+        elif path.endswith('.py'):
+            files.append(path)
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f))
+    return findings

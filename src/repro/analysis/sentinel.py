@@ -1,0 +1,146 @@
+"""Retrace sentinel: count compilations, pin compile-once guarantees.
+
+The hot loops this repo ships — ``BilevelTrainer.run``'s jitted step pair,
+``solve()``'s outer loop, the warm ``InfluenceService`` query path — are
+fast *because* they compile once and then replay. Nothing in jax fails
+when that property silently breaks; the program just quietly recompiles
+every step (a shape-dependent Python branch, a non-weak-typed scalar, a
+fresh closure per call) and the "amortized" path costs a compile per use.
+
+This module makes the property assertable:
+
+  * :class:`CompileMonitor` — a context manager counting XLA backend
+    compilations while it is active, via the ``jax.monitoring``
+    ``'/jax/core/compile/backend_compile_duration'`` event (one per
+    executable actually built; cache hits emit nothing);
+  * :func:`count_compiles` — compilations during one thunk;
+  * :func:`assert_compiles` — call ``fn`` several times and assert that
+    compilation happened during exactly the first ``times`` calls and
+    never again — ``assert_compiles(step, times=1, calls=3)`` is a
+    three-step loop pinned to compile once. For jitted callables the
+    per-callable tracing-cache delta (``_cache_size``) is cross-checked
+    too, so a retrace that hits a warm executable cache still fails.
+
+See docs/static-analysis.md for usage next to the program auditor.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+
+__all__ = ['CompileMonitor', 'RetraceError', 'assert_compiles',
+           'count_compiles']
+
+_COMPILE_EVENT = '/jax/core/compile/backend_compile_duration'
+
+# jax.monitoring has no unregister; register one module-level listener
+# lazily and fan out to whichever monitors are active.
+_active: list['CompileMonitor'] = []
+_listener_installed = False
+
+
+def _listener(event: str, duration: float, **kwargs) -> None:
+    if event == _COMPILE_EVENT:
+        for monitor in _active:
+            monitor._events.append(event)
+
+
+def _install_listener() -> None:
+    global _listener_installed
+    if not _listener_installed:
+        jax.monitoring.register_event_duration_secs_listener(_listener)
+        _listener_installed = True
+
+
+class CompileMonitor(contextlib.AbstractContextManager):
+    """Counts backend compilations (executables built, not cache hits)
+    between ``__enter__`` and ``__exit__``::
+
+        with CompileMonitor() as mon:
+            step(state)
+        assert mon.compiles == 0   # warm path stayed warm
+    """
+
+    def __init__(self) -> None:
+        self._events: list[str] = []
+
+    def __enter__(self) -> 'CompileMonitor':
+        _install_listener()
+        _active.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _active.remove(self)
+
+    @property
+    def compiles(self) -> int:
+        return len(self._events)
+
+
+def count_compiles(thunk: Callable[[], object]) -> int:
+    """Backend compilations triggered by one call of ``thunk``."""
+    with CompileMonitor() as monitor:
+        thunk()
+    return monitor.compiles
+
+
+class RetraceError(AssertionError):
+    """A compile-once guarantee failed (details name the offending calls)."""
+
+
+def _cache_size(fn) -> int | None:
+    try:
+        return fn._cache_size()          # jitted callables (pjit)
+    except Exception:
+        return None
+
+
+def assert_compiles(fn: Callable, *args, times: int = 1,
+                    calls: int | None = None, warmup: int = 0,
+                    **kwargs) -> None:
+    """Assert ``fn`` compiles during exactly its first ``times`` calls.
+
+    ``fn(*args, **kwargs)`` is invoked ``calls`` times (default
+    ``times + 2``); compilation — of anything, including the tiny
+    executables eager ops build — must occur during the first ``times``
+    calls only. ``times=1`` pins the classic loop property: the first
+    iteration pays the compile, every later iteration replays.
+    ``times=0`` with ``warmup=1`` asserts an already-warm path stays warm.
+
+    When ``fn`` is itself a jitted callable its tracing-cache size is also
+    required to grow by at most ``times`` — a retrace served from a warm
+    executable cache (no backend compile) still fails.
+    """
+    calls = times + 2 if calls is None else calls
+    if calls < times:
+        raise ValueError(f'calls={calls} < times={times}')
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    cache_before = _cache_size(fn)
+    compiled_during: list[int] = []
+    counts: list[int] = []
+    for i in range(calls):
+        with CompileMonitor() as monitor:
+            fn(*args, **kwargs)
+        counts.append(monitor.compiles)
+        if monitor.compiles:
+            compiled_during.append(i)
+    expected = list(range(times))
+    if compiled_during != expected:
+        label = getattr(fn, '__name__', repr(fn))
+        raise RetraceError(
+            f'{label}: expected compilation during exactly the first '
+            f'{times} of {calls} calls, but calls {compiled_during} '
+            f'compiled (per-call compile counts: {counts}). A compile '
+            f'after call {times - 1 if times else 0} means the program '
+            'retraces instead of replaying.')
+    cache_after = _cache_size(fn)
+    if cache_before is not None and cache_after is not None:
+        grown = cache_after - cache_before
+        if grown > times:
+            raise RetraceError(
+                f'{getattr(fn, "__name__", repr(fn))}: tracing cache grew '
+                f'by {grown} entries over {calls} calls (max {times} '
+                'expected) — the callable retraces per call.')

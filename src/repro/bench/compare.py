@@ -45,6 +45,9 @@ MEASURE_KEYS = frozenset({
     'latency_mean_ms', 'latency_p50_ms', 'latency_p95_ms', 'latency_max_ms',
     'queue_depth_mean', 'queue_depth_max', 'degraded_flushes',
     'deadline_misses', 'jaccard_vs_exact',
+    # program-structure audit (observatory --audit): typed-optional, only
+    # present when the run was audited
+    'collective_count', 'accum_dtype_ok',
 })
 
 
@@ -175,6 +178,19 @@ def compare_docs(base: dict, new: dict, *, tol_wall: float = 0.25,
                 cell, 'hvp_count', b['hvp_count'], n['hvp_count'],
                 n['hvp_count'] > b['hvp_count'],
                 note='any increase regresses (analytic bill)'))
+        if 'collective_count' in b and 'collective_count' in n:
+            diffs.append(CellDiff(
+                cell, 'collective_count', b['collective_count'],
+                n['collective_count'],
+                n['collective_count'] > b['collective_count'],
+                note='any increase regresses (program structure)'))
+        if 'accum_dtype_ok' in b and 'accum_dtype_ok' in n:
+            diffs.append(CellDiff(
+                cell, 'accum_dtype_ok', float(b['accum_dtype_ok']),
+                float(n['accum_dtype_ok']),
+                bool(b['accum_dtype_ok']) and not n['accum_dtype_ok'],
+                note='True->False regresses (low-precision accumulation '
+                     'crept in)'))
     return CompareReport(diffs=diffs, missing=missing, added=added)
 
 

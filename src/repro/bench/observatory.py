@@ -284,7 +284,14 @@ class SweepCell:
     the per-hypergradient analytic bill (k for Nyström, l for CG/Neumann,
     p for exact); ``wall_seconds`` is the best-of-``reps`` wall time of the
     whole vmapped population program (compile excluded),
-    ``applies_per_sec`` = tasks / wall_seconds."""
+    ``applies_per_sec`` = tasks / wall_seconds.
+
+    The two ``None``-default fields are the optional program-structure
+    audit (``measure_cell(..., audit=True)``): ``collective_count`` is the
+    number of collectives in the lowered StableHLO of the measured program,
+    ``accum_dtype_ok`` whether every matmul in it accumulates at float32 or
+    wider. They ride into BENCH rows as typed-optional measurements so
+    ``compare_runs.py`` can flag structure regressions between runs."""
     problem: str
     solver: str
     grid: dict
@@ -295,14 +302,32 @@ class SweepCell:
     wall_seconds: float
     applies_per_sec: float
     backend: str = 'tree'
+    collective_count: int | None = None
+    accum_dtype_ok: bool | None = None
+
+
+def _audit_cell(fn, batched) -> tuple[int, bool]:
+    """(collective_count, accum_dtype_ok) for the measured program: total
+    collectives in the lowered StableHLO, and whether every dot accumulates
+    at float32 or wider (the BF16_SKETCH_CONTRACT accumulation rule)."""
+    from repro.analysis import Contract, audit
+    report = audit(fn, *batched)
+    count = len(report.records(source='stablehlo'))
+    ok = Contract(name='observatory accumulation',
+                  min_accum_dtype='float32').check(report) == []
+    return count, ok
 
 
 def measure_cell(bundle: PopulationBundle, solver_name: str, point: dict,
-                 *, backend: str = 'tree', reps: int = 2) -> SweepCell:
+                 *, backend: str = 'tree', reps: int = 2,
+                 audit: bool = False) -> SweepCell:
     """Measure one (solver, grid point, backend) cell against a built
     population. ``backend`` reaches the solver only when its ``SolverSpec``
     declares ``builds_backend`` (Nyström's operand layouts); for the others
-    it is recorded as-is in the cell — they have no backend dial."""
+    it is recorded as-is in the cell — they have no backend dial. With
+    ``audit=True`` the exact program being timed is also audited
+    (:func:`repro.analysis.audit`) and the cell carries its
+    ``collective_count`` / ``accum_dtype_ok``."""
     cfg = dict(point)
     if SOLVERS[solver_name].builds_backend:
         cfg['backend'] = backend
@@ -312,6 +337,9 @@ def measure_cell(bundle: PopulationBundle, solver_name: str, point: dict,
             bundle.problem, solver, th, ph, ib, ob, rng=key)))
     batched = (bundle.theta, bundle.phi, bundle.inner_b, bundle.outer_b,
                bundle.keys)
+    collective_count = accum_dtype_ok = None
+    if audit:
+        collective_count, accum_dtype_ok = _audit_cell(fn, batched)
     hg = jax.block_until_ready(fn(*batched))     # compile + warm
     wall = math.inf
     for _ in range(max(1, reps)):
@@ -325,7 +353,8 @@ def measure_cell(bundle: PopulationBundle, solver_name: str, point: dict,
         err_max=float(jnp.max(errs)),
         hvp_count=accounted_hvps(solver, bundle.problem, 1),
         wall_seconds=wall, applies_per_sec=bundle.tasks / max(wall, 1e-12),
-        backend=backend)
+        backend=backend, collective_count=collective_count,
+        accum_dtype_ok=accum_dtype_ok)
 
 
 def run_sweep(problem_specs=DEFAULT_PROBLEM_SPECS,
@@ -336,6 +365,7 @@ def run_sweep(problem_specs=DEFAULT_PROBLEM_SPECS,
               batch_size: int | None = None, seed: int = 0,
               oracle_rho: float = 0.0, reps: int = 2,
               max_oracle_p: int = DEFAULT_MAX_ORACLE_P,
+              audit: bool = False,
               progress: Callable[[str], None] | None = None,
               ) -> list[SweepCell]:
     """The full sweep: problems × solvers × per-solver grid points ×
@@ -346,7 +376,9 @@ def run_sweep(problem_specs=DEFAULT_PROBLEM_SPECS,
     ``backends`` axis applies only to solvers whose ``SolverSpec`` declares
     ``builds_backend`` (Nyström); backend-less solvers measure each grid
     point once, tagged 'tree'. The population (adaptation + oracle) is
-    built once per problem and shared by all its cells.
+    built once per problem and shared by all its cells. ``audit=True``
+    additionally audits each cell's timed program and fills the cells'
+    ``collective_count`` / ``accum_dtype_ok``.
     """
     say = progress or (lambda msg: None)
     grid = DEFAULT_GRID if grid is None else grid
@@ -372,7 +404,8 @@ def run_sweep(problem_specs=DEFAULT_PROBLEM_SPECS,
             for point in points[solver_name]:
                 for backend in solver_backends:
                     cell = measure_cell(bundle, solver_name, point,
-                                        backend=backend, reps=reps)
+                                        backend=backend, reps=reps,
+                                        audit=audit)
                     cells.append(cell)
                     knobs = ','.join(f'{k}={v}'
                                      for k, v in point.items()) or '-'

@@ -15,10 +15,12 @@ Public API:
   SketchPolicy / SketchState                      — sketch lifecycle (amortization)
   make_hvp / extract_columns / PyTreeIndexer      — HVP substrate
 """
-from repro.core.backend import (BACKENDS, FlatBackend, FlatShardedBackend,
-                                PallasBackend, ShardedOperand, TreeBackend,
-                                flatten_sketch, flatten_vec, flatten_vecm,
-                                get_backend, unflatten_vec, unflatten_vecm)
+from repro.core.backend import (BACKENDS, BF16_SKETCH_CONTRACT,
+                                FLAT_SHARDED_CONTRACT, FlatBackend,
+                                FlatShardedBackend, PallasBackend,
+                                ShardedOperand, TreeBackend, flatten_sketch,
+                                flatten_vec, flatten_vecm, get_backend,
+                                unflatten_vec, unflatten_vecm)
 from repro.core.bilevel import BilevelState, BilevelTrainer
 from repro.core.hvp import extract_columns, make_hvp, make_hvp_fn
 from repro.core.hypergrad import (HypergradConfig, config_from_cli,
@@ -43,7 +45,8 @@ from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_zeros_like)
 
 __all__ = [
-    'BACKENDS', 'BatchSource', 'BilevelProblem', 'BilevelResult',
+    'BACKENDS', 'BF16_SKETCH_CONTRACT', 'FLAT_SHARDED_CONTRACT',
+    'BatchSource', 'BilevelProblem', 'BilevelResult',
     'BilevelState', 'BilevelTrainer', 'DenseFactor', 'PROBLEMS',
     'InfluenceProblem', 'InfluenceResult', 'influence',
     'influence_build_hvps', 'influence_curvature_hvp', 'make_topk_scanner',

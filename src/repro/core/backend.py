@@ -105,7 +105,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.auditor import Contract
 from repro.core.tree_util import PyTree, tree_axpy, tree_scale, tree_sub
+
+# ---------------------------------------------------------------------------
+# Declared structural contracts.  These are the docstring guarantees above,
+# written as checkable objects: tests (and any caller holding a lowered
+# apply) audit the real program against them instead of grepping HLO text.
+# ---------------------------------------------------------------------------
+
+#: ``flat_sharded`` apply / apply_matrix (refine=0): the k-output reduction
+#: is exactly ONE psum — a (k,) or (k, m) all-reduce — per apply pass, no
+#: parameter leaf is ever all-gathered (in lowered StableHLO or in the
+#: GSPMD-partitioned HLO), every contraction accumulates f32 even under
+#: bf16 sketch storage, and nothing round-trips through the host.
+FLAT_SHARDED_CONTRACT = Contract(
+    name='flat_sharded apply',
+    no_all_gather=True,
+    exact_collectives={'psum': 1},
+    min_accum_dtype='float32',
+    min_reduction_dtype='float32',
+    no_host_transfer=True,
+)
+
+#: bf16 sketch storage (any flat-family backend): the buffer may be bf16
+#: but every dot accumulates f32 (``preferred_element_type``) and every
+#: cross-device reduction carries f32 — storage precision never leaks into
+#: accumulation.
+BF16_SKETCH_CONTRACT = Contract(
+    name='bf16 sketch contraction',
+    min_accum_dtype='float32',
+    min_reduction_dtype='float32',
+)
 
 # ---------------------------------------------------------------------------
 # pytree <-> fused-buffer conversion (the one-time cost of the flat backends)

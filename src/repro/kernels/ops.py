@@ -11,12 +11,24 @@ import functools
 
 import jax
 
+from repro.analysis.auditor import Contract
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.nystrom_gram import nystrom_cross as _cross
 from repro.kernels.nystrom_gram import nystrom_gram as _gram
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.woodbury import woodbury_apply as _wapply
 from repro.kernels.woodbury import woodbury_ctv as _wctv
+
+
+#: Every kernel wrapper here — Pallas grid or XLA twin — accumulates f32
+#: (bf16 slabs are upcast in VMEM before the MXU dot) and never leaves the
+#: device. The jaxpr auditor recurses into ``pallas_call`` kernel jaxprs,
+#: so this is checkable on the *kernel body's* dots, not just the wrapper.
+KERNEL_CONTRACT = Contract(
+    name='pallas kernel accumulation',
+    min_accum_dtype='float32',
+    no_host_transfer=True,
+)
 
 
 @functools.cache

@@ -289,14 +289,17 @@ def main(argv=None):
             if (i + 1) % args.outer_every == 0:
                 outer_b = stream.batch(10_000_000 + i, args.batch,
                                        clean_only=True)
+                okey = jax.random.PRNGKey(i)
                 if policy is not None and sketch_state is None:
                     # structural zeros at max staleness: the first outer
-                    # step's lax.cond rebuilds it; costs no HVPs here
+                    # step's lax.cond rebuilds it; costs no HVPs here.
+                    # init_state's rng is eval_shape-only, but fold it
+                    # anyway so the step key is never handed out twice
                     sketch_state = policy.init_state(
-                        params, hparams, batch, jax.random.PRNGKey(i))
+                        params, hparams, batch, jax.random.fold_in(okey, 1))
                 hparams, outer_state, val, sketch_state = outer_step(
                     params, hparams, outer_state, jnp.int32(i),
-                    batch, outer_b, jax.random.PRNGKey(i), sketch_state)
+                    batch, outer_b, okey, sketch_state)
                 w = jax.nn.softmax(hparams['domain_logits'])
                 noisy = float(w[jnp.array(stream.noisy_domains)].sum())
                 print(f'[outer] step {i+1} val(pre-update)={float(val):.4f} '

@@ -38,6 +38,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.auditor import Contract, ProgramReport, audit
 from repro.core.hypergrad import HypergradConfig
 from repro.core.problem import (InfluenceProblem, influence_build_hvps,
                                 influence_curvature_hvp, make_topk_scanner,
@@ -48,6 +49,16 @@ from repro.serve.batcher import PendingQuery, QueryBatcher, calibrate_block_size
 from repro.serve.store import SketchStore, sketch_key
 
 log = logging.getLogger(__name__)
+
+#: The docstring's hot-path claims, checkable: the flush computation —
+#: ``apply_matrix`` over the (p, m) block plus the streamed top-k scan —
+#: accumulates f32 everywhere and never round-trips through the host
+#: (no callback may hide inside a served program).
+SERVE_QUERY_CONTRACT = Contract(
+    name='serve query path',
+    min_accum_dtype='float32',
+    no_host_transfer=True,
+)
 
 
 class ServiceOverloaded(RuntimeError):
@@ -275,6 +286,25 @@ class InfluenceService:
                 f'({len(self.batcher)} queries pending — pump() or flush())')
         return self._responses.pop(ticket)
 
+    def audit_query_path(self, m: int | None = None) -> ProgramReport:
+        """Audit the warm flush computation — ``apply_matrix`` over an
+        m-wide zero block followed by the top-k scan — against
+        :data:`SERVE_QUERY_CONTRACT`, raising ``ContractViolation`` with
+        the offending ops if the served program ever grows a host
+        round-trip or a low-precision accumulation. Returns the report so
+        callers can inspect collective/dot structure further."""
+        m = self.batcher.block_size if m is None else m
+        state, _, degraded = self._prepared_state()
+        solver = self._fallback if degraded else self.solver
+        Vm = jax.tree.map(
+            lambda x: jnp.zeros(x.shape + (m,), jnp.float32), self.params)
+
+        def flush(V):
+            # state stays closed over: fallback states need not be pytrees
+            return self._scan(solver.apply_matrix(state, V), self.top_k)
+
+        return SERVE_QUERY_CONTRACT.enforce(audit(flush, Vm))
+
     # ------------------------------------------------------------ warmup
     def prepare(self) -> bool:
         """Build (or fetch) the sketch ahead of traffic, off the request
@@ -356,6 +386,8 @@ class InfluenceService:
             backend, 'name', type(backend).__name__)
         qps = (s['answered'] / s['busy_seconds']
                if s['busy_seconds'] > 0 else 0.0)
+        # repro: allow[bench-row-literal] — src/ cannot import benchmarks/;
+        # write_bench validates these rows against the same schema contract
         return [{
             'solver': type(self.solver).__name__,
             'backend': backend,

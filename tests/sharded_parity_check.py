@@ -14,12 +14,15 @@ Checks, on a 2×4 ('data', 'model') host mesh:
     (the 9-element leaf with P('data') degrades to replication) / scalar;
   * end-to-end NystromIHVP apply parity for stabilized / Eq. 6 / chunked;
   * the compiled prepare→ctv pipeline contains an all-reduce (the psum)
-    and NO all-gather — the fused path never rematerializes a leaf;
+    and NO all-gather — the fused path never rematerializes a leaf
+    (checked by ``repro.analysis.audit`` + a declarative Contract, not by
+    grepping HLO text);
   * bf16 sketch storage stays within bf16-rounding tolerance of tree/f32;
   * the m-query block apply (``apply_matrix``) matches the tree backend for
-    stabilized / Eq. 6 / chunked, and lowers to exactly ONE psum (one
-    ``all_reduce`` op for the whole (k, m) block, not m k-float psums) with
-    no all-gather.
+    stabilized / Eq. 6 / chunked, and satisfies
+    ``repro.core.FLAT_SHARDED_CONTRACT``: exactly ONE psum — a single
+    (k, m) block all-reduce, not m k-float psums — no all-gather in any
+    layer, f32 accumulation throughout.
 
 Prints one ``OK <name>`` marker per passed check; the pytest wrapper
 asserts on the full set, so a silently-skipped check fails the suite.
@@ -117,7 +120,10 @@ def check_solver(mesh):
 
 def check_no_all_gather(mesh):
     """The whole sharded pipeline — fuse, whitened apply, un-fuse — must
-    lower without a single all-gather of a parameter leaf."""
+    compile without a single all-gather of a parameter leaf. Audited with
+    ``compile=True``: the GSPMD-partitioned HLO is the only layer where
+    inserted gathers exist, and the Contract checks both text layers."""
+    from repro.analysis import Contract, audit
     C_tree, v = _sketch_and_vec()
     sb = get_backend('flat_sharded', mesh=mesh, specs=SPECS)
     place = {kk: sanitize_spec(PARAMS[kk].shape, SPECS[kk], mesh)
@@ -133,9 +139,13 @@ def check_no_all_gather(mesh):
         t = sb.ctv(op, sb.vec(v_))
         return t, sb.unvec(sb.combine(op, t, sb.vec(v_), 0.1), v_)
 
-    txt = jax.jit(pipeline).lower(Cp, vp).compile().as_text()
-    assert 'all-reduce' in txt, 'expected the psum to lower to all-reduce'
-    assert 'all-gather' not in txt, 'sharded leaf was all-gathered'
+    report = Contract(
+        name='flat_sharded pipeline', no_all_gather=True,
+        min_collectives={'psum': 1},
+        min_accum_dtype='float32').enforce(
+            audit(pipeline, Cp, vp, compile=True))
+    assert report.count('psum', 'hlo') >= 1, \
+        'expected the psum to survive into compiled HLO as an all-reduce'
     print('OK hlo:no-all-gather')
 
 
@@ -168,19 +178,21 @@ def check_block_apply(mesh):
 
 def check_block_single_psum(mesh):
     """One (k, m) psum per block apply — the whole point of ctm — and never
-    an all-gather of a parameter shard."""
+    an all-gather of a parameter shard: ``FLAT_SHARDED_CONTRACT`` over the
+    audited + compiled program, on the real 8-device mesh."""
+    from repro.analysis import audit
+    from repro.core import FLAT_SHARDED_CONTRACT
     idxr, hvp = _quadratic()
     sb = get_backend('flat_sharded', mesh=mesh, specs=SPECS)
     solver = NystromIHVP(k=8, rho=1e-2, backend=sb, refine=0)
     sketch = solver.prepare(hvp, idxr, jax.random.PRNGKey(32))
     for m in (4, 16):
-        low = jax.jit(solver.apply_matrix).lower(sketch, _query_block(m))
-        txt = low.as_text()
-        assert txt.count('all_reduce') == 1, \
-            f'expected exactly one psum in the block apply at m={m}'
-        assert 'all_gather' not in txt
-        ctxt = low.compile().as_text()
-        assert 'all-gather' not in ctxt
+        report = FLAT_SHARDED_CONTRACT.enforce(
+            audit(solver.apply_matrix, sketch, _query_block(m),
+                  compile=True))
+        (psum,) = report.records('psum', 'jaxpr')
+        assert psum.shape == (8, m), \
+            f'expected one (k, m) block psum at m={m}, got {psum.render()}'
     print('OK block:single-psum')
 
 

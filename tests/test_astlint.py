@@ -1,0 +1,194 @@
+"""Repo-rule AST lint: each rule on minimal sources, suppression syntax,
+and the gate CI enforces — ``lint_paths`` clean over the shipped tree."""
+import pathlib
+import textwrap
+
+from repro.analysis import lint_paths, lint_source
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------- prng rule
+class TestPrngKeyReuse:
+    def test_duplicate_literal_key_flagged(self):
+        src = textwrap.dedent("""
+            import jax
+            a = jax.random.PRNGKey(0)
+            b = jax.random.PRNGKey(0)
+        """)
+        findings = lint_source(src)
+        assert _rules(findings) == ['prng-key-reuse']
+        assert findings[0].line == 4
+
+    def test_distinct_keys_pass(self):
+        src = textwrap.dedent("""
+            import jax
+            a = jax.random.PRNGKey(0)
+            b = jax.random.PRNGKey(1)
+            c = jax.random.fold_in(a, 1)
+        """)
+        assert lint_source(src) == []
+
+    def test_scopes_are_independent(self):
+        # the same seed in two different functions is two different streams
+        src = textwrap.dedent("""
+            import jax
+            def f():
+                return jax.random.PRNGKey(0)
+            def g():
+                return jax.random.PRNGKey(0)
+        """)
+        assert lint_source(src) == []
+
+    def test_nonliteral_args_not_tracked(self):
+        src = textwrap.dedent("""
+            import jax
+            for i in range(3):
+                k = jax.random.PRNGKey(i)
+        """)
+        assert lint_source(src) == []
+
+
+# ----------------------------------------------------------- host-sync rule
+class TestTracedHostSync:
+    def test_float_inside_jit_flagged(self):
+        src = textwrap.dedent("""
+            import jax
+            @jax.jit
+            def step(x):
+                return float(x.sum())
+        """)
+        assert _rules(lint_source(src)) == ['traced-host-sync']
+
+    def test_item_inside_scan_body_flagged(self):
+        src = textwrap.dedent("""
+            import jax
+            def body(c, x):
+                return c + x.item(), None
+            def run(xs):
+                return jax.lax.scan(body, 0.0, xs)
+        """)
+        assert _rules(lint_source(src)) == ['traced-host-sync']
+
+    def test_float_outside_traced_code_passes(self):
+        src = textwrap.dedent("""
+            def log(x):
+                return float(x)
+        """)
+        assert lint_source(src) == []
+
+    def test_jax_tree_map_is_not_control_flow(self):
+        # regression: jax.tree.map's callee is host code, not a scan body
+        src = textwrap.dedent("""
+            import jax, numpy as np
+            def flatten(tree):
+                return jax.tree.map(lambda l: np.asarray(l), tree)
+        """)
+        assert lint_source(src) == []
+
+
+# ----------------------------------------------------------- bench-row rule
+class TestBenchRowLiteral:
+    SRC = textwrap.dedent("""
+        def rows():
+            return [{'solver': 'nystrom', 'backend': 'flat',
+                     'applies_per_sec': 10.0, 'm': 4}]
+    """)
+
+    def test_identity_dict_outside_common_flagged(self):
+        findings = lint_source(self.SRC, path='benchmarks/rogue.py')
+        assert _rules(findings) == ['bench-row-literal']
+
+    def test_common_py_is_the_sanctioned_writer(self):
+        assert lint_source(self.SRC, path='benchmarks/common.py') == []
+
+    def test_partial_key_overlap_passes(self):
+        src = "row = {'solver': 's', 'backend': 'b'}\n"
+        assert lint_source(src, path='benchmarks/x.py') == []
+
+
+# ------------------------------------------------------ solver-protocol rule
+class TestSolverProtocol:
+    def test_incomplete_solver_flagged(self):
+        src = textwrap.dedent("""
+            class HalfIHVP:
+                amortizable = True
+                def prepare(self, hvp, idxr, rng): ...
+                def apply(self, state, v): ...
+            SOLVERS = {'half': SolverSpec(HalfIHVP, k=4)}
+        """)
+        findings = lint_source(src)
+        assert _rules(findings) == ['solver-protocol']
+        assert 'apply_matrix' in findings[0].message
+
+    def test_complete_solver_passes(self):
+        src = textwrap.dedent("""
+            class FullIHVP:
+                amortizable = True
+                def prepare(self, hvp, idxr, rng): ...
+                def apply(self, state, v): ...
+                def apply_matrix(self, state, V): ...
+            SOLVERS = {'full': SolverSpec(FullIHVP, k=4)}
+        """)
+        assert lint_source(src) == []
+
+    def test_real_registry_satisfies_protocol(self):
+        findings = lint_source(
+            (REPO / 'src/repro/core/solvers.py').read_text(),
+            path='src/repro/core/solvers.py')
+        assert [f for f in findings if f.rule == 'solver-protocol'] == []
+
+
+# -------------------------------------------------------------- suppression
+class TestSuppression:
+    def test_inline_allow(self):
+        src = ("import jax\n"
+               "a = jax.random.PRNGKey(0)\n"
+               "b = jax.random.PRNGKey(0)  # repro: allow[prng-key-reuse]\n")
+        assert lint_source(src) == []
+
+    def test_comment_block_above(self):
+        src = ("import jax\n"
+               "a = jax.random.PRNGKey(0)\n"
+               "# repro: allow[prng-key-reuse] — deliberate shared stream\n"
+               "# (both variants must see identical randomness)\n"
+               "b = jax.random.PRNGKey(0)\n")
+        assert lint_source(src) == []
+
+    def test_wrong_rule_name_does_not_suppress(self):
+        src = ("import jax\n"
+               "a = jax.random.PRNGKey(0)\n"
+               "b = jax.random.PRNGKey(0)  # repro: allow[traced-host-sync]\n")
+        assert _rules(lint_source(src)) == ['prng-key-reuse']
+
+    def test_star_suppresses_everything(self):
+        src = ("import jax\n"
+               "a = jax.random.PRNGKey(0)\n"
+               "b = jax.random.PRNGKey(0)  # repro: allow[*]\n")
+        assert lint_source(src) == []
+
+    def test_unrelated_code_line_breaks_the_block(self):
+        src = ("import jax\n"
+               "# repro: allow[prng-key-reuse]\n"
+               "a = jax.random.PRNGKey(0)\n"
+               "b = jax.random.PRNGKey(0)\n")
+        assert _rules(lint_source(src)) == ['prng-key-reuse']
+
+
+# ------------------------------------------------------------ parse errors
+def test_syntax_error_reported_not_raised():
+    findings = lint_source('def broken(:\n')
+    assert _rules(findings) == ['parse-error']
+
+
+# ------------------------------------------------------------- the CI gate
+def test_repo_lints_clean():
+    """Exactly what CI runs: the shipped tree has zero findings."""
+    scope = [str(REPO / d) for d in ('src', 'examples', 'benchmarks',
+                                     'tools')]
+    findings = lint_paths(scope)
+    assert findings == [], '\n'.join(f.render() for f in findings)

@@ -6,7 +6,10 @@ the single real CPU device (smoke tests and benches depend on it). So the
 8-device parity suite — tests/sharded_parity_check.py — runs in a fresh
 interpreter with XLA_FLAGS=--xla_force_host_platform_device_count=8, and
 this wrapper asserts on its ``OK <name>`` markers so a check that silently
-vanished fails loudly here.
+vanished fails loudly here. The structural checks in that suite (single
+psum per block apply, no all-gather of a parameter shard) go through
+``repro.analysis.audit`` + ``repro.core.FLAT_SHARDED_CONTRACT`` rather
+than HLO-substring greps, so failures name the offending op.
 """
 import os
 import subprocess

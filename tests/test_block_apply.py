@@ -13,8 +13,9 @@ Guarantees pinned here:
     direct Eq. 6 path solves a cond²-amplified k×k system, where batched
     multi-RHS LU and per-column solves legitimately differ at ~1e-4 rel —
     hence the looser tolerance there);
-  * flat_sharded's block apply issues exactly ONE psum per apply pass
-    (counted as ``all_reduce`` ops in lowered HLO), not m;
+  * flat_sharded's block apply issues exactly ONE psum per apply pass —
+    enforced via ``repro.core.FLAT_SHARDED_CONTRACT`` over the audited
+    program (``repro.analysis.audit``), not m separate psums;
   * ``query_width`` rejects ragged blocks (the symptom of passing a plain
     parameter tree where a block was expected);
   * ``phi_vjp_block`` (the batched-cotangent implicit path) matches the
@@ -190,25 +191,32 @@ def test_block_apply_under_jit():
 
 # ------------------------------------------------------------- psum count
 def test_flat_sharded_block_apply_single_psum():
-    """The whole m-query apply crosses the mesh once: exactly one psum (one
-    ``all_reduce`` op in lowered HLO) regardless of m, and never an
-    all-gather of a parameter shard."""
+    """The whole m-query apply crosses the mesh once — exactly one psum
+    regardless of m, never an all-gather of a parameter shard, f32
+    accumulation throughout: FLAT_SHARDED_CONTRACT, checked on the audited
+    program instead of grepping lowered text."""
+    from repro.analysis import Contract, audit
+    from repro.core import FLAT_SHARDED_CONTRACT
+
     idxr, hvp = _quadratic(seed=41)
     be = _backends()['flat_sharded']
     solver = NystromIHVP(k=8, rho=1e-2, backend=be, refine=0)
     state = solver.prepare(hvp, idxr, jax.random.PRNGKey(42))
     for m in (4, 16):
         _, Vm = _block(m, seed=m)
-        txt = jax.jit(solver.apply_matrix).lower(state, Vm).as_text()
-        assert txt.count('all_reduce') == 1, \
-            f'expected exactly one psum at m={m}'
-        assert 'all_gather' not in txt
+        report = FLAT_SHARDED_CONTRACT.enforce(
+            audit(solver.apply_matrix, state, Vm))
+        # the one collective is the (k, m) block psum, not m k-float psums
+        (psum,) = report.records('psum', 'jaxpr')
+        assert psum.shape == (8, m)
     # each refinement sweep legitimately adds psums (ctm inside the residual
     # and the correction woodbury); the base apply stays at one
     ref = NystromIHVP(k=8, rho=1e-2, backend=be, refine=1)
     _, Vm = _block(4, seed=4)
-    txt = jax.jit(ref.apply_matrix).lower(state, Vm).as_text()
-    assert txt.count('all_reduce') > 1
+    report = audit(ref.apply_matrix, state, Vm)
+    assert report.count('psum') > 1
+    Contract(name='refined block apply', no_all_gather=True,
+             min_accum_dtype='float32').enforce(report)
 
 
 # ------------------------------------------------------------ implicit path

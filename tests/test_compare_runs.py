@@ -87,6 +87,41 @@ class TestCompareDocs:
         (reg,) = report.regressions
         assert reg.field == 'hvp_count'
 
+    def test_collective_count_increase_regresses(self):
+        base, new = _doc(), _doc()
+        for doc in (base, new):
+            doc['rows'][0]['collective_count'] = 1
+            doc['rows'][0]['accum_dtype_ok'] = True
+        assert compare_docs(base, new).ok
+        new['rows'][0]['collective_count'] = 2
+        report = compare_docs(base, new)
+        (reg,) = report.regressions
+        assert reg.field == 'collective_count'
+        assert 'program structure' in reg.note
+
+    def test_accum_dtype_ok_flip_to_false_regresses(self):
+        base, new = _doc(), _doc()
+        for doc in (base, new):
+            doc['rows'][0]['accum_dtype_ok'] = True
+        new['rows'][0]['accum_dtype_ok'] = False
+        report = compare_docs(base, new)
+        (reg,) = report.regressions
+        assert reg.field == 'accum_dtype_ok'
+        # the reverse flip (a fix) is an improvement, not a regression
+        assert compare_docs(new, base).ok
+
+    def test_unaudited_runs_skip_audit_fields(self):
+        """Rows without the --audit fields diff exactly as before —
+        audited baselines also tolerate an unaudited new run (the field
+        check needs both sides)."""
+        base = _doc()
+        base['rows'][0]['collective_count'] = 3
+        base['rows'][0]['accum_dtype_ok'] = True
+        report = compare_docs(base, _doc())
+        assert report.ok
+        assert not [d for d in report.diffs
+                    if d.field in ('collective_count', 'accum_dtype_ok')]
+
     def test_missing_baseline_cell_fails_named(self):
         new = _doc()
         del new['rows'][1]

@@ -198,6 +198,45 @@ class TestBackendAxis:
         assert cell.backend == 'tree'
 
 
+class TestAuditFields:
+    """--audit: each cell's timed program audited via repro.analysis."""
+
+    def test_audit_off_leaves_fields_none(self):
+        bundle = build_population(SPEC, tasks=1)
+        cell = measure_cell(bundle, 'cg', {'k': 2, 'rho': RHO}, reps=1)
+        assert cell.collective_count is None
+        assert cell.accum_dtype_ok is None
+
+    def test_audit_fills_structure_fields(self):
+        bundle = build_population(SPEC, tasks=1)
+        cell = measure_cell(bundle, 'nystrom', {'k': 2, 'rho': RHO},
+                            reps=1, audit=True)
+        # single-device, f32 throughout: no collectives, clean accumulation
+        assert cell.collective_count == 0
+        assert cell.accum_dtype_ok is True
+
+    def test_audited_rows_round_trip_through_schema_check(self, tmp_path,
+                                                          monkeypatch):
+        monkeypatch.setenv('BENCH_OUT_DIR', str(tmp_path))
+        bundle = build_population(SPEC, tasks=1)
+        cell = measure_cell(bundle, 'cg', {'k': 2, 'rho': RHO}, reps=1,
+                            audit=True)
+        rows = [bench_row(solver=cell.solver, backend=cell.backend, m=1,
+                          applies_per_sec=cell.applies_per_sec,
+                          wall_seconds=cell.wall_seconds,
+                          problem=cell.problem, hvp_count=cell.hvp_count,
+                          collective_count=cell.collective_count,
+                          accum_dtype_ok=cell.accum_dtype_ok)]
+        path = write_bench('observatory_audit_test', rows)
+        assert check_file(path) == []
+        # the checker types the optional fields, not just presence
+        doc = json.loads(open(path).read())
+        doc['rows'][0]['accum_dtype_ok'] = 'yes'
+        bad = tmp_path / 'BENCH_bad.json'
+        bad.write_text(json.dumps(doc))
+        assert any('accum_dtype_ok' in e for e in check_file(str(bad)))
+
+
 class TestPopulation:
     def test_oracle_guard_refuses_large_p(self):
         with pytest.raises(ValueError, match='max_oracle_p'):

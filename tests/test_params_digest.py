@@ -1,0 +1,92 @@
+"""checkpoint.params_digest and the digest-drift invalidation it anchors.
+
+The digest is the checkpoint-identity half of every serving-cache key:
+two trees digest equal iff a save/restore round-trip reproduces one from
+the other. Pinned here: path-order stability, and sensitivity to bytes,
+dtype and shape — plus the consumer contract, ``SketchStore``'s
+``invalidate_params`` dropping exactly the entries at a drifted digest.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import params_digest
+from repro.serve.store import SketchKey, SketchStore
+
+
+def _tree():
+    return {'w': jnp.arange(6.0).reshape(2, 3), 'b': jnp.zeros((3,)),
+            'nested': {'s': jnp.float32(2.5)}}
+
+
+class TestParamsDigest:
+    def test_deterministic(self):
+        assert params_digest(_tree()) == params_digest(_tree())
+        assert len(params_digest(_tree())) == 16
+
+    def test_insertion_order_irrelevant(self):
+        """Digest walks sorted path order, not dict insertion order."""
+        a = {'w': jnp.ones((2,)), 'b': jnp.zeros((3,))}
+        b = {'b': jnp.zeros((3,)), 'w': jnp.ones((2,))}
+        assert params_digest(a) == params_digest(b)
+
+    def test_byte_sensitivity(self):
+        t = _tree()
+        bumped = jax.tree.map(lambda x: x, t)
+        bumped['w'] = t['w'].at[0, 0].add(1e-7)
+        assert params_digest(t) != params_digest(bumped)
+
+    def test_dtype_sensitivity(self):
+        """Same bytes, different dtype — f32 zeros vs i32 zeros — differ."""
+        assert (params_digest({'x': jnp.zeros((4,), jnp.float32)})
+                != params_digest({'x': jnp.zeros((4,), jnp.int32)}))
+
+    def test_shape_sensitivity(self):
+        """Same bytes, different shape — a reshape changes the digest."""
+        x = jnp.arange(6.0)
+        assert (params_digest({'x': x})
+                != params_digest({'x': x.reshape(2, 3)}))
+
+    def test_path_sensitivity(self):
+        assert (params_digest({'a': jnp.ones((2,))})
+                != params_digest({'b': jnp.ones((2,))}))
+
+    def test_numpy_and_device_arrays_agree(self):
+        """The digest is content-addressed: host and device copies of the
+        same values digest identically (what save would write)."""
+        dev = {'w': jnp.arange(4.0)}
+        host = {'w': np.arange(4.0, dtype=np.float32)}
+        assert params_digest(dev) == params_digest(host)
+
+
+class TestDigestDriftInvalidation:
+    def _stocked_store(self, digest):
+        store = SketchStore()
+        for fp in ('nystrom/k=4', 'nystrom/k=8'):
+            store.get_or_build(SketchKey(params=digest, solver=fp),
+                               lambda: {'s': jnp.ones((2,))}, build_hvps=4)
+        return store
+
+    def test_invalidate_params_drops_all_solver_configs(self):
+        d_old = params_digest({'w': jnp.zeros((4,))})
+        store = self._stocked_store(d_old)
+        assert len(store) == 2
+        assert store.invalidate_params(d_old) == 2
+        assert len(store) == 0
+        assert store.invalidations == 2
+
+    def test_drift_misses_instead_of_serving_stale(self):
+        """After params change, the new digest simply never hits the old
+        entries — a retrained model cannot be served a stale sketch."""
+        old = {'w': jnp.zeros((4,))}
+        new = {'w': jnp.zeros((4,)).at[0].set(1.0)}
+        d_old, d_new = params_digest(old), params_digest(new)
+        assert d_old != d_new
+        store = self._stocked_store(d_old)
+        _, built = store.get_or_build(
+            SketchKey(params=d_new, solver='nystrom/k=4'),
+            lambda: {'s': jnp.ones((2,))})
+        assert built                      # miss: the drifted digest is new
+        # dropping the NEW digest leaves the old entries untouched
+        assert store.invalidate_params(d_new) == 1
+        assert len(store) == 2

@@ -1,0 +1,157 @@
+"""Retrace sentinel: the compile-once guarantees of the repo's hot loops.
+
+``assert_compiles(fn, times=1, calls=3)`` pins the property the loops are
+fast because of: the first call pays the compile, every later call
+replays. Applied here to the primitives and then to the two loops the
+ISSUE names — a 3-outer-step ``BilevelTrainer`` loop over its jitted step
+pair, and the warm ``InfluenceService`` query path (submit → flush).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (CompileMonitor, RetraceError, assert_compiles,
+                            count_compiles)
+
+
+# -------------------------------------------------------------- primitives
+class TestMonitor:
+    def test_counts_a_fresh_compile_then_none(self):
+        @jax.jit
+        def f(x):
+            return x * 2.0
+
+        x = jnp.ones((4,))
+        first = count_compiles(lambda: f(x))
+        assert first >= 1
+        assert count_compiles(lambda: f(x)) == 0
+
+    def test_monitors_nest(self):
+        @jax.jit
+        def g(x):
+            return x + 1.0
+
+        with CompileMonitor() as outer:
+            with CompileMonitor() as inner:
+                g(jnp.ones((3,)))
+            assert inner.compiles >= 1
+        assert outer.compiles == inner.compiles
+
+
+class TestAssertCompiles:
+    def test_stable_jit_passes(self):
+        @jax.jit
+        def step(x):
+            return x * x + 1.0
+
+        assert_compiles(step, jnp.ones((8,)), times=1, calls=4)
+
+    def test_per_call_fresh_jit_raises(self):
+        def retracer(x):
+            # a fresh closure per call: the classic silent-retrace bug
+            return jax.jit(lambda v: v * 2.0)(x)
+
+        with pytest.raises(RetraceError, match='retraces'):
+            assert_compiles(retracer, jnp.ones((4,)), times=1, calls=3)
+
+    def test_warm_path_with_warmup(self):
+        @jax.jit
+        def step(x):
+            return x - 1.0
+
+        assert_compiles(step, jnp.ones((5,)), times=0, warmup=1, calls=2)
+
+    def test_shape_dependent_branch_raises(self):
+        calls = []
+
+        @jax.jit
+        def step(x):
+            return x.sum()
+
+        def drifting():
+            # growing shapes force a retrace per call
+            calls.append(None)
+            return step(jnp.ones((len(calls),)))
+
+        with pytest.raises(RetraceError):
+            assert_compiles(drifting, times=1, calls=3)
+
+
+# ------------------------------------------------------------ repo's loops
+def _toy_trainer():
+    from repro.core import BilevelTrainer, HypergradConfig
+    from repro.optim import sgd
+
+    D = 6
+
+    def inner(prm, hp, batch):
+        return (jnp.sum((prm['w'] - 1.0) ** 2)
+                + jnp.sum(jax.nn.softplus(hp['wd']) * prm['w'] ** 2))
+
+    def outer(prm, hp, batch):
+        return jnp.sum(prm['w'] ** 2)
+
+    trainer = BilevelTrainer(
+        inner_loss=inner, outer_loss=outer,
+        inner_opt=sgd(0.05), outer_opt=sgd(0.05),
+        hypergrad=HypergradConfig(solver='nystrom', k=4, rho=1e-2))
+    state = trainer.init(jax.random.PRNGKey(0),
+                         {'w': jnp.zeros((D,))}, {'wd': jnp.zeros((D,))})
+    return trainer, state
+
+
+def test_three_outer_step_loop_compiles_once():
+    """The jitted (inner, outer) step pair driven 3 outer steps: all
+    compilation lands in the first iteration; iterations 2 and 3 replay."""
+    trainer, state0 = _toy_trainer()
+    inner = jax.jit(trainer.inner_step_fn)
+    outer = jax.jit(trainer.outer_step_fn)
+    carry = {'state': state0}
+
+    def one_outer_step():
+        st = carry['state']
+        for _ in range(2):
+            st, _ = inner(st, None)
+        st, _ = outer(st, None, None)
+        carry['state'] = st
+
+    assert_compiles(one_outer_step, times=1, calls=3)
+
+
+def test_trainer_run_recompiles_at_most_once_per_call():
+    """``run`` jits its step pair per invocation, so a second 3-outer-step
+    run costs no MORE compiles than a 1-outer-step run — the loop body
+    inside one run never retraces."""
+    trainer, state0 = _toy_trainer()
+
+    def run(n_outer):
+        batches = iter(lambda: None, object())   # endless None batches
+        trainer.run(state0, batches, iter(lambda: None, object()),
+                    steps_per_outer=2, n_outer=n_outer)
+
+    run(1)                                       # shared caches warm
+    c1 = count_compiles(lambda: run(1))
+    c3 = count_compiles(lambda: run(3))
+    assert c3 <= c1, (c1, c3)
+
+
+def test_warm_serve_query_path_compiles_once():
+    """submit → flush on a sketch-warm InfluenceService: the first query
+    traces qgrad / apply_matrix / the top-k scan, every later query
+    replays. A retrace here bills a compile per request."""
+    from repro.core import NystromIHVP, get_problem, train_influence_params
+    from repro.serve.service import InfluenceService
+
+    problem = get_problem('influence', d=8, width=8)
+    params = train_influence_params(problem, train_steps=3)
+    svc = InfluenceService(problem, NystromIHVP(k=4, rho=1e-2),
+                           params=params, top_k=5, block_size=1)
+    svc.prepare()                               # sketch warm, off-path
+    q = jax.tree.map(lambda x: x[0], problem.reference['queries'](1))
+
+    def query():
+        t = svc.submit(q)
+        svc.flush()
+        svc.result(t)
+
+    assert_compiles(query, times=1, calls=3)

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Repo-rule lint CLI over ``repro.analysis.astlint``.
+
+    python tools/lint.py src examples benchmarks tools
+    python tools/lint.py --list-rules
+
+Prints one ``path:line:col: [rule] message`` per finding and exits 1 when
+anything is flagged (0 on a clean run). Suppress a genuine false positive
+inline with ``# repro: allow[rule-id]`` plus a reason. Rule definitions
+and rationale: docs/static-analysis.md. The generic-lint floor (syntax
+errors, undefined names) is ruff's job — see pyproject ``[tool.ruff]``;
+this pass carries only the repo-specific rules.
+
+Pure AST analysis: no jax import, no tracing — fast enough to gate every
+CI run before the test suite.
+"""
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, 'src')
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.astlint import RULES, lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument('paths', nargs='*', default=['src'],
+                    help='files or directories to lint (default: src)')
+    ap.add_argument('--list-rules', action='store_true',
+                    help='print the rule table and exit')
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(r) for r in RULES)
+        for rule, blurb in sorted(RULES.items()):
+            print(f'{rule:<{width}}  {blurb}')
+        return 0
+
+    findings = lint_paths(args.paths or ['src'])
+    for finding in findings:
+        print(finding.render())
+    if findings:
+        print(f'{len(findings)} finding(s). Suppress a false positive with '
+              "'# repro: allow[rule]' plus a reason.", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())
