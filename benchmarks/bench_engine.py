@@ -1,0 +1,112 @@
+"""Engine benchmark: trilevel solves, dense-oracle parity, per-edge bills.
+
+Two tables over the registered multi-level graphs (``repro.engine``):
+
+* **trilevel rows** (``phase='trilevel'``): each graph solved end-to-end
+  through ``Engine.solve`` — one jitted program for the whole
+  inner-to-outer sweep — with ``hypergrad_error`` measured against the
+  dense multi-level oracle (``engine_hypergrad_reference``, ρ=0) at the
+  solved point, and ``hvp_count`` the run's total amortized bill. Toy
+  sizes by construction: the oracle materializes every solved node's
+  Hessian.
+* **per-edge bill rows** (``phase='edge_bill'``): the analytic
+  amortized-vs-fresh contrast per edge. Amortized bills are *additive*
+  across levels (one live sketch per edge, refreshed on cadence); fresh
+  bills are *multiplicative* down the chain (every upper derivative pass
+  re-prepares every lower edge). The ratio is the nesting analogue of the
+  paper's amortization argument, and any ``hvp_count`` growth here fails
+  the CI gate — the bills are analytic, so growth is a real complexity
+  regression, never noise.
+
+Rows are persisted as ``BENCH_engine.json`` (schema v2, validated by
+benchmarks/check_bench_schema.py) and gated in CI against
+``benchmarks/baselines/engine_ci.json`` via ``compare_runs.py --no-wall``.
+
+CLI (CI bench-smoke runs this):
+  PYTHONPATH=src python -m benchmarks.bench_engine \
+      --problems distill_hpo --n-outer 2
+"""
+import time
+
+from benchmarks.common import bench_row, emit, write_bench
+from repro.core import hypergrad_error
+from repro.engine import (Engine, EngineConfig, engine_edge_bills,
+                          engine_hypergrad, engine_hypergrad_reference,
+                          get_graph)
+
+# compact builder kwargs: small enough for the dense oracle in CI, large
+# enough that every level is a genuine (non-scalar) problem
+COMPACT = {
+    'distill_hpo': dict(d=4, n_classes=2, n_syn=4, n_train=16, n_val=16),
+    'reweight_maml': dict(d=4, n_tasks=2, n_support=8, n_query=8),
+}
+
+
+def run(problems=('distill_hpo', 'reweight_maml'), n_outer: int = 2,
+        solver: str = 'nystrom', refresh_every: int = 1,
+        oracle: bool = True):
+    rows = []
+    for name in problems:
+        g = get_graph(name, solver=solver, refresh_every=refresh_every,
+                      **COMPACT.get(name, {}))
+        order = g.chain_order()
+        t0 = time.time()
+        res = Engine().solve(g, EngineConfig(n_outer=n_outer))
+        wall = time.time() - t0
+
+        err = None
+        if oracle:
+            hg, _ = engine_hypergrad(g, res.values)
+            ref, _ = engine_hypergrad_reference(g, res.values, rho=0.0)
+            err = float(hypergrad_error(hg, ref))
+
+        rows.append(bench_row(
+            solver=solver, backend='tree', m=1,
+            applies_per_sec=n_outer / wall, wall_seconds=wall,
+            problem=name, hvp_count=res.hvp_count, hypergrad_error=err,
+            phase='trilevel', levels=len(order), n_outer=n_outer))
+        emit('bench_engine', wall * 1e6,
+             f'graph={name} levels={len(order)} n_outer={n_outer} '
+             f'hvps={res.hvp_count} '
+             + (f'err_vs_oracle={err:.2e}' if err is not None else ''))
+
+        # amortized vs fresh, per edge — the bills are analytic (the jitted
+        # step hides runtime counters), computed by the same arithmetic the
+        # engine result reports
+        fresh = engine_edge_bills(g, n_outer, amortize=False)
+        for edge, bill in res.edge_hvps.items():
+            for mode, count in (('amortized', bill), ('fresh', fresh[edge])):
+                rows.append(bench_row(
+                    solver=solver, backend='tree', m=1,
+                    applies_per_sec=0.0, wall_seconds=0.0, problem=name,
+                    hvp_count=count, phase='edge_bill', edge=edge,
+                    mode=mode, n_outer=n_outer))
+            emit('bench_engine_bills', 0.0,
+                 f'graph={name} edge={edge} amortized={bill} '
+                 f'fresh={fresh[edge]} ratio={fresh[edge] / max(1, bill):.1f}x')
+    write_bench('engine', rows,
+                meta=dict(problems=list(problems), n_outer=n_outer,
+                          solver=solver, refresh_every=refresh_every))
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument('--problems', nargs='+',
+                    default=['distill_hpo', 'reweight_maml'],
+                    help='registered graph names (repro.engine GRAPHS)')
+    ap.add_argument('--n-outer', type=int, default=2)
+    ap.add_argument('--solver', default='nystrom')
+    ap.add_argument('--refresh-every', type=int, default=1)
+    ap.add_argument('--no-oracle', action='store_true',
+                    help='skip the dense-oracle parity column (rows then '
+                         'carry bills + wall only)')
+    args = ap.parse_args(argv)
+    run(problems=tuple(args.problems), n_outer=args.n_outer,
+        solver=args.solver, refresh_every=args.refresh_every,
+        oracle=not args.no_oracle)
+
+
+if __name__ == '__main__':
+    main()

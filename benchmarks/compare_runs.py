@@ -44,6 +44,11 @@ def main(argv=None) -> int:
                     help='skip wall/throughput checks (cross-machine runs)')
     ap.add_argument('--verbose', action='store_true',
                     help='also print non-regressed cell deltas')
+    ap.add_argument('--fit-rates', action='store_true',
+                    help='append Grazzi-style empirical rate fits (log '
+                         'hypergrad_error vs log hvp_count per cell ladder) '
+                         'for both runs — descriptive, never gates the exit '
+                         'code')
     args = ap.parse_args(argv)
 
     try:
@@ -55,6 +60,11 @@ def main(argv=None) -> int:
         print(f'compare_runs: {e}')
         return 2
     print(format_report(report, verbose=args.verbose))
+    if args.fit_rates:
+        from repro.bench import fit_rates_file, format_rates
+        print()
+        print(format_rates(fit_rates_file(args.baseline),
+                           fit_rates_file(args.new)))
     return 0 if report.ok else 1
 
 

@@ -12,6 +12,9 @@ Public API:
                                                 knobs its SolverSpec consumes)
   compare_docs / CompareError / format_report — two-run regression diffing
                                                 (benchmarks/compare_runs.py)
+  fit_rates / RateFit / format_rates          — Grazzi-style empirical rate
+                                                fits (log-error vs log-HVP
+                                                bill per cell ladder)
 
 The CLI lives in ``benchmarks/observatory.py`` (persistence via
 ``benchmarks/common.py``); this package holds everything importable —
@@ -24,10 +27,13 @@ from repro.bench.observatory import (DEFAULT_GRID, DEFAULT_PROBLEM_SPECS,
                                      build_population, parse_grid,
                                      parse_problem_spec, parse_vary,
                                      run_sweep, solver_grid_points)
+from repro.bench.rates import (RateFit, fit_rates, fit_rates_file,
+                               format_rates)
 
 __all__ = [
     'CellDiff', 'CompareError', 'CompareReport', 'DEFAULT_GRID',
-    'DEFAULT_PROBLEM_SPECS', 'PopulationBundle', 'SweepCell',
-    'build_population', 'compare_docs', 'format_report', 'parse_grid',
-    'parse_problem_spec', 'parse_vary', 'run_sweep', 'solver_grid_points',
+    'DEFAULT_PROBLEM_SPECS', 'PopulationBundle', 'RateFit', 'SweepCell',
+    'build_population', 'compare_docs', 'fit_rates', 'fit_rates_file',
+    'format_rates', 'format_report', 'parse_grid', 'parse_problem_spec',
+    'parse_vary', 'run_sweep', 'solver_grid_points',
 ]

@@ -38,7 +38,9 @@ from repro.core.solvers import (SOLVERS, CGIHVP, DenseFactor, ExactIHVP,
                                 IterativeOperator, NeumannIHVP, NystromIHVP,
                                 NystromSketch, SketchPolicy, SketchState,
                                 SolverSpec, nystrom_inverse_dense,
-                                query_width, solver_fingerprint, state_nbytes)
+                                build_hvp_bill, query_width,
+                                solver_fingerprint, state_nbytes,
+                                tangent_apply)
 from repro.core.tree_util import (PyTreeIndexer, tree_add, tree_axpy,
                                   tree_cast, tree_norm, tree_random_like,
                                   tree_scale, tree_size, tree_sub, tree_vdot,
@@ -53,7 +55,7 @@ __all__ = [
     'train_influence_params',
     'accounted_hvps', 'get_problem', 'hypergrad_at', 'hypergrad_error',
     'hypergrad_reference', 'register_problem', 'solve',
-    'solver_fingerprint', 'state_nbytes',
+    'build_hvp_bill', 'solver_fingerprint', 'state_nbytes',
     'FlatBackend', 'FlatShardedBackend', 'HypergradConfig',
     'IterativeOperator', 'PallasBackend', 'ShardedOperand', 'SOLVERS',
     'SketchPolicy', 'SketchState', 'SolverSpec', 'TreeBackend',
@@ -62,8 +64,8 @@ __all__ = [
     'flatten_vecm', 'phi_vjp_block', 'query_width',
     'config_from_cli', 'get_backend', 'hypergradient', 'implicit_root',
     'make_hvp',
-    'make_hvp_fn', 'nystrom_inverse_dense', 'sgd_solver', 'tree_add',
-    'tree_axpy',
+    'make_hvp_fn', 'nystrom_inverse_dense', 'sgd_solver', 'tangent_apply',
+    'tree_add', 'tree_axpy',
     'tree_cast', 'tree_norm', 'tree_random_like', 'tree_scale', 'tree_size',
     'tree_sub', 'tree_vdot', 'tree_zeros_like', 'unflatten_vec',
     'unflatten_vecm', 'unrolled_hypergradient',

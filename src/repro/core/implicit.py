@@ -7,14 +7,24 @@ actually want to write is the natural JAX thing
     jax.grad(lambda phi: g(solve(phi, batch), phi)) # hypergradient, Eq. 3
 
 ``implicit_root`` makes that work: it wraps an inner solver in a
-``jax.custom_vjp`` whose backward pass runs the Nyström (or CG / Neumann /
-exact) IHVP plus the mixed-term VJP — the approximate implicit
-differentiation of Grazzi et al. 2020, with the paper's sketch as the linear
-solve. Because the solution map is a plain JAX primitive-like function, it
-composes for free:
+``jax.custom_jvp`` whose tangent rule solves the implicit-function-theorem
+tangent system ``(H + ρI) θ̇ = −(∂²f/∂θ∂φ) φ̇`` with the Nyström (or CG /
+Neumann / exact) IHVP. Reverse mode falls out by transposition: the tangent
+solve is staged through ``jax.lax.custom_linear_solve(symmetric=True)``, so
+transposing it re-invokes the *same* ``solver.apply`` on the cotangent and
+the backward pass is exactly the IHVP-plus-mixed-term VJP of Grazzi et al.
+2020 — the ``jax.custom_vjp`` formula the repo has always run (and still
+ships, as the ``forward_mode=False`` escape hatch), now derived rather than
+hand-written. Because the solution map is a plain JAX primitive-like
+function, it composes for free:
 
   * ``jax.grad``  → Eq. 3 hypergradients (direct term included, since φ also
     flows into the outer loss directly);
+  * ``jax.jvp`` / ``jax.jacfwd`` → oracle tangents ``dθ*/dφ`` — the forward
+    path of approximate implicit differentiation, and the enabler for
+    *nested* solution maps: an HVP of a loss that contains an
+    ``implicit_root`` is jvp-of-grad, which needs both modes at once
+    (see ``repro.engine`` for the multi-level machinery built on this);
   * ``jax.vmap``  → batched per-task hypergradients (iMAML meta-batches: the
     k sketch HVPs of every task run as one batched program instead of a
     per-task Python loop — see benchmarks/tab3_imaml.py);
@@ -62,6 +72,14 @@ sketch-lifecycle section of docs/implicit-api.md):
 >>> shared_task = jax.vmap(jax.grad(
 ...     lambda phi: jnp.sum(solve(phi, None, state=shared))))(phis)
 >>> bool(jnp.allclose(shared_task, per_task, atol=1e-5))
+True
+
+Forward mode gives the oracle tangent of the solution map (here
+``dθ*/dφ = 1/d``, so the jvp along ``v`` is ``v/d``):
+
+>>> v = jnp.array([3.0, 2.0, 4.0])
+>>> _, tangent = jax.jvp(lambda phi: solve(phi, None), (jnp.ones(3),), (v,))
+>>> bool(jnp.allclose(tangent, v / d, atol=1e-5))
 True
 """
 from __future__ import annotations
@@ -118,6 +136,46 @@ def _implicit_phi_vjp(solver, inner_loss: InnerLoss, theta: PyTree,
     return tree_scale(jax.grad(inner_grad_dot_u)(phi), -1.0)
 
 
+def _stop_gradient_arrays(tree) -> PyTree:
+    """``stop_gradient`` on every array leaf, passing non-array leaves (the
+    closures of a trace-local ``IterativeOperator``) through untouched."""
+    return jax.tree.map(
+        lambda x: jax.lax.stop_gradient(x)
+        if isinstance(x, (jax.Array, np.ndarray)) else x, tree)
+
+
+def _implicit_phi_tangent(solver, inner_loss: InnerLoss, theta: PyTree,
+                          phi: PyTree, batch: Any, phi_dot: PyTree,
+                          rng: jax.Array, state) -> PyTree:
+    """The φ-tangent of the solution map θ*(φ): −(H+ρI)⁻¹ (∂²f/∂θ∂φ) φ̇.
+
+    The forward-mode mirror of :func:`_implicit_phi_vjp`: differentiate the
+    stationarity condition ``∇_θ f(θ*(φ), φ) = 0`` to get the tangent system
+    ``(H + ρI) θ̇ = −M φ̇``, build ``M φ̇`` as a jvp of the inner gradient in
+    the φ slot, and solve with the same solver ``apply`` the backward pass
+    uses — via :func:`~repro.core.solvers.tangent_apply`, so the solve is a
+    transposable linear op (reverse mode over this rule reproduces the vjp)
+    and further differentiation (hyper-Hessian products) stays correct.
+
+    ``state`` semantics match the vjp: None prepares here (k sketch HVPs,
+    batched under ``jax.vmap``); a pre-built state amortizes them away. The
+    linearization point is frozen (``stop_gradient`` on θ and the state
+    arrays) — AID differentiates the implicit map, never the sketch."""
+    from repro.core.solvers import tangent_apply
+    theta_c = jax.lax.stop_gradient(theta)
+    if state is None:
+        hvp = make_hvp(inner_loss, theta_c, phi, batch)
+        state = solver.prepare(hvp, PyTreeIndexer(theta_c), rng)
+    state = _stop_gradient_arrays(state)
+
+    def inner_grad(p):
+        return jax.grad(inner_loss, argnums=0)(theta_c, p, batch)
+
+    m_dot = jax.jvp(inner_grad, (phi,), (phi_dot,))[1]
+    hvp_sys = make_hvp(inner_loss, theta_c, phi, batch)
+    return tree_scale(tangent_apply(solver, state, hvp_sys, m_dot), -1.0)
+
+
 def phi_vjp_block(solver, inner_loss: InnerLoss, theta: PyTree,
                   phi: PyTree, batch: Any, V: PyTree,
                   rng: jax.Array | None = None, state=None) -> PyTree:
@@ -156,39 +214,49 @@ def phi_vjp_block(solver, inner_loss: InnerLoss, theta: PyTree,
 
 
 def implicit_root(inner_solver_fn: InnerSolver, inner_loss: InnerLoss,
-                  hypergrad=None) -> Callable:
+                  hypergrad=None, forward_mode: bool = True) -> Callable:
     """Wrap an inner solver into a differentiable solution map ``φ, batch → θ*``.
 
     Args:
       inner_solver_fn: ``(phi, batch) -> theta_star`` — any approximate inner
         optimization (T optimizer steps, a warm-started closure over the
         current parameters, or an analytic solve). It is *not* differentiated
-        through; the returned map's VJP comes from the implicit function
-        theorem at the point it returns.
+        through; the returned map's derivatives come from the implicit
+        function theorem at the point it returns.
       inner_loss: ``f(theta, phi, batch) -> scalar`` — the inner objective
         whose stationarity defines θ*. Its Hessian (through HVPs only) and
-        mixed partial drive the backward pass.
+        mixed partial drive the derivative rules.
       hypergrad: a ``HypergradConfig`` (built once here), a solver instance
         implementing the uniform protocol (``prepare``/``apply``), or None
         for the default Nyström configuration.
+      forward_mode: True (default) wraps the map in ``jax.custom_jvp`` — the
+        tangent rule solves the IFT tangent system with the solver's
+        ``apply``, and reverse mode is its transpose (numerically the same
+        IHVP + mixed-term VJP, staged through
+        ``jax.lax.custom_linear_solve``). Both ``jax.grad`` and
+        ``jax.jvp``/``jax.jacfwd`` compose, which nested solution maps
+        (``repro.engine``) require. False restores the legacy
+        ``jax.custom_vjp``-only wrapper (reverse mode only) — the escape
+        hatch if a workflow depends on the hand-written backward trace.
 
     Returns:
       ``solve(phi, batch=None, rng=None, state=None)`` — a function returning
-      θ*, differentiable in ``phi`` via ``jax.custom_vjp``:
+      θ*, differentiable in ``phi``:
 
-      * ``rng`` seeds the backward pass's sketch-column sampling (Nyström);
+      * ``rng`` seeds the derivative pass's sketch-column sampling (Nyström);
         pass a fresh key per outer step for fresh columns, or reuse one to
         pin them. Defaults to ``PRNGKey(0)``.
       * ``state`` optionally injects a pre-built solver state (an amortized
-        ``NystromSketch`` / ``DenseFactor``) so the backward pass skips
+        ``NystromSketch`` / ``DenseFactor``) so the derivative pass skips
         ``prepare`` — the sketch-amortization story of BilevelTrainer, and
         the shared-sketch meta-batch mode under ``jax.vmap`` (an unbatched
         state closed over by the vmapped function broadcasts across tasks:
         k HVPs per meta-batch instead of per task).
-      * ``batch`` and ``rng`` receive zero cotangents: the map is treated as
-        non-differentiable in the data (see docs/implicit-api.md for the
-        residual caveats). θ* carries no residual connection to the forward
-        unroll — gradients flow *only* through the implicit VJP.
+      * ``batch`` and ``rng`` receive zero cotangents (and contribute zero
+        tangents): the map is treated as non-differentiable in the data (see
+        docs/implicit-api.md for the residual caveats). θ* carries no
+        residual connection to the forward unroll — gradients flow *only*
+        through the implicit rules.
 
       The returned function also carries
       ``solve.prepare_state(theta, phi, batch=None, rng=None)`` — it builds
@@ -206,22 +274,39 @@ def implicit_root(inner_solver_fn: InnerSolver, inner_loss: InnerLoss,
     # flattens to an empty subtree, a NystromSketch/DenseFactor flattens to
     # arrays — switching between them retraces once, as any structure change
     # does.
-    @jax.custom_vjp
-    def _solve(phi, batch, rng, state):
-        return inner_solver_fn(phi, batch)
+    if forward_mode:
+        @jax.custom_jvp
+        def _solve(phi, batch, rng, state):
+            return inner_solver_fn(phi, batch)
 
-    def _solve_fwd(phi, batch, rng, state):
-        theta = inner_solver_fn(phi, batch)
-        return theta, (theta, phi, batch, rng, state)
+        @_solve.defjvp
+        def _solve_jvp(primals, tangents):
+            phi, batch, rng, state = primals
+            # batch/rng/state tangents are ignored by contract (the map is
+            # non-differentiable in them); the self-call keeps higher-order
+            # differentiation re-entering this rule instead of the unroll.
+            phi_dot = tangents[0]
+            theta = _solve(phi, batch, rng, state)
+            theta_dot = _implicit_phi_tangent(solver, inner_loss, theta, phi,
+                                              batch, phi_dot, rng, state)
+            return theta, theta_dot
+    else:
+        @jax.custom_vjp
+        def _solve(phi, batch, rng, state):
+            return inner_solver_fn(phi, batch)
 
-    def _solve_bwd(res, v):
-        theta, phi, batch, rng, state = res
-        phi_bar = _implicit_phi_vjp(solver, inner_loss, theta, phi, batch,
-                                    v, rng, state)
-        return (phi_bar, _zeros_cotangent(batch), _zeros_cotangent(rng),
-                _zeros_cotangent(state))
+        def _solve_fwd(phi, batch, rng, state):
+            theta = inner_solver_fn(phi, batch)
+            return theta, (theta, phi, batch, rng, state)
 
-    _solve.defvjp(_solve_fwd, _solve_bwd)
+        def _solve_bwd(res, v):
+            theta, phi, batch, rng, state = res
+            phi_bar = _implicit_phi_vjp(solver, inner_loss, theta, phi,
+                                        batch, v, rng, state)
+            return (phi_bar, _zeros_cotangent(batch), _zeros_cotangent(rng),
+                    _zeros_cotangent(state))
+
+        _solve.defvjp(_solve_fwd, _solve_bwd)
 
     def solve(phi: PyTree, batch: Any = None, rng: jax.Array | None = None,
               state=None) -> PyTree:

@@ -610,11 +610,12 @@ def influence_curvature_hvp(problem: InfluenceProblem, params: PyTree,
 
 
 def influence_build_hvps(solver, params: PyTree) -> int:
-    """HVPs one state build bills: k (Nyström) or p (exact column scan)."""
-    hvps = getattr(solver, 'k', None)
-    if hvps is None:
-        hvps = sum(int(math.prod(l.shape)) for l in jax.tree.leaves(params))
-    return int(hvps)
+    """HVPs one state build bills: k (Nyström) or p (exact column scan).
+    Delegates to :func:`repro.core.solvers.build_hvp_bill` — the ONE bill
+    definition shared with the engine's per-edge accounting, so influence
+    and engine ``hvp_count`` are comparable by construction."""
+    from repro.core.solvers import build_hvp_bill
+    return build_hvp_bill(solver, params)
 
 
 def influence(problem: InfluenceProblem, config: HypergradConfig | Any = None,
@@ -681,8 +682,14 @@ def influence(problem: InfluenceProblem, config: HypergradConfig | Any = None,
     if store is not None and amortizable:
         from repro.serve import sketch_key
         key = sketch_key(params, solver)
+        build = lambda: solver.prepare(hvp, PyTreeIndexer(params), rng)
+        # a store with a disk tier resolves restarts too: hand it the state
+        # template (shape-only, zero HVPs) so a spilled sketch re-enters
+        # warm — a disk hit, like a memory hit, bills hvp_count == 0
+        like = (jax.eval_shape(build)
+                if getattr(store, 'spill_dir', None) is not None else None)
         state, built = store.get_or_build(
-            key, lambda: solver.prepare(hvp, PyTreeIndexer(params), rng),
+            key, build, like=like,
             build_hvps=influence_build_hvps(solver, params))
     else:
         state = solver.prepare(hvp, PyTreeIndexer(params), rng)

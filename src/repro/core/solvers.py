@@ -86,7 +86,7 @@ import jax.numpy as jnp
 from repro.core.backend import get_backend
 from repro.core.hvp import extract_columns, make_hvp
 from repro.core.tree_util import (PyTree, PyTreeIndexer, tree_axpy, tree_scale,
-                                  tree_vdot, tree_zeros_like)
+                                  tree_size, tree_vdot, tree_zeros_like)
 
 HVP = Callable[[PyTree], PyTree]
 
@@ -672,8 +672,65 @@ class ExactIHVP:
 
 
 # ---------------------------------------------------------------------------
+# Tangent-system apply — the solver as a transposable linear-solve op
+# ---------------------------------------------------------------------------
+def tangent_apply(solver, state, hvp: HVP, w: PyTree) -> PyTree:
+    """Apply the solver's IHVP to ``w`` as a *linear-system solve*:
+    ``u ≈ (H + ρI)⁻¹ w``, expressed through ``jax.lax.custom_linear_solve``.
+
+    This is the same estimator as ``solver.apply(state, w)`` — bit-identical
+    at first order — but packaged as a linear op JAX knows how to
+    differentiate and transpose:
+
+      * transposition (reverse mode over a forward-mode rule) re-invokes
+        ``solver.apply`` on the cotangent — the system is symmetric, so the
+        transpose solve IS the solve, exactly the backward pass
+        :func:`repro.core.implicit._implicit_phi_vjp` runs;
+      * further forward differentiation (hyper-Hessian products) gets the
+        linear-system JVP ``du = solve(dw − dH·u)``, with ``dH`` taken
+        through ``hvp`` — the true system matvec — rather than through the
+        sketch, matching the AID convention of differentiating at a frozen
+        linearization point.
+
+    ``hvp`` must be the inner Hessian-vector product at the linearization
+    point (``make_hvp(inner_loss, theta, phi, batch)``); ``solver.rho``
+    (when present) supplies the damping of the system matvec. Iterative
+    solvers pass their trace-local ``IterativeOperator`` state; amortizable
+    solvers pass a prepared sketch/factor.
+    """
+    rho = float(getattr(solver, 'rho', 0.0))
+
+    def matvec(u: PyTree) -> PyTree:
+        return tree_axpy(rho, u, hvp(u))
+
+    def _solve(mv, b: PyTree) -> PyTree:
+        del mv
+        return solver.apply(state, b)
+
+    return jax.lax.custom_linear_solve(matvec, w, _solve, symmetric=True)
+
+
+# ---------------------------------------------------------------------------
 # State sizing + identity — what a serving cache needs from a solver
 # ---------------------------------------------------------------------------
+def build_hvp_bill(solver, params_like: PyTree) -> int:
+    """HVPs ONE prepared-state build bills for ``solver`` at this size:
+    Nyström rank ``k``, or the full parameter count for the exact solver's
+    column scan. ``params_like`` may be concrete params or the shape structs
+    from ``jax.eval_shape`` — only sizes are read.
+
+    This is the single definition every accounting surface shares —
+    ``influence()``'s ``hvp_count``, the engine's per-edge bills
+    (``repro.engine.engine_edge_bills``), and the store's per-entry
+    ``build_hvps`` — so a warm cache hit billing zero means the same thing
+    everywhere and the cold bills are comparable across paths.
+    """
+    k = getattr(solver, 'k', None)
+    if k is not None:
+        return int(k)
+    return tree_size(params_like)
+
+
 def state_nbytes(state) -> int:
     """Byte footprint of a prepared solver state (its pytree-of-arrays leaves).
 

@@ -1,0 +1,447 @@
+"""Engine — lower a ProblemGraph to one jit-compiled multi-level program.
+
+``Engine.solve(graph, config)`` runs the whole inner-to-outer sweep of a
+validated chain graph as a single jitted step called ``n_outer`` times:
+
+* every solved node becomes a nested ``implicit_root`` map, built bottom-up
+  so a level's inner loss *contains* the solution maps of every level below
+  it — an HVP of that loss is jvp-of-grad through the lower maps, which is
+  exactly what the forward-mode rule of ``implicit_root`` enables;
+* every edge carries its own IHVP solver (a ``SOLVERS`` entry via
+  ``HypergradConfig``) and, when amortizable, its own
+  :class:`~repro.core.solvers.SketchPolicy` cadence — sketches are carried
+  across outer steps in the jitted carry and refreshed inner-to-outer, so a
+  lower edge's fresh sketch is already live when the edge above it rebuilds
+  (whose build HVPs differentiate through the lower map);
+* warm starts are carried per node: each step's unrolls start from the
+  previous step's solved values, the same alternating convention as
+  ``BilevelTrainer``.
+
+Engine-internal plumbing (warm starts, carried sketches, per-edge rng, data
+batches) rides in the ``batch`` slot of ``implicit_root``, which receives
+zero tangents/cotangents by contract — gradients flow only through the
+node-value arguments, never through the plumbing.
+
+The dense oracle (:func:`engine_hypergrad_reference`) rebuilds the *same*
+nested maps with exact ρ=0 IHVPs on every edge, so
+``hypergrad_error(engine_hypergrad(...), engine_hypergrad_reference(...))``
+isolates solver error: both run an identical primal sweep from identical
+warm starts and differ only in the per-edge linear solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergrad import HypergradConfig
+from repro.core.implicit import implicit_root
+from repro.core.solvers import (ExactIHVP, SketchPolicy, SketchState,
+                                build_hvp_bill)
+from repro.core.tree_util import PyTree, tree_size
+from repro.engine.graph import ProblemGraph
+from repro.optim import (Optimizer, adam, chain, clip_by_global_norm,
+                         momentum, sgd)
+
+# ---------------------------------------------------------------------------
+# Config / result
+# ---------------------------------------------------------------------------
+_OUTER_OPTS = {
+    'adam': lambda lr: chain(clip_by_global_norm(10.0), adam(lr)),
+    'momentum': lambda lr: chain(clip_by_global_norm(10.0), momentum(lr)),
+    'sgd': lambda lr: sgd(lr),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Drive parameters for ``Engine.solve``.
+
+    ``amortize=True`` carries a :class:`SketchState` per amortizable edge in
+    the jitted carry (each edge's ``refresh_every`` cadence applies);
+    ``False`` prepares every edge's state fresh inside each derivative pass
+    — the Grazzi-style per-step baseline the bench contrasts against.
+    ``outer_opt`` is an ``_OUTER_OPTS`` name or a built
+    :class:`repro.optim.Optimizer`."""
+    n_outer: int = 10
+    outer_lr: float = 1e-2
+    outer_opt: Any = 'adam'
+    amortize: bool = True
+    seed: int = 0
+    jit: bool = True
+
+    def build_outer_opt(self) -> Optimizer:
+        if isinstance(self.outer_opt, Optimizer):
+            return self.outer_opt
+        try:
+            return _OUTER_OPTS[self.outer_opt](self.outer_lr)
+        except KeyError:
+            raise ValueError(
+                f'unknown outer_opt {self.outer_opt!r}; expected one of '
+                f'{sorted(_OUTER_OPTS)} or an Optimizer instance') from None
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Outcome of ``Engine.solve``: final node values, the top objective per
+    outer step, and the analytic per-edge HVP bills
+    (:func:`engine_edge_bills` at the run's settings — the jitted step hides
+    runtime counters, so bills are computed, not measured, exactly as
+    ``BilevelResult.hvp_count``)."""
+    values: dict[str, PyTree]
+    losses: list[float]
+    edge_hvps: dict[str, int]
+    hvp_count: int
+    n_outer: int
+    seconds: float
+    hypergrad_err: float | None = None
+
+
+# ---------------------------------------------------------------------------
+# Map construction — nested implicit_root, bottom-up
+# ---------------------------------------------------------------------------
+def _edge_solver(edge):
+    cfg = HypergradConfig() if edge.config is None else edge.config
+    return cfg.build() if isinstance(cfg, HypergradConfig) else cfg
+
+
+def _level_loss(graph: ProblemGraph, order: list[str], i: int,
+                maps: dict[str, Callable]) -> Callable:
+    """The inner loss of level ``i`` in graph-resolved form:
+    ``f_i(theta, phi, pack)`` where ``phi`` maps every node strictly above
+    level i to its value. Nodes below are resolved top-down through their
+    solution maps (already in ``maps`` — construction is bottom-up), so
+    differentiating this loss differentiates through every lower level."""
+    name = order[i]
+    node = graph.nodes[name]
+
+    def inner_loss(theta: PyTree, phi: Mapping[str, PyTree],
+                   pack: dict) -> jax.Array:
+        ctx = dict(phi)
+        ctx[name] = theta
+        for j in range(i - 1, -1, -1):
+            below = order[j]
+            phi_j = {m: ctx[m] for m in order[j + 1:]}
+            ctx[below] = maps[below](phi_j, pack)
+        own = ctx.pop(name)
+        return node.loss(own, ctx, pack['batches'].get(name))
+
+    return inner_loss
+
+
+def _unroll_solver(node, inner_loss: Callable, name: str) -> Callable:
+    """The forward pass of a node's solution map: ``unroll_steps`` plain-SGD
+    steps on the level loss from the engine-carried warm start. Matches
+    ``sgd_solver`` but draws θ0 from the pack (per-node warm start)."""
+    def solver_fn(phi, pack):
+        theta0 = pack['warm'][name]
+
+        def step(p, _):
+            g = jax.grad(inner_loss)(p, phi, pack)
+            return jax.tree.map(
+                lambda w, gw: w - node.unroll_lr * gw, p, g), None
+
+        theta, _ = jax.lax.scan(step, theta0, None, length=node.unroll_steps)
+        return theta
+
+    return solver_fn
+
+
+def build_maps(graph: ProblemGraph, order: list[str],
+               solvers: Mapping[str, Any] | None = None
+               ) -> tuple[dict[str, Callable], dict[str, Callable]]:
+    """Build the nested solution maps for a chain, bottom-up.
+
+    Returns ``(maps, losses)``: ``maps[name](phi, pack) -> theta*`` for every
+    solved node (``phi`` = values of all nodes strictly above it, ``pack`` =
+    engine plumbing riding the zero-tangent batch slot), and
+    ``losses[name]`` the graph-resolved level losses (what each edge's
+    :class:`SketchPolicy` builds sketches of). ``solvers`` overrides the
+    per-edge solver (name → built instance); defaults to each edge's own
+    config — the override is how the dense oracle swaps every edge to
+    ``ExactIHVP(rho=0)`` without touching the graph."""
+    maps: dict[str, Callable] = {}
+    losses: dict[str, Callable] = {}
+    for i, name in enumerate(order[:-1]):
+        node = graph.nodes[name]
+        solver = (solvers[name] if solvers is not None
+                  else _edge_solver(graph.edge_for(name)))
+        inner_loss = _level_loss(graph, order, i, maps)
+        root = implicit_root(_unroll_solver(node, inner_loss, name),
+                             inner_loss, solver)
+
+        def mapped(phi, pack, _name=name, _root=root):
+            return _root(phi, pack, rng=pack['rngs'][_name],
+                         state=pack['states'][_name])
+
+        maps[name] = mapped
+        losses[name] = inner_loss
+    return maps, losses
+
+
+def _top_objective(graph: ProblemGraph, order: list[str],
+                   maps: Mapping[str, Callable]) -> Callable:
+    """``(theta_top, pack) -> (loss, solved)``: the outer objective with the
+    full chain resolved below it; ``solved`` (the aux) carries every solved
+    node's value out for the warm-start carry."""
+    top = order[-1]
+
+    def objective(theta_top: PyTree, pack: dict):
+        ctx = {top: theta_top}
+        for j in range(len(order) - 2, -1, -1):
+            below = order[j]
+            phi_j = {m: ctx[m] for m in order[j + 1:]}
+            ctx[below] = maps[below](phi_j, pack)
+        own = ctx.pop(top)
+        return graph.nodes[top].loss(own, ctx, pack['batches'].get(top)), ctx
+
+    return objective
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EngineProgram:
+    """The lowered form of a graph: ``init(key) -> carry`` and
+    ``step(carry, key) -> (carry, loss)`` — ``step`` is the single function
+    ``Engine.solve`` jits (the whole multi-level sweep, sketch refreshes
+    included, is inside it), which is what contract tests pin with
+    ``assert_compiles(times=1)`` and lint with ``audit``."""
+    init: Callable[[jax.Array], tuple]
+    step: Callable[[tuple, jax.Array], tuple]
+    order: list[str]
+
+
+class Engine:
+    """Lowers a :class:`ProblemGraph` chain and drives it.
+
+    ``lower`` builds the jit-able program (exposed for contract tests);
+    ``solve`` runs it. One Engine instance is stateless and reusable."""
+
+    def lower(self, graph: ProblemGraph,
+              config: EngineConfig | None = None) -> EngineProgram:
+        config = config or EngineConfig()
+        graph.validate()
+        order = graph.chain_order()
+        solved = order[:-1]
+        top = order[-1]
+        solvers = {n: _edge_solver(graph.edge_for(n)) for n in solved}
+        maps, losses = build_maps(graph, order, solvers)
+        objective = _top_objective(graph, order, maps)
+        outer_opt = config.build_outer_opt()
+
+        policies = {
+            n: SketchPolicy(solver=solvers[n], inner_loss=losses[n],
+                            refresh_every=graph.edge_for(n).refresh_every)
+            for n in solved
+            if config.amortize and getattr(type(solvers[n]), 'amortizable',
+                                           False)}
+
+        def _pack(values, sketches, keys):
+            return {
+                'warm': {n: values[n] for n in solved},
+                'states': {n: sketches.get(n) for n in solved},
+                'rngs': dict(keys),
+                'batches': {},          # v1: whole-data losses (batch=None)
+            }
+
+        def init(key: jax.Array) -> tuple:
+            ks = jax.random.split(key, len(order))
+            values = {n: graph.nodes[n].init(k)
+                      for n, k in zip(order, ks)}
+            keys = {n: jax.random.fold_in(key, idx)
+                    for idx, n in enumerate(solved)}
+            pack = _pack(values, {}, keys)
+            # stale zero states: the first step's refresh rebuilds them, so
+            # initialization costs no HVPs and cadence is uniform from step 0
+            sk = {n: policies[n].init_state(
+                      values[n], {m: values[m] for m in order[order.index(n) + 1:]},
+                      pack, keys[n])
+                  for n in policies}
+            return (values, outer_opt.init(values[top]), sk, jnp.int32(0))
+
+        def step(carry: tuple, key: jax.Array) -> tuple:
+            values, opt_state, sk, t = carry
+            keys = {n: jax.random.fold_in(key, idx)
+                    for idx, n in enumerate(solved)}
+
+            # 1. linearize + refresh, interleaved inner-to-outer. A level's
+            #    lin unroll *differentiates* every edge below it (its level
+            #    loss contains the lower maps), and an edge's build HVPs do
+            #    too — so each edge must see this step's fresh lower
+            #    sketches before it is itself unrolled or rebuilt. On
+            #    non-refresh steps (cadence > 1) the carried sketch serves,
+            #    which is the amortization trade-off.
+            new_sk: dict[str, SketchState] = {}
+            live = {m: (sk[m].sketch if m in sk else None) for m in solved}
+            lin: dict[str, PyTree] = {}
+            for j, n in enumerate(solved):
+                pack_j = _pack(values, live, keys)
+                phi_j = {m: values[m] for m in order[j + 1:]}
+                lin[n] = maps[n](phi_j, pack_j)
+                if n in policies:
+                    new_sk[n], _ = policies[n].refresh(
+                        sk[n], lin[n], phi_j, pack_j, keys[n])
+                    live[n] = new_sk[n].sketch
+
+            # 2. outer gradient with every edge's live state, then the
+            #    outer-optimizer update; solved values (the aux) become the
+            #    next step's warm starts
+            pack = _pack(values, live, keys)
+            (loss, solved_vals), g = jax.value_and_grad(
+                objective, has_aux=True)(values[top], pack)
+            new_top, opt_state = outer_opt.apply(g, opt_state, values[top], t)
+            new_values = {**solved_vals, top: new_top}
+            return (new_values, opt_state, new_sk, t + 1), loss
+
+        return EngineProgram(init=init, step=step, order=order)
+
+    def solve(self, graph: ProblemGraph,
+              config: EngineConfig | None = None) -> EngineResult:
+        """Run the lowered program for ``config.n_outer`` outer steps.
+
+        The step compiles exactly once (same carry structure every call —
+        pinned by tests/test_engine.py with ``assert_compiles(times=1)``);
+        the Python loop only feeds fresh fold-in keys."""
+        config = config or EngineConfig()
+        program = self.lower(graph, config)
+        key = jax.random.PRNGKey(config.seed)
+        carry = program.init(key)
+        step = jax.jit(program.step) if config.jit else program.step
+        losses: list[float] = []
+        t0 = time.perf_counter()
+        for i in range(config.n_outer):
+            carry, loss = step(carry, jax.random.fold_in(key, 1 + i))
+            losses.append(float(loss))
+        seconds = time.perf_counter() - t0
+        bills = engine_edge_bills(graph, n_outer=config.n_outer,
+                                  amortize=config.amortize)
+        return EngineResult(values=carry[0], losses=losses, edge_hvps=bills,
+                            hvp_count=sum(bills.values()),
+                            n_outer=config.n_outer, seconds=seconds)
+
+
+# ---------------------------------------------------------------------------
+# Oracle + accounting
+# ---------------------------------------------------------------------------
+def engine_hypergrad(graph: ProblemGraph, values: Mapping[str, PyTree],
+                     solvers: Mapping[str, Any] | None = None,
+                     rng: jax.Array | None = None
+                     ) -> tuple[PyTree, jax.Array]:
+    """One top-level hypergradient at explicit node ``values``.
+
+    Rebuilds the nested maps (per-edge ``solvers`` override, else the
+    graph's own edge configs), warm-starts every unroll from ``values``, and
+    differentiates the top objective — the multi-level analogue of
+    :func:`repro.core.problem.hypergrad_at`, and the measurement primitive
+    behind ``benchmarks/bench_engine.py``'s error column. States are
+    prepared fresh inside the derivative pass (no amortization) so the
+    result depends only on (graph, values, solvers, rng). Returns
+    ``(grad, loss)``."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    graph.validate()
+    order = graph.chain_order()
+    solved = order[:-1]
+    built = {n: (solvers[n] if solvers is not None
+                 else _edge_solver(graph.edge_for(n))) for n in solved}
+    maps, _ = build_maps(graph, order, built)
+    objective = _top_objective(graph, order, maps)
+    pack = {
+        'warm': {n: values[n] for n in solved},
+        'states': {n: None for n in solved},
+        'rngs': {n: jax.random.fold_in(rng, i)
+                 for i, n in enumerate(solved)},
+        'batches': {},
+    }
+    (loss, _), g = jax.value_and_grad(objective, has_aux=True)(
+        values[order[-1]], pack)
+    return g, loss
+
+
+def engine_hypergrad_reference(graph: ProblemGraph,
+                               values: Mapping[str, PyTree],
+                               rho: float = 0.0) -> tuple[PyTree, jax.Array]:
+    """Dense-oracle top hypergradient: the same nested sweep with every edge
+    solved by ``ExactIHVP(rho)`` (full column scan + dense factorization per
+    edge). ``rho=0`` is the true multi-level implicit gradient; pass an
+    edge's damping to isolate sketch error from damping bias. Toy sizes
+    only."""
+    order = graph.chain_order()
+    oracle = {n: ExactIHVP(rho=rho) for n in order[:-1]}
+    return engine_hypergrad(graph, values, solvers=oracle)
+
+
+def _per_build(graph: ProblemGraph, name: str, solver) -> int:
+    """HVPs one state build costs on edge ``name``. Delegates to
+    :func:`repro.core.solvers.build_hvp_bill` — the same bill definition
+    ``influence()`` and the store's per-entry accounting use, so a k-HVP
+    build means the same k on every accounting surface."""
+    shapes = jax.eval_shape(graph.nodes[name].init, jax.random.PRNGKey(0))
+    return build_hvp_bill(solver, shapes)
+
+
+def engine_edge_bills(graph: ProblemGraph, n_outer: int,
+                      amortize: bool = True) -> dict[str, int]:
+    """Analytic per-edge HVP bills for ``n_outer`` engine steps.
+
+    The multi-level extension of :func:`repro.core.problem.accounted_hvps`,
+    and the arithmetic behind the engine bench's amortization contrast:
+
+    * **amortized** (default): each amortizable edge pays per *build* —
+      ``ceil(n_outer / refresh_every) × k`` — and builds stack *additively*
+      across levels, because a lower edge's live sketch makes its derivative
+      rule free of prepare HVPs no matter how many times an upper build
+      differentiates through it.
+    * **fresh** (``amortize=False``): every derivative pass through an edge
+      re-prepares, and passes *multiply* down the chain — an upper edge's
+      k-probe prepare differentiates the lower map k+1 times, each spawning
+      a full lower prepare. The model counts derivative-rule invocations per
+      outer step by the recursion below (primal unrolls of a level also
+      differentiate every lower map once per SGD step).
+
+    Iterative edges (CG/Neumann) pay ``iters`` sequential HVPs per rule
+    invocation in either mode — their state is trace-local, so nesting
+    multiplies them regardless. This is a rule-invocation cost model: exact
+    for amortized sketch edges, and the same counting convention as the
+    paper's cost tables elsewhere.
+    """
+    order = graph.chain_order()
+    solved = order[:-1]
+    solvers = {n: _edge_solver(graph.edge_for(n)) for n in solved}
+    amortizable = {n: getattr(type(solvers[n]), 'amortizable', False)
+                   for n in solved}
+
+    # rule invocations (druns) and primal map evaluations (evals) per outer
+    # step, propagated outer -> inner so spawned work cascades down the chain
+    evals = {n: 1 for n in solved}   # the top objective resolves every map
+    druns = {n: 1 for n in solved}   # ... and the top grad differentiates it
+    for i in range(len(solved) - 1, 0, -1):
+        n = solved[i]
+        spawned = evals[n] * graph.nodes[n].unroll_steps
+        if amortizable[n] and amortize:
+            deriv_passes = druns[n]              # mixed term only; no probes
+        elif amortizable[n]:
+            deriv_passes = druns[n] * (_per_build(graph, n, solvers[n]) + 1)
+        else:
+            deriv_passes = druns[n] * (getattr(solvers[n], 'iters', 0) + 1)
+        for m in solved[:i]:
+            evals[m] += spawned + deriv_passes
+            druns[m] += spawned + deriv_passes
+
+    bills: dict[str, int] = {}
+    for n in solved:
+        if amortizable[n] and amortize:
+            builds = math.ceil(n_outer
+                               / max(1, graph.edge_for(n).refresh_every))
+            bills[n] = builds * _per_build(graph, n, solvers[n])
+        elif amortizable[n]:
+            bills[n] = n_outer * druns[n] * _per_build(graph, n, solvers[n])
+        else:
+            bills[n] = n_outer * druns[n] * getattr(solvers[n], 'iters', 0)
+    return bills

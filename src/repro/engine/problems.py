@@ -1,0 +1,266 @@
+"""Registered multi-level problems + the GRAPHS registry.
+
+Two trilevel chains, both toy-scale by construction (the dense oracle
+materializes every solved node's Hessian):
+
+* ``distill_hpo`` — dataset distillation under hyperparameter optimization.
+  Bottom: a ridge-regression student trained on the synthetic set with a
+  learned weight decay (quadratic in the weights, so the bottom Hessian is
+  PSD by construction). Middle: the synthetic inputs+targets, tuned so the
+  student fits real training data (plus a proximal regularizer that keeps
+  the level strongly convex around its solutions). Top: the log weight
+  decay, tuned on a validation split. The classic bilevel distillation
+  problem (Wang et al. 2018) with the HPO level stacked on top — the
+  smallest graph where a sketch's build HVPs themselves differentiate
+  through a lower implicit map.
+
+* ``reweight_maml`` — example reweighting over meta-learning. Bottom:
+  per-task adapted parameters (proximal to the meta-init, the iMAML inner
+  problem, vmapped over a stacked task axis inside the loss). Middle: the
+  meta-initialization, trained on softmax-reweighted per-task query losses
+  (one task's queries are label-corrupted). Top: the task logits ω, tuned
+  so the meta-init does well on clean held-out queries — learning to
+  down-weight the corrupted task.
+
+Both register under ``GRAPHS`` and run via ``launch/train.py --problem``.
+Sizes are keyword-tunable; defaults keep every level's parameter count
+small enough for ``engine_hypergrad_reference`` (tests solve them
+end-to-end against it).
+
+Oracle-parity expectations differ by construction, and deliberately so.
+``reweight_maml``'s solved levels are quadratic in their own variables, so
+the AID derivative rules are *exact* there (constant Hessians, constant
+mixed partials) and full-rank-sketch vs dense-oracle parity is tight
+(≲1e-3, damping-dominated). ``distill_hpo``'s middle level is genuinely
+non-quadratic (the student's curvature depends on the learned inputs), and
+under the AID convention — the rules freeze their linearization point with
+``stop_gradient``, so second derivatives drop ∂M/∂θ·θ̇ terms — the upper
+level's Hessian *estimator* picks up a small non-symmetric part. Different
+solvers resolve a non-symmetric operator differently (Nyström symmetrizes
+quadratically through its sketch; the dense oracle factorizes the operator
+as extracted), leaving a few-1e-3 solver-dependent discrepancy that no
+rank or damping setting removes. Tests pin both regimes.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergrad import HypergradConfig
+from repro.engine.graph import ProblemEdge, ProblemGraph, ProblemNode
+
+GRAPHS: dict[str, Callable[..., ProblemGraph]] = {}
+
+
+def register_graph(name: str):
+    """Decorator: register a graph builder under ``name`` (the
+    ``launch/train.py --problem`` / ``get_graph`` key)."""
+    def wrap(builder):
+        GRAPHS[name] = builder
+        return builder
+    return wrap
+
+
+def get_graph(name: str, **kwargs) -> ProblemGraph:
+    """Build a registered problem graph by name (kwargs go to the builder).
+    Raises ``ValueError`` naming the known graphs on a miss."""
+    try:
+        builder = GRAPHS[name]
+    except KeyError:
+        raise ValueError(f'unknown graph {name!r}; registered: '
+                         f'{sorted(GRAPHS)}') from None
+    return builder(**kwargs)
+
+
+def _mse(pred: jax.Array, targets: jax.Array) -> jax.Array:
+    """Half mean squared error over rows, summed across output channels
+    (f32 accumulation)."""
+    err = pred.astype(jnp.float32) - targets.astype(jnp.float32)
+    return 0.5 * jnp.mean(jnp.sum(jnp.square(err), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# distill_hpo — student <- images <- hpo
+# ---------------------------------------------------------------------------
+@register_graph('distill_hpo')
+def distill_hpo(d: int = 6, n_classes: int = 3, n_syn: int = 8,
+                n_train: int = 64, n_val: int = 64, seed: int = 0,
+                mu_images: float = 0.5, k_student: int | None = None,
+                k_images: int | None = None, rho: float = 1e-4,
+                refresh_every: int = 1,
+                solver: str = 'nystrom') -> ProblemGraph:
+    """Trilevel dataset distillation + weight-decay HPO (see module doc).
+
+    Node sizes: student p = d·C + C, images p = n_syn·(d + C), hpo p = 1.
+    ``k_student``/``k_images`` set the per-edge Nyström ranks — the default
+    is full rank at these toy sizes, so solver error is damping-dominated
+    and the dense-oracle parity test has a tight bar; pass smaller ranks for
+    the amortization/accuracy trade-off benches. ``mu_images`` is the middle
+    level's proximal weight: it keeps the distillation level strongly convex
+    around its solutions (the implicit function theorem needs an invertible
+    Hessian at every solved node, and a plain-SGD unroll needs a benign
+    landscape to reach one). ``solver='exact'`` swaps both edges to dense
+    solves."""
+    key = jax.random.PRNGKey(seed)
+    k_mu, k_tr, k_val, k_n1, k_n2 = jax.random.split(key, 5)
+    mu = 2.0 * jax.random.normal(k_mu, (n_classes, d))
+
+    def sample(k, kn, n):
+        y = jax.random.randint(k, (n,), 0, n_classes)
+        x = mu[y] + jax.random.normal(kn, (n, d))
+        return x, jax.nn.one_hot(y, n_classes)
+
+    x_tr, y_tr = sample(k_tr, k_n1, n_train)
+    x_val, y_val = sample(k_val, k_n2, n_val)
+
+    def student_loss(w, ctx, batch):
+        del batch
+        syn = ctx['images']
+        wd = jnp.exp(ctx['hpo']['log_wd'])
+        sq = sum(jnp.sum(jnp.square(v.astype(jnp.float32)))
+                 for v in jax.tree.leaves(w))
+        return _mse(syn['x'] @ w['W'] + w['b'], syn['y']) + 0.5 * wd * sq
+
+    def images_loss(syn, ctx, batch):
+        del batch
+        w = ctx['student']
+        fit = _mse(x_tr @ w['W'] + w['b'], y_tr)
+        # per-coordinate proximal pull: μ·I dominates the fit term's small
+        # negative curvature, keeping the level strongly convex wherever the
+        # unroll linearizes (the Nyström whitening needs PSD curvature)
+        prox = 0.5 * mu_images * (jnp.sum(jnp.square(syn['x']))
+                                  + jnp.sum(jnp.square(syn['y'])))
+        return fit + prox
+
+    def hpo_loss(h, ctx, batch):
+        del batch
+        w = ctx['student']
+        return (_mse(x_val @ w['W'] + w['b'], y_val)
+                + 1e-2 * jnp.square(h['log_wd']))
+
+    def init_student(rng):
+        return {'W': 0.1 * jax.random.normal(rng, (d, n_classes)),
+                'b': jnp.zeros((n_classes,))}
+
+    def init_images(rng):
+        kx, ky = jax.random.split(rng)
+        # seed targets near a balanced one-hot assignment so the student has
+        # signal from step 0
+        y0 = jax.nn.one_hot(jnp.arange(n_syn) % n_classes, n_classes)
+        return {'x': jax.random.normal(kx, (n_syn, d)),
+                'y': y0 + 0.1 * jax.random.normal(ky, (n_syn, n_classes))}
+
+    def init_hpo(rng):
+        del rng
+        return {'log_wd': jnp.float32(-1.0)}
+
+    def cfg(k):
+        if solver == 'exact':
+            return HypergradConfig(solver='exact', rho=rho)
+        return HypergradConfig(solver=solver, k=k, rho=rho)
+
+    p_student = d * n_classes + n_classes
+    p_images = n_syn * (d + n_classes)
+    return ProblemGraph(
+        nodes={
+            'student': ProblemNode('student', student_loss, init_student,
+                                   unroll_steps=80, unroll_lr=0.3),
+            'images': ProblemNode('images', images_loss, init_images,
+                                  unroll_steps=60, unroll_lr=0.3),
+            'hpo': ProblemNode('hpo', hpo_loss, init_hpo),
+        },
+        edges=[
+            ProblemEdge('student', 'images',
+                        config=cfg(k_student or p_student),
+                        refresh_every=refresh_every),
+            ProblemEdge('images', 'hpo', config=cfg(k_images or p_images),
+                        refresh_every=refresh_every),
+        ])
+
+
+# ---------------------------------------------------------------------------
+# reweight_maml — adapted <- meta <- weights
+# ---------------------------------------------------------------------------
+@register_graph('reweight_maml')
+def reweight_maml(d: int = 8, n_tasks: int = 3, n_support: int = 16,
+                  n_query: int = 16, prox: float = 1.0, corrupt: float = 2.0,
+                  seed: int = 0, k_adapted: int | None = None,
+                  k_meta: int | None = None,
+                  rho: float = 1e-4, refresh_every: int = 1,
+                  solver: str = 'nystrom') -> ProblemGraph:
+    """Trilevel task reweighting over proximal meta-learning (see module
+    doc). The adapted node stacks all tasks on a leading (T, d) axis and
+    vmaps the per-task residuals inside its loss, so the whole meta-batch —
+    including every edge's sketch HVPs — runs as one batched program. Task 0
+    is label-corrupted with ``corrupt``-scaled noise on its reweighting
+    queries; the clean top-level query split is uncorrupted."""
+    key = jax.random.PRNGKey(seed)
+    ka, ks, kq, kc, kn1, kn2, kn3 = jax.random.split(key, 7)
+    a_true = jax.random.normal(ka, (n_tasks, d))
+    xs = jax.random.normal(ks, (n_tasks, n_support, d))
+    xq = jax.random.normal(kq, (n_tasks, n_query, d))
+    xc = jax.random.normal(kc, (n_tasks, n_query, d))
+    ys = jnp.einsum('tnd,td->tn', xs, a_true) \
+        + 0.1 * jax.random.normal(kn1, (n_tasks, n_support))
+    yq = jnp.einsum('tnd,td->tn', xq, a_true) \
+        + 0.1 * jax.random.normal(kn2, (n_tasks, n_query))
+    # the reweighting-level queries: task 0 corrupted
+    yq = yq.at[0].add(corrupt * jax.random.normal(kn3, (n_query,)))
+    yclean = jnp.einsum('tnd,td->tn', xc, a_true)
+
+    def task_mse(a, x, y):
+        return 0.5 * jnp.mean(jnp.square(x @ a - y))
+
+    def adapted_loss(a, ctx, batch):
+        del batch
+        theta0 = ctx['meta']['theta0']
+        fit = jax.vmap(task_mse)(a['a'], xs, ys)
+        prox_term = 0.5 * prox * jnp.mean(
+            jnp.sum(jnp.square(a['a'] - theta0[None, :]), axis=-1))
+        return jnp.sum(fit) / n_tasks + prox_term
+
+    def meta_loss(m, ctx, batch):
+        del batch
+        a = ctx['adapted']['a']
+        w = jax.nn.softmax(ctx['weights']['omega'])
+        q = jax.vmap(task_mse)(a, xq, yq)
+        return jnp.sum(w * q) + 5e-2 * jnp.sum(jnp.square(m['theta0']))
+
+    def weights_loss(o, ctx, batch):
+        del batch
+        a = ctx['adapted']['a']
+        clean = jnp.mean(jax.vmap(task_mse)(a, xc, yclean))
+        return clean + 5e-2 * jnp.sum(jnp.square(o['omega']))
+
+    def init_adapted(rng):
+        return {'a': 0.1 * jax.random.normal(rng, (n_tasks, d))}
+
+    def init_meta(rng):
+        return {'theta0': 0.1 * jax.random.normal(rng, (d,))}
+
+    def init_weights(rng):
+        del rng
+        return {'omega': jnp.zeros((n_tasks,))}
+
+    def cfg(k):
+        if solver == 'exact':
+            return HypergradConfig(solver='exact', rho=rho)
+        return HypergradConfig(solver=solver, k=k, rho=rho)
+
+    return ProblemGraph(
+        nodes={
+            'adapted': ProblemNode('adapted', adapted_loss, init_adapted,
+                                   unroll_steps=40, unroll_lr=0.5),
+            'meta': ProblemNode('meta', meta_loss, init_meta,
+                                unroll_steps=40, unroll_lr=0.3),
+            'weights': ProblemNode('weights', weights_loss, init_weights),
+        },
+        edges=[
+            ProblemEdge('adapted', 'meta',
+                        config=cfg(k_adapted or n_tasks * d),
+                        refresh_every=refresh_every),
+            ProblemEdge('meta', 'weights', config=cfg(k_meta or d),
+                        refresh_every=refresh_every),
+        ])

@@ -49,15 +49,46 @@ def build_losses(cfg):
     return inner_loss, outer_loss
 
 
+def _run_graph(args):
+    """``--problem <graph-name>``: a multi-level GRAPHS entry (trilevel
+    chains) routed through ``Engine.solve`` — the whole inner-to-outer
+    sweep as one jitted program. ``--solver``/``--rho``/
+    ``--sketch-refresh-every`` configure every edge uniformly (per-edge
+    overrides are a builder-kwarg affair); ``--steps`` counts outer steps."""
+    from repro.engine import Engine, EngineConfig, get_graph
+    kwargs = {'solver': args.solver}
+    if args.rho is not None:
+        kwargs['rho'] = args.rho
+    if args.sketch_refresh_every is not None:
+        kwargs['refresh_every'] = args.sketch_refresh_every
+    graph = get_graph(args.problem, **kwargs)
+    order = graph.chain_order()
+    print(f'[train] graph={args.problem} levels={"<-".join(order)} '
+          f'solver={args.solver} n_outer={args.steps}')
+    result = Engine().solve(graph, EngineConfig(n_outer=args.steps))
+    for i, loss in enumerate(result.losses):
+        if i % max(1, args.log_every) == 0 or i == len(result.losses) - 1:
+            print(f'[engine] outer {i}: top_loss={loss:.6f}')
+    bills = ' '.join(f'{e}={n}' for e, n in result.edge_hvps.items())
+    print(f'[train] done: graph={args.problem} hvps={result.hvp_count} '
+          f'({bills}) wall_s={result.seconds:.1f}')
+    return result
+
+
 def _run_problem(args):
     """``--problem <name>``: resolve the registry entry and drive it through
     the typed problem API (one entry point; sketch amortization via
     ``--sketch-refresh-every`` comes along for free). An
     :class:`~repro.core.problem.InfluenceProblem` routes to ``influence()``
-    instead of ``solve()`` — ``--steps`` then counts training steps and
-    ``--queries``/``--top-k`` size the query block / result."""
+    instead of ``solve()``; a multi-level graph name (``repro.engine``
+    GRAPHS registry) routes to ``Engine.solve`` — ``--steps`` then counts
+    training (resp. outer) steps and ``--queries``/``--top-k`` size the
+    query block / result."""
     from repro.core.problem import (InfluenceProblem, get_problem, influence,
                                     solve)
+    from repro.engine import GRAPHS
+    if args.problem in GRAPHS:
+        return _run_graph(args)
     hg_cfg = config_from_cli(
         args.solver,
         flags={'k': args.k, 'rho': args.rho,
@@ -162,9 +193,11 @@ def main(argv=None):
     ap.add_argument('--problem', default=None,
                     help='run a registered problem (repro.core PROBLEMS '
                          'registry, e.g. reweighting | distillation | '
-                         'logreg_wd | influence) through solve()/influence() '
-                         'instead of the LM pipeline; --steps then counts '
-                         'OUTER (resp. training) steps')
+                         'logreg_wd | influence) through solve()/influence()'
+                         ', or a multi-level graph (repro.engine GRAPHS '
+                         'registry: distill_hpo | reweight_maml) through '
+                         'Engine.solve, instead of the LM pipeline; --steps '
+                         'then counts OUTER (resp. training) steps')
     ap.add_argument('--queries', type=int, default=8,
                     help='influence problems: query-block width m')
     ap.add_argument('--top-k', type=int, default=10,

@@ -25,7 +25,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
+from pathlib import Path
 from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import params_digest
 from repro.core.solvers import SketchPolicy, solver_fingerprint, state_nbytes
@@ -87,13 +92,22 @@ class SketchStore:
         the explicit hooks). This keeps ONE definition of "stale" across
         the trainer loop and the serving tier.
 
-    Counters (``hits``/``misses``/``evictions``/``invalidations``/
-    ``expirations``) and ``hit_rate`` feed the schema-v2 bench rows.
+    spill_dir:
+        Optional directory for the disk tier. When set, :meth:`save_entry`
+        spills cached states to ``<params>__<solver>.npz`` files there, and
+        ``get_or_build`` (given a ``like`` template) resolves memory misses
+        from disk before paying for a build — a disk hit bills **zero**
+        HVPs and returns ``built=False`` exactly like a warm memory hit.
+
+    Counters (``hits``/``misses``/``disk_hits``/``evictions``/
+    ``invalidations``/``expirations``) and ``hit_rate`` feed the schema-v2
+    bench rows.
     """
 
     def __init__(self, byte_budget: int = 1 << 30, *,
                  max_serves: int | None = None,
-                 policy: SketchPolicy | None = None):
+                 policy: SketchPolicy | None = None,
+                 spill_dir: str | Path | None = None):
         if byte_budget <= 0:
             raise ValueError(f'byte_budget must be positive, got {byte_budget}')
         if policy is not None and max_serves is None and policy.refresh_every > 1:
@@ -102,23 +116,29 @@ class SketchStore:
             raise ValueError(f'max_serves must be >= 1, got {max_serves}')
         self.byte_budget = byte_budget
         self.max_serves = max_serves
+        self.spill_dir = Path(spill_dir) if spill_dir is not None else None
         self._entries: OrderedDict[SketchKey, CacheEntry] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0
         self.evictions = 0
         self.invalidations = 0
         self.expirations = 0
 
     # ------------------------------------------------------------ lookup
     def get_or_build(self, key: SketchKey, build: Callable[[], Any], *,
-                     build_hvps: int = 0) -> tuple[Any, bool]:
+                     build_hvps: int = 0, like: Any = None) -> tuple[Any, bool]:
         """Return ``(state, built)`` for ``key``.
 
         On a hit: moves the entry to most-recently-used, bumps its serve
-        count, returns ``(state, False)`` — zero HVPs ran. On a miss (or a
-        stale hit past ``max_serves``): calls ``build()`` (the k sketch
-        HVPs), inserts under the byte budget, returns ``(state, True)``.
-        A failed ``build`` propagates and caches nothing.
+        count, returns ``(state, False)`` — zero HVPs ran. On a memory miss
+        with a disk tier (``spill_dir`` set *and* a ``like`` template, e.g.
+        ``jax.eval_shape(build)``): a matching spill file re-enters the
+        memory tier with ``build_hvps=0`` and returns ``(state, False)`` —
+        a disk hit never re-bills the sketch HVPs. Otherwise: calls
+        ``build()`` (the k sketch HVPs), inserts under the byte budget,
+        returns ``(state, True)``. A failed ``build`` propagates and caches
+        nothing.
         """
         entry = self._entries.get(key)
         if entry is not None:
@@ -130,11 +150,81 @@ class SketchStore:
                 entry.serves += 1
                 self.hits += 1
                 return entry.state, False
+        if self.spill_dir is not None and like is not None:
+            state = self.load_entry(key, like, missing_ok=True)
+            if state is not None:
+                self.disk_hits += 1
+                self._insert(key, CacheEntry(
+                    state=state, nbytes=state_nbytes(state),
+                    build_hvps=0, serves=1))
+                return state, False
         self.misses += 1
         state = build()
         self._insert(key, CacheEntry(state=state, nbytes=state_nbytes(state),
                                      build_hvps=int(build_hvps), serves=1))
         return state, True
+
+    # ---------------------------------------------------------- disk tier
+    def _spill_path(self, key: SketchKey) -> Path:
+        if self.spill_dir is None:
+            raise ValueError('store has no spill_dir — pass one to spill '
+                             'entries to disk')
+        return self.spill_dir / f'{key.params}__{key.solver}.npz'
+
+    def save_entry(self, key: SketchKey) -> Path:
+        """Spill one cached entry to ``spill_dir`` and return the file path.
+
+        The file is content-addressed by the same digest×fingerprint pair as
+        the memory tier, so a later process (or a later :class:`SketchStore`
+        pointed at the same directory) resolves the identical key without
+        re-running the build HVPs. Leaves are stored positionally; the
+        pytree structure is reimposed by the ``like`` template at load time.
+        Raises ``KeyError`` if the key is not cached in memory.
+        """
+        path = self._spill_path(key)
+        entry = self._entries[key]
+        path.parent.mkdir(parents=True, exist_ok=True)
+        leaves = jax.tree.leaves(entry.state)
+        arrays = {f'leaf{i}': np.asarray(v) for i, v in enumerate(leaves)}
+        tmp = path.with_suffix('.npz.tmp')
+        with open(tmp, 'wb') as f:
+            np.savez(f, **arrays)
+        tmp.replace(path)          # atomic publish: readers never see a torn file
+        return path
+
+    def load_entry(self, key: SketchKey, like: Any, *,
+                   missing_ok: bool = False) -> Any:
+        """Load a spilled state for ``key``, shaped by the ``like`` template.
+
+        ``like`` supplies the pytree structure and leaf shapes/dtypes —
+        ``jax.eval_shape(build)`` gives one without running any HVPs. A
+        shape or dtype mismatch (a stale spill from a different config that
+        somehow collided) raises ``ValueError`` rather than returning a
+        corrupt sketch. Returns ``None`` on a missing file when
+        ``missing_ok`` is set, else raises ``FileNotFoundError``.
+        """
+        path = self._spill_path(key)
+        if not path.exists():
+            if missing_ok:
+                return None
+            raise FileNotFoundError(f'no spilled entry at {path}')
+        like_leaves, treedef = jax.tree.flatten(like)
+        with np.load(path) as data:
+            if len(data.files) != len(like_leaves):
+                raise ValueError(
+                    f'spill {path.name} holds {len(data.files)} leaves, '
+                    f'template has {len(like_leaves)}')
+            leaves = []
+            for i, tmpl in enumerate(like_leaves):
+                arr = data[f'leaf{i}']
+                if tuple(arr.shape) != tuple(tmpl.shape) \
+                        or arr.dtype != tmpl.dtype:
+                    raise ValueError(
+                        f'spill {path.name} leaf{i} is '
+                        f'{arr.dtype}{list(arr.shape)}, template expects '
+                        f'{tmpl.dtype}{list(tmpl.shape)}')
+                leaves.append(jnp.asarray(arr))
+        return jax.tree.unflatten(treedef, leaves)
 
     def _insert(self, key: SketchKey, entry: CacheEntry) -> None:
         self._entries.pop(key, None)

@@ -13,7 +13,8 @@ import pytest
 
 from benchmarks.common import bench_row
 from benchmarks.compare_runs import main as compare_main
-from repro.bench import CompareError, compare_docs, format_report
+from repro.bench import (CompareError, compare_docs, fit_rates,
+                         format_rates, format_report)
 
 
 def _doc(name='unit'):
@@ -242,3 +243,68 @@ class TestCli:
         out = capsys.readouterr().out
         assert rc == 2
         assert 'schema_version mismatch' in out and 'KeyError' not in out
+
+
+# ---------------------------------------------------------------------------
+# Rate fits (repro.bench.rates)
+# ---------------------------------------------------------------------------
+def _ladder_doc(slope=-2.0, solver='nystrom', bills=(2, 4, 8, 16)):
+    """A doc whose (problem, solver) ladder follows err = hvps^slope."""
+    rows = [
+        bench_row(solver=solver, backend='tree', m=1, applies_per_sec=1.0,
+                  wall_seconds=0.01, problem='quad:D=8', hvp_count=b,
+                  hypergrad_error=float(b) ** slope, grid={'k': b})
+        for b in bills
+    ]
+    return {'schema_version': 2, 'name': 'ladder', 'created_unix': 0.0,
+            'meta': {}, 'rows': rows}
+
+
+class TestRateFits:
+    def test_recovers_known_power_law(self):
+        fits = fit_rates(_ladder_doc(slope=-2.0))
+        assert len(fits) == 1
+        f = fits[0]
+        assert (f.problem, f.solver, f.points) == ('quad:D=8', 'nystrom', 4)
+        assert abs(f.slope - (-2.0)) < 1e-9
+        assert f.r2 > 0.999999
+
+    def test_ladders_split_by_solver_and_short_ladders_skipped(self):
+        doc = _ladder_doc(slope=-2.0, solver='nystrom')
+        doc['rows'] += _ladder_doc(slope=-0.5, solver='cg')['rows']
+        # a two-point "ladder" fits a line by construction — no rate info
+        doc['rows'] += _ladder_doc(solver='neumann', bills=(2, 4))['rows']
+        # rows with no error measurement carry nothing to regress
+        doc['rows'].append(bench_row(
+            solver='exact', backend='tree', m=1, applies_per_sec=1.0,
+            wall_seconds=0.01, problem='quad:D=8', hvp_count=64))
+        fits = {f.solver: f for f in fit_rates(doc)}
+        assert set(fits) == {'nystrom', 'cg'}
+        assert abs(fits['cg'].slope - (-0.5)) < 1e-9
+
+    def test_duplicate_bills_averaged_not_double_counted(self):
+        doc = _ladder_doc()
+        doc['rows'] += _ladder_doc()['rows']       # population repeat
+        (f,) = fit_rates(doc)
+        assert f.points == 4
+        assert abs(f.slope - (-2.0)) < 1e-9
+
+    def test_format_rates_shows_drift_and_new_ladders(self):
+        base = fit_rates(_ladder_doc(slope=-2.0))
+        new_doc = _ladder_doc(slope=-1.0)
+        new_doc['rows'] += _ladder_doc(slope=-0.5, solver='cg')['rows']
+        out = format_rates(base, fit_rates(new_doc))
+        assert '-2.00 -> -1.00' in out
+        assert '[new ladder]' in out
+
+    def test_cli_fit_rates_prints_and_never_gates(self, tmp_path, capsys):
+        base = _write(tmp_path, 'base', _ladder_doc(slope=-2.0))
+        new = _write(tmp_path, 'new', _ladder_doc(slope=-0.25))
+        # a collapsed rate alone is not a regression: same cells, same
+        # errors per cell would be needed for that — here errors differ, so
+        # compare under a huge tolerance to isolate the flag's behaviour
+        rc = compare_main([base, new, '--no-wall', '--tol-error', '1e9',
+                           '--fit-rates'])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert 'rate fits' in out and '-2.00 -> -0.25' in out

@@ -1,0 +1,231 @@
+"""Engine tests: graph validation, trilevel end-to-end solves, dense-oracle
+parity, per-edge HVP accounting, and the compile/program contracts.
+
+The oracle-parity pair pins both accuracy regimes documented in
+``repro.engine.problems``: quadratic solved levels (reweight_maml) must
+match the dense multi-level oracle to ≤1e-3, while the genuinely
+non-quadratic distillation middle level carries a documented few-1e-3
+AID-convention discrepancy and gets a looser (but still pinned) bar.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import Contract, assert_compiles, audit
+from repro.core import ExactIHVP, HypergradConfig, hypergrad_error
+from repro.engine import (Engine, EngineConfig, GraphError, ProblemEdge,
+                          ProblemGraph, ProblemNode, engine_edge_bills,
+                          engine_hypergrad, engine_hypergrad_reference,
+                          from_bilevel, get_graph)
+
+# compact configurations: small dims keep every HVP and the dense oracles
+# cheap; the nesting structure (the thing under test) is size-independent
+REWEIGHT_KW = dict(d=4, n_tasks=2, n_support=8, n_query=8)
+DISTILL_KW = dict(d=4, n_classes=2, n_syn=4, n_train=16, n_val=16)
+
+
+# ---------------------------------------------------------------------------
+# Graph validation
+# ---------------------------------------------------------------------------
+def _node(name):
+    return ProblemNode(name=name,
+                       loss=lambda own, ctx, batch: jnp.sum(own ** 2),
+                       init=lambda rng: jnp.zeros(2))
+
+
+class TestGraphValidation:
+    def test_chain_validates_and_orders(self):
+        g = ProblemGraph(
+            nodes={n: _node(n) for n in ('a', 'b', 'c')},
+            edges=[ProblemEdge('a', 'b'), ProblemEdge('b', 'c')])
+        g.validate()
+        assert g.topo_order() == ['a', 'b', 'c']
+        assert g.chain_order() == ['a', 'b', 'c']
+        assert g.tops() == ['c']
+
+    def test_dangling_edge_rejected(self):
+        g = ProblemGraph(nodes={'a': _node('a')},
+                         edges=[ProblemEdge('a', 'ghost')])
+        with pytest.raises(GraphError, match='ghost'):
+            g.validate()
+
+    def test_cycle_rejected(self):
+        g = ProblemGraph(
+            nodes={n: _node(n) for n in ('a', 'b')},
+            edges=[ProblemEdge('a', 'b'), ProblemEdge('b', 'a')])
+        with pytest.raises(GraphError, match='cycle'):
+            g.validate()
+
+    def test_duplicate_lower_rejected(self):
+        g = ProblemGraph(
+            nodes={n: _node(n) for n in ('a', 'b', 'c')},
+            edges=[ProblemEdge('a', 'b'), ProblemEdge('a', 'c')])
+        with pytest.raises(GraphError, match='exactly one IHVP solver'):
+            g.validate()
+
+    def test_self_loop_rejected(self):
+        g = ProblemGraph(nodes={'a': _node('a'), 'b': _node('b')},
+                         edges=[ProblemEdge('a', 'a')])
+        with pytest.raises(GraphError, match='self-loop'):
+            g.validate()
+
+    def test_empty_edges_rejected(self):
+        g = ProblemGraph(nodes={'a': _node('a')}, edges=[])
+        with pytest.raises(GraphError, match='no edges'):
+            g.validate()
+
+    def test_non_chain_dag_validates_but_does_not_lower(self):
+        # diamond: two lowers feeding one top — a valid DAG, not a chain
+        g = ProblemGraph(
+            nodes={n: _node(n) for n in ('a', 'b', 'top')},
+            edges=[ProblemEdge('a', 'top'), ProblemEdge('b', 'top')])
+        g.validate()
+        with pytest.raises(GraphError, match='not a chain'):
+            g.chain_order()
+
+    def test_registry_miss_names_known_graphs(self):
+        with pytest.raises(ValueError, match='distill_hpo'):
+            get_graph('nope')
+
+
+# ---------------------------------------------------------------------------
+# Bilevel adapter — the engine's two-level special case stays consistent
+# with the single-problem machinery it wraps
+# ---------------------------------------------------------------------------
+def test_from_bilevel_quadratic_matches_analytic():
+    # inner: ½θᵀDθ − θᵀφ with D = diag(d) → θ*(φ) = φ/d; outer: ½‖θ*‖² has
+    # the analytic hypergradient φ/d².
+    d = jnp.array([1.0, 2.0, 4.0])
+
+    class Quad:
+        def inner_loss(self, theta, phi, batch):
+            return 0.5 * jnp.sum(d * theta ** 2) - jnp.sum(theta * phi)
+
+        def outer_loss(self, theta, phi, batch):
+            return 0.5 * jnp.sum(theta ** 2)
+
+        def init_params(self, rng):
+            return jnp.zeros(3)
+
+        def init_hparams(self, rng):
+            return jnp.ones(3)
+
+    g = from_bilevel(Quad(), config=HypergradConfig(solver='exact', rho=0.0),
+                     unroll_steps=200, unroll_lr=0.2)
+    g.validate()
+    assert g.chain_order() == ['params', 'hparams']
+    phi = jnp.ones(3)
+    hg, _ = engine_hypergrad(g, {'params': phi / d, 'hparams': phi})
+    assert jnp.allclose(hg, phi / d ** 2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Trilevel end-to-end — EngineConfig drives a registered graph through one
+# jitted step; dense-oracle parity at the solved point
+# ---------------------------------------------------------------------------
+class TestTrilevelSolve:
+    def test_reweight_maml_solves_and_matches_oracle(self):
+        g = get_graph('reweight_maml', **REWEIGHT_KW)
+        res = Engine().solve(g, EngineConfig(n_outer=3, outer_lr=0.05))
+        assert len(res.losses) == 3
+        assert all(jnp.isfinite(l) for l in res.losses)
+        assert res.losses[-1] < res.losses[0]
+        assert set(res.values) == {'adapted', 'meta', 'weights'}
+        assert res.edge_hvps == engine_edge_bills(g, n_outer=3)
+        assert res.hvp_count == sum(res.edge_hvps.values())
+
+        # quadratic solved levels: full-rank sketches vs the dense oracle is
+        # damping-dominated — the ≤1e-3 acceptance bar
+        hg, _ = engine_hypergrad(g, res.values)
+        ref, _ = engine_hypergrad_reference(g, res.values, rho=0.0)
+        assert float(hypergrad_error(hg, ref)) < 1e-3
+
+    def test_distill_hpo_solves_with_documented_parity(self):
+        g = get_graph('distill_hpo', **DISTILL_KW)
+        # adam needs a few steps to point the scalar top level downhill, so
+        # this runs a slightly longer loop than the reweight test (the extra
+        # steps reuse the one compiled program and cost milliseconds)
+        res = Engine().solve(g, EngineConfig(n_outer=6, outer_lr=0.1))
+        assert all(jnp.isfinite(l) for l in res.losses)
+        assert res.losses[-1] < res.losses[0]
+
+        # machinery parity is exact: the same graph solved with dense edges
+        # matches the oracle bit-for-bit at matched damping
+        g_exact = get_graph('distill_hpo', solver='exact', **DISTILL_KW)
+        hx, _ = engine_hypergrad(g_exact, res.values)
+        refd, _ = engine_hypergrad_reference(g_exact, res.values, rho=1e-4)
+        assert float(hypergrad_error(hx, refd)) == 0.0
+
+        # the non-quadratic middle level leaves a few-1e-3 *absolute*
+        # Nyström-vs-dense gap under the AID convention (see
+        # repro.engine.problems); against this size's small scalar top
+        # gradient that reads as a few-1e-2 relative error, pinned here so
+        # a regression past 5e-2 still fails loudly
+        hg, _ = engine_hypergrad(g, res.values)
+        ref, _ = engine_hypergrad_reference(g, res.values, rho=0.0)
+        assert float(hypergrad_error(hg, ref)) < 5e-2
+
+    def test_oracle_parity_is_exact_for_matched_solvers(self):
+        # same machinery both sides: engine_hypergrad with the oracle's own
+        # solver must agree bit-for-bit with engine_hypergrad_reference
+        g = get_graph('reweight_maml', **REWEIGHT_KW)
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 3)
+        values = {n: g.nodes[n].init(k)
+                  for n, k in zip(g.chain_order(), ks)}
+        ex = {n: ExactIHVP(rho=1e-4) for n in g.chain_order()[:-1]}
+        hg, _ = engine_hypergrad(g, values, solvers=ex)
+        ref, _ = engine_hypergrad_reference(g, values, rho=1e-4)
+        assert float(hypergrad_error(hg, ref)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Program contracts — one compile for the whole multi-level loop, and a
+# lowering free of all-gathers / host transfers
+# ---------------------------------------------------------------------------
+class TestEngineContracts:
+    def test_step_compiles_once_across_outer_steps(self):
+        g = get_graph('reweight_maml', **REWEIGHT_KW)
+        prog = Engine().lower(g, EngineConfig(n_outer=3))
+        key = jax.random.PRNGKey(0)
+        carry = prog.init(key)
+        step = jax.jit(prog.step)
+        assert_compiles(step, carry, jax.random.fold_in(key, 1),
+                        times=1, calls=3)
+
+    def test_step_program_is_device_resident(self):
+        g = get_graph('reweight_maml', **REWEIGHT_KW)
+        prog = Engine().lower(g, EngineConfig(n_outer=2))
+        key = jax.random.PRNGKey(0)
+        carry = prog.init(key)
+        report = audit(prog.step, carry, jax.random.fold_in(key, 1))
+        Contract(name='engine step', no_all_gather=True,
+                 no_host_transfer=True).enforce(report)
+
+
+# ---------------------------------------------------------------------------
+# Accounting — amortization must survive nesting (additive bills), fresh
+# prepares must not (multiplicative bills)
+# ---------------------------------------------------------------------------
+class TestEdgeBills:
+    def test_amortized_bills_are_additive(self):
+        g = get_graph('reweight_maml', **REWEIGHT_KW)
+        bills = engine_edge_bills(g, n_outer=4)
+        # full-rank defaults: k_adapted = T·d, k_meta = d; one build per step
+        assert bills == {'adapted': 4 * 2 * 4, 'meta': 4 * 4}
+
+    def test_refresh_cadence_divides_builds(self):
+        g = get_graph('reweight_maml', refresh_every=2, **REWEIGHT_KW)
+        bills = engine_edge_bills(g, n_outer=4)
+        assert bills == {'adapted': 2 * 2 * 4, 'meta': 2 * 4}
+
+    def test_fresh_bills_multiply_down_the_chain(self):
+        g = get_graph('reweight_maml', **REWEIGHT_KW)
+        amortized = engine_edge_bills(g, n_outer=4, amortize=True)
+        fresh = engine_edge_bills(g, n_outer=4, amortize=False)
+        # the top edge pays per-step prepares either way ...
+        assert fresh['meta'] == 4 * 4
+        # ... but the bottom edge is differentiated by every upper unroll
+        # step and every upper prepare probe: orders of magnitude beyond the
+        # additive amortized bill
+        assert fresh['adapted'] > 10 * amortized['adapted']

@@ -204,6 +204,65 @@ class TestSketchStore:
         assert store.total_bytes == state_nbytes(state)
 
 
+class TestSketchStoreSpill:
+    def test_spill_roundtrip_serves_without_rebuilding(self, tmp_path):
+        idxr, hvp = _quadratic()
+        solver = NystromIHVP(k=6, rho=1e-2)
+        build = lambda: solver.prepare(hvp, idxr, jax.random.PRNGKey(0))
+        key = _key('a')
+
+        writer = SketchStore(spill_dir=tmp_path)
+        state, built = writer.get_or_build(key, build, build_hvps=6)
+        assert built
+        path = writer.save_entry(key)
+        assert path.exists() and path.name == f'{key.params}__{key.solver}.npz'
+
+        # a cold store over the same directory resolves the key from disk:
+        # no build thunk runs, zero HVPs are billed, built=False like a
+        # warm memory hit
+        def poisoned():
+            raise AssertionError('disk hit must not run the build')
+
+        reader = SketchStore(spill_dir=tmp_path)
+        like = jax.eval_shape(build)
+        loaded, built2 = reader.get_or_build(key, poisoned, like=like)
+        assert not built2
+        assert reader.disk_hits == 1 and reader.misses == 0
+        assert reader._entries[key].build_hvps == 0
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(loaded)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # and the re-entered state is a normal memory entry afterwards
+        again, built3 = reader.get_or_build(key, poisoned, like=like)
+        assert not built3 and reader.hits == 1
+
+    def test_template_mismatch_rejected(self, tmp_path):
+        idxr, hvp = _quadratic()
+        solver = NystromIHVP(k=6, rho=1e-2)
+        store = SketchStore(spill_dir=tmp_path)
+        key = _key('a')
+        store.get_or_build(
+            key, lambda: solver.prepare(hvp, idxr, jax.random.PRNGKey(0)))
+        store.save_entry(key)
+        wrong = NystromIHVP(k=4, rho=1e-2)
+        bad_like = jax.eval_shape(
+            lambda: wrong.prepare(hvp, idxr, jax.random.PRNGKey(0)))
+        with pytest.raises(ValueError, match='template'):
+            store.load_entry(key, bad_like)
+
+    def test_missing_spill_and_no_dir(self, tmp_path):
+        _, state = _prepared()
+        store = SketchStore(spill_dir=tmp_path)
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+        with pytest.raises(FileNotFoundError):
+            store.load_entry(_key('ghost'), like)
+        assert store.load_entry(_key('ghost'), like, missing_ok=True) is None
+        bare = SketchStore()
+        with pytest.raises(ValueError, match='spill_dir'):
+            bare.save_entry(_key('a'))
+
+
 # ---------------------------------------------------------------------------
 # QueryBatcher
 # ---------------------------------------------------------------------------
@@ -340,6 +399,71 @@ class TestInfluenceThroughStore:
                         top_k=5, store=store)
         assert len(store) == 0             # nothing cacheable
         assert res.hvp_count == 6          # iters × m, as before
+
+    def test_disk_restart_serves_with_zero_hvps(self, toy, tmp_path):
+        """Server-restart warm start: spill after the cold call, then a
+        fresh store over the same directory answers from disk — zero build
+        HVPs, identical scores, no prepare run at all."""
+        problem, params = toy
+        solver = NystromIHVP(k=4, rho=1e-2)
+        queries = problem.reference['queries'](2)
+        first = SketchStore(spill_dir=tmp_path)
+        cold = influence(problem, solver, queries, params=params, top_k=5,
+                         store=first)
+        first.save_entry(sketch_key(params, solver))
+
+        restarted = SketchStore(spill_dir=tmp_path)
+        warm = influence(problem, solver, queries, params=params, top_k=5,
+                         store=restarted)
+        assert cold.hvp_count == 4
+        assert warm.hvp_count == 0
+        assert restarted.disk_hits == 1 and restarted.misses == 0
+        np.testing.assert_array_equal(np.asarray(cold.scores),
+                                      np.asarray(warm.scores))
+        np.testing.assert_array_equal(np.asarray(cold.indices),
+                                      np.asarray(warm.indices))
+
+    def test_influence_and_engine_bills_share_one_definition(self, toy):
+        """The accounting invariant across paths: influence()'s per-build
+        bill, the store's per-entry build_hvps, and the engine's per-edge
+        bills all come from repro.core.build_hvp_bill — k HVPs per Nyström
+        build, p per exact column scan, and a reused state bills zero."""
+        from repro.core import build_hvp_bill, tree_size
+        from repro.core.hypergrad import HypergradConfig
+        from repro.core.problem import influence_build_hvps
+        from repro.engine import engine_edge_bills, from_bilevel
+
+        problem, params = toy
+        ny = NystromIHVP(k=4, rho=1e-2)
+        assert influence_build_hvps(ny, params) == build_hvp_bill(ny, params) == 4
+        assert (influence_build_hvps(ExactIHVP(), params)
+                == build_hvp_bill(ExactIHVP(), params) == tree_size(params))
+
+        # the engine's amortized bill on a bilevel wrap is builds × the SAME
+        # per-build: one build per outer step at refresh_every=1
+        class Quad:
+            def inner_loss(self, theta, phi, batch):
+                return 0.5 * jnp.sum(theta ** 2) - jnp.sum(theta * phi)
+
+            def outer_loss(self, theta, phi, batch):
+                return 0.5 * jnp.sum(theta ** 2)
+
+            def init_params(self, rng):
+                return jnp.zeros(3)
+
+            def init_hparams(self, rng):
+                return jnp.ones(3)
+
+        g = from_bilevel(Quad(), config=HypergradConfig(solver='nystrom',
+                                                        k=2, rho=1e-2))
+        assert engine_edge_bills(g, n_outer=5) == {'params': 5 * 2}
+
+        # and a store entry's bill is the same number influence() reports
+        store = SketchStore()
+        cold = influence(problem, ny, problem.reference['queries'](1),
+                         params=params, top_k=5, store=store)
+        (entry,) = store._entries.values()
+        assert entry.build_hvps == cold.hvp_count == 4
 
 
 # ---------------------------------------------------------------------------
